@@ -1,0 +1,162 @@
+"""One benchmark per paper table/figure (DESIGN.md §6).
+
+Each function returns a list of (name, us_per_call, derived) rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from statistics import median
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import ParallelPlan, ShapeConfig
+from repro.configs.paper_demo import CLUSTER
+from repro.core import ClusterImage, VirtualCluster
+from repro.core.elastic import ElasticTrainer
+
+PLAN = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
+                    kv_cache="replicated")
+
+
+def _t(fn, n=3):
+    fn()  # warmup
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return median(ts) * 1e6
+
+
+# -- Fig. 6/7: containers up + Consul registration -> rendered hostfile -------
+
+
+def bench_cluster_formation():
+    rows = []
+    for n in (2, 4, 8, 16, 32):
+        t0 = time.perf_counter()
+        c = VirtualCluster(n_compute=n)
+        r = c.rendering
+        dt = (time.perf_counter() - t0) * 1e6
+        assert len(r.view.compute) == n
+        rows.append((f"cluster_formation_n{n}", round(dt, 1),
+                     f"epoch={r.epoch}"))
+        c.shutdown()
+    return rows
+
+
+# -- §IV auto-scaling: trigger -> new epoch (control plane only + with reshard)
+
+
+def bench_autoscale_response(tmpdir="/tmp/bench_as"):
+    rows = []
+    c = VirtualCluster(n_compute=2)
+    t0 = time.perf_counter()
+    c.scale_to(4)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("autoscale_2to4_controlplane", round(dt, 1),
+                 f"epoch={c.rendering.epoch}"))
+    # with a live training job (checkpoint -> reshard -> resume)
+    cfg = get_smoke("paper-demo")
+    shape = ShapeConfig("b", 16, 4, "train")
+    tr = ElasticTrainer(c.template, cfg, shape, tmpdir, plan=PLAN,
+                        ckpt_every=100)
+    tr.run_steps(2)
+    t0 = time.perf_counter()
+    c.scale_to(6)
+    tr.run_steps(1)  # includes ckpt+reshard+rejit
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("autoscale_with_reshard", round(dt, 1),
+                 f"reshards={tr.stats.reshards}"))
+    c.shutdown()
+    return rows
+
+
+# -- Fig. 8: the 16-domain MPI job (halo-exchange stencil) ---------------------
+
+
+def bench_mpi_job():
+    n = CLUSTER.mpi_ranks
+    c = VirtualCluster(n_compute=2)
+
+    def job(mesh):
+        x = jnp.linspace(0, 1, n * 256).reshape(n, 256)
+
+        @jax.jit
+        def step(x):
+            return 0.25 * (2 * x + jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0))
+
+        step(x).block_until_ready()
+        us = _t(lambda: step(x).block_until_ready(), n=10)
+        return us
+
+    us = c.submit(job)
+    c.shutdown()
+    return [(f"mpi_job_{n}domain_step", round(us, 1), "halo-exchange")]
+
+
+# -- Table I/II: environment capture (image encapsulation) ----------------------
+
+
+def bench_env_capture():
+    cfg = get_smoke("paper-demo")
+    img = ClusterImage.build("bench", cfg, PLAN, "train")
+    us = _t(lambda: ClusterImage.build("bench", cfg, PLAN, "train").digest)
+    img2 = ClusterImage.build("bench", cfg, PLAN, "train")
+    det = img.digest == img2.digest
+    return [("image_build_digest", round(us, 1), f"deterministic={det}")]
+
+
+# -- Conclusion: interconnect influence (10GbE vs ICI on collective bytes) -------
+
+
+def bench_interconnect_model():
+    rows = []
+    rep_dir = "reports/dryrun/single_pod_16x16"
+    if not os.path.isdir(rep_dir):
+        return [("interconnect_model", 0.0, "no dry-run reports")]
+    for fn in sorted(os.listdir(rep_dir))[:40]:
+        with open(os.path.join(rep_dir, fn)) as f:
+            rep = json.load(f)
+        by = rep.get("collective_by_type", {})
+        bytes_total = sum(by.values())
+        ici_s = rep.get("collective_s", 0.0)
+        # the paper's 10GbE fabric: 1.25 GB/s shared per node
+        geth_s = sum((2.0 if k == "all-reduce" else 1.0) * b / 1.25e9
+                     for k, b in by.items())
+        rows.append((f"coll_{rep['arch']}_{rep['shape']}",
+                     round(ici_s * 1e6, 1),
+                     f"10GbE={geth_s*1e6:.0f}us x{geth_s/max(ici_s,1e-12):.0f}"))
+    return rows
+
+
+# -- per-arch smoke step times (throughput harness) -------------------------------
+
+
+def bench_step_time():
+    rows = []
+    for arch in ("yi-9b", "grok-1-314b", "recurrentgemma-9b", "rwkv6-1.6b"):
+        cfg = get_smoke(arch)
+        from repro.models import model as Mo
+        from repro.models.env import Env
+        from repro.launch import steps as St
+        from repro.optim import AdamWConfig, adamw_init
+        env = Env(None, PLAN)
+        rng = jax.random.PRNGKey(0)
+        p = Mo.init_params(rng, cfg, env)
+        opt = AdamWConfig()
+        state = {"params": p, "opt": adamw_init(p, opt)}
+        tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        step = jax.jit(St.make_train_step(cfg, env, opt))
+        state, m = step(state, batch)  # compile
+        us = _t(lambda: jax.block_until_ready(step(state, batch)), n=3)
+        toks = tokens.size
+        rows.append((f"step_{arch}", round(us, 1),
+                     f"{toks/(us/1e6):.0f} tok/s (smoke,cpu)"))
+    return rows

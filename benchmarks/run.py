@@ -1,0 +1,27 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.paper_benches import (bench_autoscale_response,
+                                          bench_cluster_formation,
+                                          bench_env_capture,
+                                          bench_interconnect_model,
+                                          bench_mpi_job, bench_step_time)
+
+    print("name,us_per_call,derived")
+    for bench in (bench_cluster_formation, bench_autoscale_response,
+                  bench_mpi_job, bench_env_capture,
+                  bench_interconnect_model, bench_step_time):
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:  # a failed bench must not hide the others
+            print(f"{bench.__name__},ERROR,{e!r}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

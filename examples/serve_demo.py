@@ -1,0 +1,12 @@
+"""Serving demo: discovery-registered replicas + batched prefill/decode.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "paper-demo",
+         "--smoke", "--requests", "4", "--prompt-len", "16", "--gen", "8"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))

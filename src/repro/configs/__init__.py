@@ -1,0 +1,66 @@
+"""Architecture config registry: --arch <id> resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ParallelPlan,
+    ShapeConfig,
+    default_plan,
+)
+
+# arch id -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "yi-9b": "yi_9b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "grok-1-314b": "grok_1_314b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-small": "whisper_small",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "paper-demo": "paper_demo",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(k for k in _ARCH_MODULES if k != "paper-demo")
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_long_skips: bool = False):
+    """Yield every assigned (arch, shape) cell.
+
+    long_500k needs sub-quadratic attention: only hybrid/ssm archs run it
+    (DESIGN.md §5); pure full-attention archs are skipped unless
+    include_long_skips (which yields them tagged for the skip table).
+    """
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if shape.long_context and not cfg.sub_quadratic:
+                if include_long_skips:
+                    yield arch, sname, "skip:full-attention"
+                continue
+            yield arch, sname, "run"

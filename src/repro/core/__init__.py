@@ -1,0 +1,18 @@
+"""The paper's contribution (P1-P4, DESIGN.md §2) as a composable runtime."""
+from repro.core.agent import NodeAgent  # noqa: F401
+from repro.core.autoscaler import (  # noqa: F401
+    AutoScaler,
+    QueueDepthPolicy,
+    ScalePlan,
+    StepTimePolicy,
+    StragglerPolicy,
+    TargetSizePolicy,
+)
+from repro.core.clock import ManualClock, RealClock  # noqa: F401
+from repro.core.cluster import VirtualCluster  # noqa: F401
+from repro.core.elastic import ElasticTrainer  # noqa: F401
+from repro.core.image import ClusterImage, ImageHub  # noqa: F401
+from repro.core.membership import HPC_SERVICE, ClusterView, ViewTracker  # noqa: F401
+from repro.core.registry import ReplicatedRegistry, ServiceRegistry  # noqa: F401
+from repro.core.simnet import SimCluster  # noqa: F401
+from repro.core.template import MeshTemplate, render_hostfile  # noqa: F401

@@ -1,0 +1,101 @@
+"""NodeAgent — the per-container Consul agent (paper §III-C / Fig. 5).
+
+Each (simulated) node runs an agent that registers its HPC service in the
+registry, heartbeats its TTL check, publishes metrics (step times for the
+straggler policy), and deregisters on graceful drain. A crashed node simply
+stops heartbeating and is reaped by TTL expiry — exactly the paper's
+auto-deregistration behavior.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+from repro.core.clock import Clock, RealClock
+from repro.core.membership import HPC_SERVICE
+
+
+class NodeAgent:
+    def __init__(self, node_id: str, registry, *, n_devices: int = 1,
+                 role: str = "compute", ttl: float = 2.0,
+                 device_ids: Optional[Sequence[int]] = None,
+                 clock: Optional[Clock] = None, image_digest: str = ""):
+        self.node_id = node_id
+        self.registry = registry
+        self.n_devices = n_devices
+        self.role = role
+        self.ttl = ttl
+        self.device_ids = tuple(device_ids or ())
+        self.clock = clock or RealClock()
+        self.image_digest = image_digest
+        self._running = False
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+
+    # -- lifecycle ------------------------------------------------------------
+    @property
+    def address(self) -> str:
+        devs = ",".join(map(str, self.device_ids))
+        return f"simnet://{self.node_id}?devices={devs}"
+
+    def start(self) -> None:
+        meta = {"n_devices": str(self.n_devices), "role": self.role,
+                "image": self.image_digest,
+                "devices": ",".join(map(str, self.device_ids))}
+        self.registry.register(HPC_SERVICE, self.node_id, self.address,
+                               ttl=self.ttl, meta=meta)
+        self._running = True
+
+    def tick(self) -> bool:
+        """One heartbeat (manual-clock mode). Returns registration liveness."""
+        if not self._running:
+            return False
+        return self.registry.heartbeat(HPC_SERVICE, self.node_id)
+
+    def drain(self) -> None:
+        """Graceful leave (scale-down path)."""
+        self._running = False
+        self._stop_evt.set()
+        try:
+            self.registry.deregister(HPC_SERVICE, self.node_id)
+        except Exception:
+            pass
+
+    def crash(self) -> None:
+        """Fault injection: vanish without deregistering (TTL will reap)."""
+        self._running = False
+        self._stop_evt.set()
+
+    # -- metrics ----------------------------------------------------------------
+    def report_step_time(self, step: int, seconds: float) -> None:
+        if not self._running:
+            return
+        self.registry.kv_put(f"metrics/{self.node_id}/step_time",
+                             f"{step}:{seconds:.6f}")
+
+    def report_queue_depth(self, depth: int) -> None:
+        if not self._running:
+            return
+        self.registry.kv_put(f"metrics/{self.node_id}/queue_depth", str(depth))
+
+    # -- threaded mode (examples/benchmarks; tests use tick()) -------------------
+    def run_threaded(self, interval: Optional[float] = None) -> None:
+        interval = interval if interval is not None else self.ttl / 3.0
+
+        def loop():
+            while not self._stop_evt.wait(interval):
+                if not self._running:
+                    break
+                try:
+                    self.tick()
+                except Exception:
+                    break
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name=f"agent-{self.node_id}")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self.drain()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

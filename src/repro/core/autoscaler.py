@@ -1,0 +1,155 @@
+"""AutoScaler — the paper's scaling loop (§III/§IV) plus the policies its
+conclusion defers: "power up more machines, deploy new HPC containers, they
+register themselves and become part of the computing cluster."
+
+Policies compute a desired compute-node count (or replacement set) from the
+current view + metrics; the controller applies plans through a provisioner
+(simnet in this repo; a cloud/cluster API in production) under cooldowns and
+min/max bounds. Straggler mitigation (deadline on reported step times) is a
+replacement policy — the paper's future-work item made concrete.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+from repro.core.clock import Clock, RealClock
+from repro.core.membership import ClusterView
+
+
+@dataclass(frozen=True)
+class ScalePlan:
+    target: int  # desired compute-node count
+    replace: Tuple[str, ...] = ()  # node_ids to drain & replace (stragglers)
+    reason: str = ""
+
+    def is_noop(self, current: int) -> bool:
+        return self.target == current and not self.replace
+
+
+class Policy(Protocol):
+    def decide(self, view: ClusterView, metrics: Dict[str, float]) -> ScalePlan:
+        ...
+
+
+@dataclass
+class TargetSizePolicy:
+    """Operator-pinned size (the paper's manual 'power up more machines')."""
+    target: int
+
+    def decide(self, view, metrics):
+        return ScalePlan(self.target, reason=f"target-size={self.target}")
+
+
+@dataclass
+class QueueDepthPolicy:
+    """Scale so each node holds ~target_per_node queued work items."""
+    target_per_node: int = 4
+    min_nodes: int = 1
+    max_nodes: int = 64
+
+    def decide(self, view, metrics):
+        depth = metrics.get("queue_depth", 0.0)
+        want = max(self.min_nodes,
+                   min(self.max_nodes,
+                       int(-(-depth // self.target_per_node)) or self.min_nodes))
+        return ScalePlan(want, reason=f"queue_depth={depth}")
+
+
+@dataclass
+class StepTimePolicy:
+    """Scale up while the measured step time exceeds the target (assumes
+    near-linear DP scaling; the increment is one node per decision)."""
+    target_step_s: float
+    min_nodes: int = 1
+    max_nodes: int = 64
+    headroom: float = 0.85  # scale down if faster than headroom*target
+
+    def decide(self, view, metrics):
+        n = len(view.compute)
+        st = metrics.get("step_time", None)
+        if st is None:
+            return ScalePlan(n, reason="no-data")
+        if st > self.target_step_s and n < self.max_nodes:
+            return ScalePlan(n + 1, reason=f"slow step {st:.3f}s")
+        if st < self.headroom * self.target_step_s and n > self.min_nodes:
+            return ScalePlan(n - 1, reason=f"fast step {st:.3f}s")
+        return ScalePlan(n, reason="in-band")
+
+
+@dataclass
+class StragglerPolicy:
+    """Replace nodes whose reported step time exceeds factor x median."""
+    factor: float = 2.0
+    min_samples: int = 2
+
+    def decide(self, view, metrics):
+        times = {k[len("node_step_time/"):]: v for k, v in metrics.items()
+                 if k.startswith("node_step_time/")}
+        n = len(view.compute)
+        if len(times) < self.min_samples:
+            return ScalePlan(n, reason="insufficient samples")
+        med = statistics.median(times.values())
+        bad = tuple(sorted(nid for nid, t in times.items()
+                           if med > 0 and t > self.factor * med))
+        return ScalePlan(n, replace=bad,
+                         reason=f"median={med:.3f}s stragglers={bad}")
+
+
+class Provisioner(Protocol):
+    def add_nodes(self, n: int) -> List[str]: ...
+    def remove_nodes(self, node_ids: List[str]) -> None: ...
+
+
+@dataclass
+class AutoScaler:
+    policy: Policy
+    provisioner: Provisioner
+    cooldown_s: float = 0.0
+    min_nodes: int = 1
+    max_nodes: int = 256
+    clock: Clock = field(default_factory=RealClock)
+    _last_action_t: float = field(default=-1e30, init=False)
+    history: List[Tuple[float, str]] = field(default_factory=list, init=False)
+
+    def read_metrics(self, registry) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for key, entry in registry.kv_prefix("metrics/").items():
+            _, node, name = key.split("/", 2)
+            try:
+                val = entry.value.split(":")[-1]
+                out[f"node_{name}/{node}"] = float(val)
+            except ValueError:
+                continue
+        steps = [v for k, v in out.items() if k.startswith("node_step_time/")]
+        if steps:
+            out["step_time"] = statistics.median(steps)
+        depths = [v for k, v in out.items() if k.startswith("node_queue_depth/")]
+        if depths:
+            out["queue_depth"] = sum(depths)
+        return out
+
+    def step(self, view: ClusterView, metrics: Dict[str, float]
+             ) -> Optional[ScalePlan]:
+        """One reconcile iteration. Returns the applied plan (or None)."""
+        now = self.clock.now()
+        if now - self._last_action_t < self.cooldown_s:
+            return None
+        plan = self.policy.decide(view, metrics)
+        target = max(self.min_nodes, min(self.max_nodes, plan.target))
+        plan = ScalePlan(target, plan.replace, plan.reason)
+        current = len(view.compute)
+        if plan.is_noop(current):
+            return None
+        if plan.replace:
+            self.provisioner.remove_nodes(list(plan.replace))
+            self.provisioner.add_nodes(len(plan.replace))
+        if target > current:
+            self.provisioner.add_nodes(target - current)
+        elif target < current:
+            victims = [m.node_id for m in view.compute[target:]]
+            self.provisioner.remove_nodes(victims)
+        self._last_action_t = now
+        self.history.append((now, plan.reason))
+        return plan

@@ -1,0 +1,105 @@
+"""VirtualCluster — the paper's Fig. 4 system as one facade.
+
+Wires together: ReplicatedRegistry (Consul trio) + SimCluster (blades &
+containers) + MeshTemplate (consul-template) + AutoScaler + ElasticTrainer.
+`submit()` is the `mpirun` analogue: run an SPMD function over the currently
+rendered mesh (hostfile).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.agent import NodeAgent
+from repro.core.autoscaler import AutoScaler, Policy, TargetSizePolicy
+from repro.core.clock import Clock, ManualClock
+from repro.core.image import ClusterImage, ImageHub
+from repro.core.membership import HPC_SERVICE
+from repro.core.registry import ReplicatedRegistry
+from repro.core.simnet import SimCluster
+from repro.core.template import MeshTemplate, Rendering
+
+
+class VirtualCluster:
+    def __init__(self, *, n_compute: int = 2, devices_per_node: int = 1,
+                 n_registry_replicas: int = 3, ttl: float = 2.0,
+                 clock: Optional[Clock] = None,
+                 image: Optional[ClusterImage] = None,
+                 policy: Optional[Policy] = None,
+                 cooldown_s: float = 0.0):
+        self.clock = clock or ManualClock()
+        self.registry = ReplicatedRegistry(n_registry_replicas, self.clock)
+        self.hub = ImageHub()
+        self.image = image
+        digest = ""
+        if image is not None:
+            digest = self.hub.push(image)
+        self.sim = SimCluster(self.registry, clock=self.clock,
+                              devices_per_node=devices_per_node, ttl=ttl,
+                              image_digest=digest)
+        self.template = MeshTemplate(self.registry, clock=self.clock)
+        self.scaler = AutoScaler(policy or TargetSizePolicy(n_compute),
+                                 provisioner=self.sim, clock=self.clock,
+                                 cooldown_s=cooldown_s)
+        self.head_id = self.sim.add_head()
+        self.sim.add_nodes(n_compute)
+        self.pump()
+
+    # -- control-plane pump ------------------------------------------------------
+    def pump(self, dt: float = 0.0, autoscale: bool = False) -> Rendering:
+        self.sim.pump(dt)
+        if autoscale:
+            view = self.current_view()
+            metrics = self.scaler.read_metrics(self.registry)
+            self.scaler.step(view, metrics)
+            self.sim.pump()
+        return self.template.poll() or self.template.rendering
+
+    def current_view(self):
+        self.template.poll()
+        return self.template.tracker.view
+
+    @property
+    def rendering(self) -> Rendering:
+        r = self.template.rendering
+        assert r is not None
+        return r
+
+    @property
+    def hostfile(self) -> str:
+        return self.rendering.hostfile
+
+    # -- image checks (paper §III-A: no version-skew clusters) ---------------------
+    def verify_images(self) -> bool:
+        entries = self.registry.catalog(HPC_SERVICE)
+        digests = {e.meta.get("image", "") for e in entries}
+        return len(digests) <= 1
+
+    # -- the mpirun analogue --------------------------------------------------------
+    def submit(self, spmd_fn: Callable, *args, **kwargs):
+        """Run an SPMD function over the current mesh (jit under mesh ctx)."""
+        r = self.rendering
+        assert r.mesh is not None, "cluster has no devices"
+        with r.mesh:
+            return spmd_fn(r.mesh, *args, **kwargs)
+
+    # -- scaling API -------------------------------------------------------------------
+    def scale_to(self, n: int) -> Rendering:
+        self.scaler.policy = TargetSizePolicy(n)
+        view = self.current_view()
+        self.scaler.step(view, {})
+        self.sim.pump()
+        return self.template.poll() or self.rendering
+
+    # -- fault injection passthrough -----------------------------------------------------
+    def crash_node(self, node_id: str) -> None:
+        self.sim.crash(node_id)
+
+    def compute_nodes(self) -> List[str]:
+        view = self.current_view()
+        return [m.node_id for m in view.compute]
+
+    def shutdown(self) -> None:
+        self.sim.remove_nodes(list(self.sim.nodes))

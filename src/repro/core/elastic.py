@@ -1,0 +1,150 @@
+"""ElasticRuntime — auto-scaling made safe for stateful SPMD jobs.
+
+The paper scales by powering up machines whose containers self-register; the
+MPI hostfile re-renders and the *next* job uses the new size. A training job
+cannot wait for "the next job": this runtime reacts to membership-epoch
+changes *mid-run*:
+
+  planned change (scale up/down, drain):  checkpoint -> re-render mesh ->
+      reshard state onto the new topology -> re-jit -> continue (no progress
+      lost)
+  unplanned loss (crash/partition, TTL reap): restore the last durable
+      checkpoint on the survivors (progress since that checkpoint is lost —
+      honest restart semantics, accounted in `steps_lost`)
+  stragglers: per-node step-time metrics feed StragglerPolicy -> the slow
+      node is drained & replaced like a planned change.
+
+The data plane is real JAX throughout: state lives as sharded arrays on the
+currently-rendered mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
+from repro.core.template import MeshTemplate, Rendering
+from repro.data import ShardedLoader, SyntheticLM
+from repro.launch import steps as St
+from repro.models.env import Env
+from repro.models import model as Mo
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel import rules
+
+Pytree = Any
+
+
+@dataclass
+class ElasticStats:
+    epoch_changes: int = 0
+    reshards: int = 0
+    restores: int = 0
+    steps_lost: int = 0
+    scale_events: list = field(default_factory=list)
+
+
+class ElasticTrainer:
+    def __init__(self, template: MeshTemplate, cfg: ModelConfig,
+                 shape: ShapeConfig, ckpt_dir: str, *,
+                 opt: Optional[AdamWConfig] = None,
+                 plan: Optional[ParallelPlan] = None,
+                 ckpt_every: int = 10, seed: int = 0,
+                 data_source=None):
+        self.template = template
+        self.cfg = cfg
+        self.shape = shape
+        self.opt = opt or AdamWConfig()
+        self.base_plan = plan or ParallelPlan(
+            fsdp=False, remat="nothing", attn_impl="naive",
+            kv_cache="replicated")
+        self.ckpt = CheckpointManager(ckpt_dir, keep=3)
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.data_source = data_source or SyntheticLM(
+            cfg.vocab_size, shape.seq_len, seed)
+        self.stats = ElasticStats()
+        self.step = 0
+        self._epoch = -1
+        self._last_ckpt_step = 0
+        self.env: Optional[Env] = None
+        self.state: Optional[Pytree] = None
+        self._jit_step = None
+        self._loader: Optional[ShardedLoader] = None
+
+    # -- (re)build ------------------------------------------------------------
+    def _specs(self, env: Env):
+        struct = St.state_struct(self.cfg, env, self.opt)
+        return struct, rules.state_specs(struct, self.cfg, env)
+
+    def _build(self, rendering: Rendering, *, planned: bool) -> None:
+        """Re-render the data plane for a new membership epoch."""
+        new_env = Env(mesh=rendering.mesh, plan=self.base_plan)
+        first = self.state is None
+        if not first:
+            if planned:
+                # planned change: persist *current* progress synchronously
+                self.ckpt.wait()
+                self.ckpt.save(self.step, self.state,
+                               {"epoch": self._epoch})
+                self._last_ckpt_step = self.step
+            else:
+                # unplanned loss: roll back to last durable checkpoint
+                self.ckpt.wait()
+                last = self.ckpt.latest_step()
+                lost = self.step - (last if last is not None else 0)
+                self.stats.steps_lost += max(lost, 0)
+                self.stats.restores += 1
+        struct, specs = self._specs(new_env)
+        if first and self.ckpt.latest_step() is None:
+            params = Mo.init_params(jax.random.PRNGKey(self.seed), self.cfg,
+                                    new_env)
+            state = {"params": params, "opt": adamw_init(params, self.opt)}
+            self.state = rules.apply_shardings(state, specs, new_env)
+        else:
+            shardings = rules.to_shardings(specs, new_env)
+            self.state = self.ckpt.restore(struct, shardings=shardings)
+            self.step = int(self.ckpt.metadata().get("step",
+                                                     self.ckpt.latest_step()))
+            self.step = self.ckpt.latest_step()
+            self.stats.reshards += 1
+        self.env = new_env
+        self._loader = ShardedLoader(self.data_source, self.cfg, self.shape,
+                                     new_env, self.seed)
+        fn = St.make_train_step(self.cfg, new_env, self.opt)
+        self._jit_step = jax.jit(fn, donate_argnums=(0,))
+        self._epoch = rendering.epoch
+        self.stats.epoch_changes += 1
+
+    # -- run loop ----------------------------------------------------------------
+    def ensure_ready(self, planned: bool = True) -> None:
+        r = self.template.poll() or self.template.rendering
+        assert r is not None and r.mesh is not None, "no rendered mesh"
+        if r.epoch != self._epoch:
+            self._build(r, planned=planned)
+
+    def run_steps(self, n: int, on_step: Optional[Callable] = None,
+                  planned_changes: bool = True) -> Dict[str, float]:
+        metrics = {}
+        for _ in range(n):
+            self.ensure_ready(planned=planned_changes)
+            batch = self._loader.batch(self.step)
+            self.state, m = self._jit_step(self.state, batch)
+            self.step += 1
+            metrics = {k: float(v) for k, v in m.items()}
+            if self.step - self._last_ckpt_step >= self.ckpt_every:
+                self.ckpt.save_async(self.step, self.state,
+                                     {"epoch": self._epoch})
+                self._last_ckpt_step = self.step
+            if on_step:
+                on_step(self.step, metrics)
+        return metrics
+
+    def finalize(self) -> None:
+        self.ckpt.wait()
+        if self.state is not None:
+            self.ckpt.save(self.step, self.state, {"epoch": self._epoch})

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (layout adaptation, interpret fallback)
+  ref.py    — pure-jnp oracle used by tests/benchmarks
+
+On this CPU container kernels run with interpret=True; on a TPU backend the
+same pallas_call lowers through Mosaic.
+"""
+
+
+def default_interpret() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,4 @@
+from repro.kernels.flash_decode.ops import (  # noqa: F401
+    flash_decode,
+    flash_decode_seq_sharded,
+)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k, v, cur_len):
+    """q: [B,Hq,hd]; k,v: [B,Hkv,S,hd]; attends to positions <= cur_len."""
+    B, Hq, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    ok = jnp.arange(S) <= cur_len
+    s = jnp.where(ok, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", a, v.astype(jnp.float32))
+    return o.reshape(B, Hq, hd)

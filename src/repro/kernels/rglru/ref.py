@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a,b: [B,S,W] f32."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_ref_loop(a, b, h0=None):
+    """Sequential-scan oracle (independent derivation for tests)."""
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), a.dtype) if h0 is None else h0
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

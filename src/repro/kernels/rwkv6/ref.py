@@ -1,0 +1,26 @@
+"""Pure-jnp sequential oracle for the RWKV-6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, s0=None):
+    """Sequential scan. r,k,v,logw: [B,H,S,hd]; u: [H,hd].
+
+    Returns (o [B,H,S,hd] f32, s_final [B,H,hd,hd] f32)."""
+    B, H, S, hd = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    s = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # [B,H,hd]
+        att = s + (u[None] * kt)[..., None] * vt[..., None, :]
+        o = jnp.einsum("bhc,bhcd->bhd", rt, att)
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, o
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, w))
+    s_fin, os = jax.lax.scan(step, s, xs)
+    return os.transpose(1, 2, 0, 3), s_fin

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape) cell on the
+production meshes; record memory/cost/collective analysis for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi ...
+
+Reports land in reports/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_cell
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_tag: str, outdir: str,
+             with_units: bool = True) -> dict:
+    t0 = time.time()
+    with mesh:
+        rep = analyze_cell(arch, shape, mesh, with_units=with_units)
+    rep["lower_compile_s"] = round(time.time() - t0, 2)
+    os.makedirs(os.path.join(outdir, mesh_tag), exist_ok=True)
+    path = os.path.join(outdir, mesh_tag, f"{arch}__{shape}.json")
+    with open(path, "w") as f:
+        json.dump(rep, f, indent=1)
+    return rep
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-units", action="store_true",
+                    help="skip unit lowerings (faster; multi-pod pass)")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, tag in cells() if tag == "run"]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_tag, mesh in meshes:
+        for arch, shape in todo:
+            cfg = get_config(arch)
+            if SHAPES[shape].long_context and not cfg.sub_quadratic:
+                print(f"SKIP {mesh_tag} {arch} {shape}: full attention "
+                      f"(DESIGN.md §5)")
+                continue
+            try:
+                rep = run_cell(arch, shape, mesh, mesh_tag, args.out,
+                               with_units=not args.no_units)
+                mem = rep["memory"]
+                print(f"OK   {mesh_tag} {arch:24s} {shape:12s} "
+                      f"compute={rep['compute_s']*1e3:8.2f}ms "
+                      f"mem={rep['memory_s']*1e3:8.2f}ms "
+                      f"coll={rep['collective_s']*1e3:8.2f}ms "
+                      f"dom={rep['dominant']:10s} "
+                      f"fit={mem['fits_16GB']} "
+                      f"t={rep['lower_compile_s']:.0f}s", flush=True)
+            except Exception as e:
+                failures.append((mesh_tag, arch, shape, repr(e)))
+                print(f"FAIL {mesh_tag} {arch} {shape}: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", *f)
+        return 1
+    print("\nALL CELLS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

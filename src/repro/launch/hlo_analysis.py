@@ -1,0 +1,196 @@
+"""Post-SPMD HLO analysis: collective bytes (with while-loop trip scaling)
+and roofline terms.
+
+cost_analysis() facts (measured, DESIGN.md §5): values are PER-DEVICE,
+post-SPMD, and a while body is counted ONCE. So:
+  * total flops/bytes = C(full-step lowering) + (trip-1) * C(one-unit
+    lowering), composed by launch/roofline.py;
+  * collective bytes are parsed from compiled.as_text(): each collective op
+    is weighted by the product of trip counts of its enclosing while loops
+    (trip parsed from the loop condition's comparison constant).
+
+Hardware model (v5e-like, per the assignment): 197 bf16 TFLOP/s, 819 GB/s
+HBM, ~50 GB/s/link ICI. Collective time model (ring): all-reduce moves 2x
+bytes, all-gather/reduce-scatter/all-to-all/permute 1x, over n_links
+concurrent links.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+DCN_BW = 6.25e9  # bytes/s per chip cross-pod (assumed 50 Gbit/s NIC share)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%|\S+ = )?\(?([a-z0-9\[\],{}\- ]+?)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    by_type: Dict[str, int] = field(default_factory=dict)  # weighted bytes
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_type.values())
+
+    def weighted_time(self, n_links: float = 3.0, bw: float = ICI_BW,
+                      dcn_bytes: int = 0) -> float:
+        t = 0.0
+        for k, b in self.by_type.items():
+            factor = 2.0 if k == "all-reduce" else 1.0
+            t += factor * b / (n_links * bw)
+        t += 2.0 * dcn_bytes / DCN_BW
+        return t
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text (brace matching on top-level defs)."""
+    comps: Dict[str, str] = {}
+    lines = hlo.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _COMP_HDR_RE.match(lines[i])
+        if m and lines[i].rstrip().endswith("{"):
+            name = m.group(1)
+            depth = 1
+            body = []
+            i += 1
+            while i < len(lines) and depth > 0:
+                depth += lines[i].count("{") - lines[i].count("}")
+                body.append(lines[i])
+                i += 1
+            comps[name] = "\n".join(body)
+        else:
+            i += 1
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: the largest integer constant in the loop condition."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    """Weighted per-device collective bytes from optimized HLO text."""
+    comps = _split_computations(hlo)
+    # while structure: body name -> trip count; caller -> callees
+    trips: Dict[str, int] = {}
+    calls: Dict[str, List[str]] = {}
+    for name, body in comps.items():
+        for cond, wbody in _WHILE_RE.findall(body):
+            trips[wbody] = _trip_count(comps.get(cond, ""))
+            calls.setdefault(name, []).append(wbody)
+
+    # weight(comp) = product of trips along the call chain from ENTRY
+    weights: Dict[str, int] = {}
+
+    def visit(name: str, w: int):
+        weights[name] = max(weights.get(name, 0), w)
+        for callee in calls.get(name, []):
+            visit(callee, w * trips.get(callee, 1))
+
+    roots = [n for n in comps if n not in trips]
+    for r in roots:
+        visit(r, 1)
+
+    stats = CollectiveStats()
+    for name, body in comps.items():
+        w = weights.get(name, 1)
+        for typestr, op in _COLL_RE.findall(body):
+            b = _shape_bytes(typestr)
+            if op.endswith("-start") or op.endswith("-done"):
+                op = op.rsplit("-", 1)[0]
+            stats.by_type[op] = stats.by_type.get(op, 0) + b * w
+            stats.count += 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll: CollectiveStats
+    n_devices: int
+    trip_note: str = ""
+    dcn_bytes: int = 0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll.weighted_time(dcn_bytes=self.dcn_bytes)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.coll.total_bytes,
+            "collective_by_type": dict(self.coll.by_type),
+        }
+
+
+def cost_get(cost: dict, key: str) -> float:
+    if isinstance(cost, list):
+        cost = cost[0]
+    return float(cost.get(key, 0.0))
+
+
+def hbm_bytes_from_cost(cost: dict) -> float:
+    """Sum 'bytes accessed' style keys; falls back to operand+output bytes."""
+    if isinstance(cost, list):
+        cost = cost[0]
+    total = 0.0
+    for k, v in cost.items():
+        if k.startswith("bytes accessed"):
+            total = max(total, float(v))  # 'bytes accessed' is the aggregate
+    return total

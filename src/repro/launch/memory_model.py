@@ -1,0 +1,131 @@
+"""Analytic per-device HBM model for the roofline memory term + fit check.
+
+Why analytic: the dry run compiles for the CPU backend (the only one in this
+container), and XLA:CPU's buffer assignment / "bytes accessed" stats are not
+fusion-aware the way XLA:TPU's are — the measured 'bytes accessed' is ~100x
+a TPU's true HBM traffic. The compute term (flops) and collective term (HLO
+collective operand bytes) DO transfer, so those stay measured; HBM traffic
+and residency are modeled explicitly from the config + plan below and are
+cross-checked against parameter/cache sizes (tests/test_roofline.py).
+
+All numbers are per device, per step.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as Mo
+from repro.models.env import Env, vocab_pad
+
+
+def _tree_bytes(struct) -> int:
+    return sum(math.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(struct))
+
+
+@dataclass(frozen=True)
+class MemoryReport:
+    traffic_bytes: int  # HBM bytes moved per step (roofline memory term)
+    resident_bytes: int  # persistent + peak transient residency
+    components: Dict[str, int]
+
+    @property
+    def fits_16GB(self) -> bool:
+        return self.resident_bytes < 16e9
+
+
+def analyze_memory(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                   opt_state_bytes_per_param: float = 12.0) -> MemoryReport:
+    from repro.launch import steps as S
+
+    p_struct = S.params_struct(cfg, env)
+    P_global = _tree_bytes(p_struct)
+    tp = max(env.tp, 1)
+    dp = max(env.dp, 1)
+    n_dev = tp * dp
+    fsdp = env.plan.fsdp
+    # params are TP-sharded always; FSDP adds the dp axis
+    P_dev = P_global / (tp * (dp if fsdp else 1))
+    n_params_dev = P_dev / 2  # bf16
+
+    B_loc = max(shape.global_batch // dp, 1)
+    S_len = shape.seq_len
+    d = cfg.d_model
+    vp = vocab_pad(cfg, env)
+    L = cfg.n_layers
+
+    comp: Dict[str, int] = {}
+
+    if shape.kind == "train":
+        # weights: fwd read + bwd read (+ remat recompute read) of the
+        # *gathered* (TP-sharded-only) copy; grads written sharded
+        gather_factor = 3.0 if env.plan.remat != "full" else 2.0
+        # each device reads the TP-sharded weight copy per pass (under FSDP
+        # the gather lands in HBM first: local write+read of the gathered
+        # buffer; the ICI transfer itself is counted in the collective term)
+        comp["weights_rw"] = int(gather_factor * P_global / tp)
+        comp["grads_w"] = int(P_dev)
+        comp["opt_rw"] = int(2 * n_params_dev * opt_state_bytes_per_param)
+        # saved scan carries (remat nothing): one [B,S,d] per layer, w+r;
+        # sequence-parallel carries are tp-sharded
+        sp_div = tp if (env.plan.seq_shard_acts and S_len % tp == 0) else 1
+        comp["act_saved"] = int(2 * L * B_loc * S_len * d * 2 / sp_div)
+        # attention kv stream: per layer, per q-chunk pass over K and V
+        hkv = max(cfg.n_kv_heads, 1)
+        nq = max(S_len // env.plan.attn_q_chunk, 1)
+        n_attn = _n_attn_layers(cfg)
+        comp["attn_kv_stream"] = int(
+            2 * n_attn * nq * B_loc * S_len * hkv * cfg.head_dim * 2)
+        comp["logits"] = int(3 * B_loc * S_len * vp / tp * 2)
+        resident = int(P_dev + n_params_dev * opt_state_bytes_per_param
+                       + P_dev  # grads
+                       + L * B_loc * S_len * d * 2 / sp_div  # saved carries
+                       + B_loc * S_len * vp / tp * 4  # logits f32 transient
+                       + 2e9)  # workspace
+    elif shape.kind == "prefill":
+        comp["weights_r"] = int(P_global / tp)
+        comp["acts"] = int(2 * L * B_loc * S_len * d * 2)
+        cache = _cache_bytes_dev(cfg, shape, env, B_loc)
+        comp["cache_w"] = int(cache)
+        hkv = max(cfg.n_kv_heads, 1)
+        nq = max(S_len // env.plan.attn_q_chunk, 1)
+        comp["attn_kv_stream"] = int(
+            2 * _n_attn_layers(cfg) * nq * B_loc * S_len * hkv
+            * cfg.head_dim * 2)
+        comp["logits"] = int(B_loc * 1 * vp / tp * 2)
+        resident = int(P_dev + cache + B_loc * S_len * d * 2 * 4 + 1e9)
+    else:  # decode
+        comp["weights_r"] = int(P_global / tp)
+        cache = _cache_bytes_dev(cfg, shape, env, B_loc)
+        comp["cache_rw"] = int(cache + 2 * B_loc * 1 * d * 2 * L)
+        comp["logits"] = int(B_loc * vp / tp * 2)
+        resident = int(P_dev + 2 * cache + 1e9)
+
+    return MemoryReport(traffic_bytes=sum(comp.values()),
+                        resident_bytes=resident, components=comp)
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    full = sum(k in ("attn", "moe", "enc", "dec") for k in cfg.block_pattern)
+    n = full * cfg.num_blocks + cfg.encoder_layers
+    n += sum(k in ("attn", "moe", "dec") for k in cfg.pattern_tail)
+    return max(n, 1)
+
+
+def _cache_bytes_dev(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                     B_loc: int) -> int:
+    struct = jax.eval_shape(
+        lambda: Mo.init_cache(cfg, env, shape.global_batch, shape.seq_len))
+    total = _tree_bytes(struct)
+    dp = max(env.dp, 1)
+    tp = max(env.tp, 1)
+    per_batch = total / dp
+    if env.plan.kv_cache == "seq_sharded":
+        # k/v leaves shard their seq dim over tp; states shard width/heads
+        return int(per_batch / tp)
+    return int(per_batch)

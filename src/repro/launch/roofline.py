@@ -1,0 +1,248 @@
+"""Roofline derivation from compiled dry-run artifacts (DESIGN.md §5).
+
+Because cost_analysis() counts a while body once and reports per-device
+values (measured in the feasibility probe), per-cell totals are composed
+from three lowerings:
+
+  C_total = C_full(rolled) - sum_i C_unit_i(rolled)
+                           + sum_i trip_i * C_unit_i(inner-unrolled)
+
+where unit_i are the scanned segments (the repeating pattern unit; plus the
+encoder unit for enc-dec archs). Unit lowerings run with
+plan.inner_unroll=True so their attention/rwkv chunk scans contribute exact
+flops. Collective bytes come from the full compiled HLO with while-body
+trip weighting (launch/hlo_analysis.py), so they need no decomposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig, default_plan
+from repro.launch import hlo_analysis as H
+from repro.launch import steps as S
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import rules
+
+
+# ---------------------------------------------------------------------------
+# unit lowerings
+# ---------------------------------------------------------------------------
+
+
+def _strip_leading(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+
+
+def _unit_fn(cfg: ModelConfig, env: Env, mode: str, pattern, seq_len: int):
+    nv = cfg.num_vision_embeds if cfg.family == "vlm" else 0
+
+    def apply_unit(unit_p, h, caches=None, cur_len=None, enc_out=None):
+        if mode == "decode":
+            positions = (Mo.build_mrope_positions(1, nv, cur_len=cur_len)
+                         if cfg.mrope else None)
+        else:
+            positions = (Mo.build_mrope_positions(h.shape[1], nv)
+                         if cfg.mrope else jnp.arange(h.shape[1]))
+        ncs = []
+        for i, kind in enumerate(pattern):
+            c = (caches[i] if mode == "decode"
+                 else ({} if mode == "prefill" else None))
+            h, nc, _ = Mo._apply_block(kind, unit_p[i], h, cfg, env,
+                                       mode if kind != "enc" else "train",
+                                       positions, c, cur_len, enc_out)
+            ncs.append(nc)
+        return h, (tuple(ncs) if mode in ("prefill", "decode") else None)
+
+    if mode != "train":
+        return apply_unit
+
+    wrapped = Mo._remat_wrap(lambda p, h: apply_unit(p, h)[0], env)
+
+    def unit_train(unit_p, h, cot, enc_out=None):
+        if enc_out is not None:
+            y, vjp = jax.vjp(lambda p, hh, eo: Mo._remat_wrap(
+                lambda p2, h2: apply_unit(p2, h2, enc_out=eo)[0], env)(p, hh),
+                unit_p, h, enc_out)
+            return y, vjp(cot)
+        y, vjp = jax.vjp(wrapped, unit_p, h)
+        return y, vjp(cot)
+
+    return unit_train
+
+
+def _unit_lowerings(cfg: ModelConfig, shape: ShapeConfig, env: Env):
+    """Yield (name, trip, lower_fn(inner_unroll)->lowered)."""
+    B = shape.global_batch
+    S_eff = shape.seq_len
+    mode = shape.kind
+    segs = [("main", cfg.block_pattern, cfg.num_blocks, False)]
+    if cfg.is_encdec and mode != "decode":
+        segs.append(("enc", ("enc",), cfg.encoder_layers, True))
+
+    p_struct = S.params_struct(cfg, env)
+
+    for name, pattern, trip, is_enc in segs:
+        seq = S_eff // cfg.enc_downsample if is_enc else S_eff
+        if mode == "decode" and not is_enc:
+            seq_h = 1
+        else:
+            seq_h = seq
+
+        def make(inner_unroll: bool, pattern=pattern, is_enc=is_enc,
+                 seq_h=seq_h):
+            uenv = Env(env.mesh, dataclasses.replace(
+                env.plan, inner_unroll=inner_unroll))
+            key = "enc_blocks" if is_enc else "blocks"
+            up = _strip_leading(p_struct[key])
+            up_sh = rules.to_shardings(rules.param_specs(up, cfg, uenv), uenv)
+            h = jax.ShapeDtypeStruct((B, seq_h, cfg.d_model), jnp.bfloat16)
+            h_sh = uenv.sharding(uenv.dpx if B % max(uenv.dp, 1) == 0 else
+                                 None, None, None)
+            umode = "train" if is_enc else mode
+            fn = _unit_fn(cfg, uenv, umode, pattern, seq_h)
+            args = [up, h]
+            shards = [up_sh, h_sh]
+            if umode == "train":
+                args.append(h)  # cotangent
+                shards.append(h_sh)
+                if cfg.is_encdec and not is_enc:
+                    eo = jax.ShapeDtypeStruct(
+                        (B, S_eff // cfg.enc_downsample, cfg.d_model),
+                        jnp.bfloat16)
+                    args.append(eo)
+                    shards.append(h_sh)
+            elif umode == "decode":
+                c_struct = S.cache_struct(cfg, uenv, shape)
+                uc = _strip_leading(c_struct["blocks"])
+                uc_sh = rules.to_shardings(
+                    rules.cache_specs(uc, cfg, uenv), uenv)
+                args += [uc, jax.ShapeDtypeStruct((), jnp.int32)]
+                shards += [uc_sh, rules.to_shardings(
+                    jax.sharding.PartitionSpec(), uenv)]
+            elif umode == "prefill" and cfg.is_encdec and not is_enc:
+                eo = jax.ShapeDtypeStruct(
+                    (B, S_eff // cfg.enc_downsample, cfg.d_model),
+                    jnp.bfloat16)
+                fn0 = fn
+                fn = lambda up_, h_, eo_: fn0(up_, h_, enc_out=eo_)
+                args.append(eo)
+                shards.append(h_sh)
+            return jax.jit(fn, in_shardings=tuple(shards)).lower(*args)
+
+        yield name, trip, make
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-flops baseline)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, env: Env) -> float:
+    n_total = Mo.count_params(cfg, env, padded=False)
+    if cfg.moe is not None:
+        # subtract inactive expert params
+        expert = cfg.moe.num_experts * 3 * cfg.d_model * cfg.d_ff
+        n_layers_moe = cfg.block_pattern.count("moe") * cfg.num_blocks
+        inactive = (1 - cfg.moe.top_k / cfg.moe.num_experts)
+        n_active = n_total - n_layers_moe * expert * inactive
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# cell analysis
+# ---------------------------------------------------------------------------
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, *,
+                 plan: Optional[ParallelPlan] = None,
+                 opt: Optional[AdamWConfig] = None,
+                 with_units: bool = True) -> Dict[str, Any]:
+    from repro.launch.memory_model import analyze_memory
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    plan = plan or default_plan(cfg, shape)
+    env = Env(mesh, plan)
+    if opt is None and cfg.param_count() > 1e11:
+        # >=100B params: int8-blockwise moments to fit one pod (DESIGN.md §4)
+        opt = AdamWConfig(state_dtype="int8")
+    args, in_sh, fn = S.input_specs(cfg, shape, env, opt)
+    lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = H.parse_collectives(hlo)
+
+    flops = H.cost_get(cost, "flops")
+    unit_report = []
+    if with_units:
+        for name, trip, make in _unit_lowerings(cfg, shape, env):
+            rolled = make(False).compile().cost_analysis()
+            unrolled = make(True).compile().cost_analysis()
+            fr, fu = H.cost_get(rolled, "flops"), H.cost_get(unrolled, "flops")
+            flops += trip * fu - fr
+            unit_report.append({"segment": name, "trip": trip,
+                                "unit_flops": fu})
+
+    opt_bytes = 6.3 if (opt or AdamWConfig()).state_dtype == "int8" else 12.0
+    memrep = analyze_memory(cfg, shape, env,
+                            opt_state_bytes_per_param=opt_bytes)
+    if plan.grad_compression == "int8_ef" and "pod" in env.axis_names:
+        # modeled wire saving for the cross-pod gradient sync (optim/compress)
+        coll.by_type["all-reduce"] = int(
+            coll.by_type.get("all-reduce", 0) * 0.625)  # pod share at int8
+
+    n_dev = mesh.devices.size
+    terms = H.RooflineTerms(flops_per_device=flops,
+                            hbm_bytes_per_device=memrep.traffic_bytes,
+                            coll=coll, n_devices=n_dev)
+    mf = model_flops(cfg, shape, env)
+    hlo_global = flops * n_dev
+    dom = terms.bottleneck
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, (int(mesh.shape[a])
+                                           for a in mesh.axis_names))),
+        "n_devices": int(n_dev),
+        **terms.summary(),
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": mf / hlo_global if hlo_global else 0.0,
+        "memory": {
+            "traffic_bytes_per_device": int(memrep.traffic_bytes),
+            "resident_bytes_per_device": int(memrep.resident_bytes),
+            "components": memrep.components,
+            "fits_16GB": memrep.fits_16GB,
+            # raw XLA:CPU buffer stats (not TPU-representative; see
+            # launch/memory_model.py)
+            "xla_cpu_args_bytes": int(mem.argument_size_in_bytes),
+            "xla_cpu_temp_bytes": int(mem.temp_size_in_bytes),
+            "xla_cpu_bytes_accessed": H.hbm_bytes_from_cost(cost),
+        },
+        "units": unit_report,
+        "dominant": dom,
+        # step time bound = max of terms (perfect overlap) / sum (no overlap)
+        "step_s_lower": max(terms.compute_s, terms.memory_s,
+                            terms.collective_s),
+        "step_s_upper": terms.compute_s + terms.memory_s + terms.collective_s,
+    }
+    out["roofline_fraction"] = (
+        (mf / n_dev / H.PEAK_FLOPS) / out["step_s_lower"]
+        if out["step_s_lower"] else 0.0)
+    return out

@@ -1,0 +1,87 @@
+"""Serving driver: batched prefill + decode over the virtual cluster.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-demo --smoke \
+      --requests 8 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import ParallelPlan, ShapeConfig
+from repro.core import ClusterImage, VirtualCluster
+from repro.launch import steps as St
+from repro.models import model as Mo
+from repro.models.env import Env
+
+
+def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan):
+    env = Env(mesh=mesh, plan=plan)
+    B, S = prompts.shape
+    total = S + gen_len
+    prefill = jax.jit(St.make_prefill_step(cfg, env))
+    decode = jax.jit(St.make_decode_step(cfg, env), donate_argnums=(1,))
+
+    # allocate full-length caches, then write the prompt via prefill
+    kw = {"tokens": prompts}
+    if cfg.family == "vlm":
+        kw["vision_embeds"] = jnp.zeros((B, cfg.num_vision_embeds,
+                                         cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        kw["frames"] = jnp.zeros((B, S // cfg.enc_downsample, cfg.d_model),
+                                 jnp.float32)
+    logits, caches = prefill(params, kw)
+    # grow cache seq dim so decode can append (prefill emits length-S caches)
+    caches = Mo.grow_caches(caches, gen_len)
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    offset = cfg.num_vision_embeds if cfg.family == "vlm" else 0
+    for i in range(gen_len - 1):
+        logits, caches = decode(params, caches, tok,
+                                jnp.asarray(S + offset + i, jnp.int32))
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1
+                         ).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-demo")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--nodes", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    plan = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
+                        kv_cache="replicated")
+    image = ClusterImage.build(f"{cfg.name}-serve", cfg, plan, "serve")
+    cluster = VirtualCluster(n_compute=args.nodes, image=image)
+    print("serving replicas register to the catalog:\n" + cluster.hostfile)
+
+    rng = jax.random.PRNGKey(0)
+    env0 = Env(mesh=None, plan=plan)
+    params = Mo.init_params(rng, cfg, env0)
+    prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    t0 = time.time()
+    toks = cluster.submit(serve_batch, cfg, params, prompts, args.gen, plan)
+    dt = time.time() - t0
+    n_tok = args.requests * args.gen
+    print(f"generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s on this CPU sim)")
+    print("sample:", np.asarray(toks[0])[:16])
+    cluster.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

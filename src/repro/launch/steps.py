@@ -1,0 +1,146 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+`input_specs(...)` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for everything a step consumes — this is
+what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import rules
+
+Pytree = Any
+
+
+def make_env(mesh, plan: ParallelPlan) -> Env:
+    return Env(mesh=mesh, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, env: Env, opt: AdamWConfig):
+    def train_step(state, batch):
+        def loss_fn(params):
+            return Mo.lm_loss(params, batch, cfg, env)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt = adamw_update(grads, state["opt"], opt)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, **metrics})
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, env: Env):
+    def prefill_step(params, batch):
+        logits, caches, _ = Mo.forward(
+            params, batch["tokens"], cfg, env, mode="prefill",
+            vision_embeds=batch.get("vision_embeds"),
+            frames=batch.get("frames"))
+        return logits[:, -1, :], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, env: Env):
+    def decode_step(params, caches, tokens, cur_len):
+        logits, new_caches, _ = Mo.forward(params, tokens, cfg, env,
+                                           mode="decode", caches=caches,
+                                           cur_len=cur_len)
+        return logits[:, 0, :], new_caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# shape-struct builders (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        S = S - cfg.num_vision_embeds  # vision embeds fill the rest
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = _sds((B, cfg.num_vision_embeds, cfg.d_model),
+                                    jnp.float32)
+    if cfg.is_encdec:
+        out["frames"] = _sds((B, S // cfg.enc_downsample, cfg.d_model),
+                             jnp.float32)
+    return out
+
+
+def params_struct(cfg: ModelConfig, env: Env) -> Pytree:
+    return jax.eval_shape(lambda k: Mo.init_params(k, cfg, env),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def state_struct(cfg: ModelConfig, env: Env, opt: AdamWConfig) -> Pytree:
+    p = params_struct(cfg, env)
+    o = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p), opt))
+    return {"params": p, "opt": o}
+
+
+def cache_struct(cfg: ModelConfig, env: Env, shape: ShapeConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda: Mo.init_cache(cfg, env, shape.global_batch, shape.seq_len))
+
+
+@functools.lru_cache(maxsize=None)
+def _nothing():
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                opt: Optional[AdamWConfig] = None
+                ) -> Tuple[Tuple, Tuple, Any]:
+    """Returns (args_structs, in_shardings, step_fn) for the cell.
+
+    args are ready for jax.jit(step).lower(*args)."""
+    opt = opt or AdamWConfig()
+    if shape.kind == "train":
+        st = state_struct(cfg, env, opt)
+        bt = batch_struct(cfg, shape)
+        in_sh = (rules.to_shardings(rules.state_specs(st, cfg, env), env),
+                 rules.to_shardings(rules.batch_specs(bt, cfg, shape, env),
+                                    env))
+        return (st, bt), in_sh, make_train_step(cfg, env, opt)
+    if shape.kind == "prefill":
+        pt = params_struct(cfg, env)
+        bt = batch_struct(cfg, shape)
+        in_sh = (rules.to_shardings(rules.param_specs(pt, cfg, env), env),
+                 rules.to_shardings(rules.batch_specs(bt, cfg, shape, env),
+                                    env))
+        return (pt, bt), in_sh, make_prefill_step(cfg, env)
+    # decode
+    pt = params_struct(cfg, env)
+    ct = cache_struct(cfg, env, shape)
+    tok = _sds((shape.global_batch, 1), jnp.int32)
+    cur = _sds((), jnp.int32)
+    tok_spec = rules.batch_specs({"tokens": tok}, cfg, shape, env)["tokens"]
+    in_sh = (rules.to_shardings(rules.param_specs(pt, cfg, env), env),
+             rules.to_shardings(rules.cache_specs(ct, cfg, env), env),
+             rules.to_shardings(tok_spec, env),
+             rules.to_shardings(jax.sharding.PartitionSpec(), env))
+    return (pt, ct, tok, cur), in_sh, make_decode_step(cfg, env)

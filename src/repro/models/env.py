@@ -1,0 +1,116 @@
+"""Execution environment threaded through model code.
+
+Models are mesh-agnostic: they receive an `Env` describing the mesh (or None
+for single-device smoke runs) and the ParallelPlan, and use `constrain()` to
+place intermediate activations. Axis names not present in the mesh are
+silently dropped (so the same specs work on single-pod and multi-pod meshes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelPlan
+
+
+@dataclass(frozen=True)
+class Env:
+    mesh: Optional[Mesh]
+    plan: ParallelPlan
+
+    # ---- axis helpers ------------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.plan.dp_axes if a in self.axis_names)
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return self.plan.tp_axis if self.plan.tp_axis in self.axis_names else None
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, *dims) -> P:
+        """Build a PartitionSpec, dropping axis names absent from the mesh.
+
+        Each dim is None, an axis name, or a tuple of axis names.
+        """
+        out = []
+        for d in dims:
+            if d is None:
+                out.append(None)
+            elif isinstance(d, (tuple, list)):
+                kept = tuple(a for a in d if a in self.axis_names)
+                out.append(kept if kept else None)
+            else:
+                out.append(d if d in self.axis_names else None)
+        return P(*out)
+
+    def sharding(self, *dims) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*dims))
+
+    # "dp" shorthand usable inside spec dims
+    @property
+    def dpx(self) -> Tuple[str, ...]:
+        return self.dp_axes
+
+
+def constrain(x, env: Env, *dims):
+    """with_sharding_constraint that no-ops without a mesh."""
+    if env.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, env.sharding(*dims))
+
+
+def head_pad(cfg: ModelConfig, env: Env) -> int:
+    """Padded query-head count for the current TP degree (DESIGN.md §4)."""
+    tp = env.tp
+    if tp <= 1:
+        return cfg.n_heads
+    return ((cfg.n_heads + tp - 1) // tp) * tp
+
+
+def out_dims(env: Env, seq_len: int):
+    """Layer-output sharding: sequence-parallel over tp when enabled (turns
+    the preceding row-matmul all-reduce into reduce-scatter)."""
+    if (env.plan.seq_shard_acts and env.tp > 1 and seq_len % env.tp == 0
+            and seq_len >= env.tp):
+        return (env.dpx, env.plan.tp_axis, None)
+    return (env.dpx, None, None)
+
+
+def kv_head_pad(cfg: ModelConfig, env: Env) -> int:
+    """MHA (kv == q heads) pads KV heads alongside Q so GQA grouping stays
+    integral; GQA keeps its true KV head count (replicated across TP)."""
+    hkv = max(cfg.n_kv_heads, 1)
+    if cfg.n_kv_heads == cfg.n_heads:
+        return head_pad(cfg, env)
+    return hkv
+
+
+def vocab_pad(cfg: ModelConfig, env: Env) -> int:
+    tp = max(env.tp, 1)
+    m = max(128, tp) if tp > 1 else 8
+    return ((cfg.vocab_size + m - 1) // m) * m

@@ -1,0 +1,374 @@
+"""Core layers: norms, RoPE / M-RoPE, GQA attention (all impls), SwiGLU.
+
+All functions are pure; parameters are plain dict pytrees created by the
+matching `init_*` functions. dtype policy: params and activations bf16 by
+default, softmax/logsumexp statistics in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.env import Env, constrain, head_pad, kv_head_pad, out_dims
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * i / head_dim)  # [hd/2]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL multimodal RoPE.
+
+    x: [..., S, H, hd]; positions: [..., S, 3] (temporal, h, w).
+    Rotary dims hd/2 are split into `sections` (sum == hd/2), each section
+    rotated with its own position component.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    parts = []
+    off = 0
+    for c, sec in enumerate(sections):
+        ang = positions[..., c:c + 1].astype(jnp.float32) * freqs[off:off + sec]
+        parts.append(ang)
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, env: Env, cross: bool = False) -> dict:
+    hq = head_pad(cfg, env)
+    hd, d = cfg.head_dim, cfg.d_model
+    hkv = kv_head_pad(cfg, env)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd),
+        "wk": dense_init(ks[1], d, hkv * hd),
+        "wv": dense_init(ks[2], d, hkv * hd),
+        "wo": dense_init(ks[3], hq * hd, d),
+    }
+    if hq != cfg.n_heads:  # zero the padded head slots (DESIGN.md §4)
+        mask = (jnp.arange(hq * hd) < cfg.n_heads * hd).astype(p["wq"].dtype)
+        p["wq"] = p["wq"] * mask[None, :]
+        p["wo"] = p["wo"] * mask[:, None]
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), p["wq"].dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), p["wq"].dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), p["wq"].dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, x_kv, cfg: ModelConfig, env: Env):
+    """Returns q [B,S,Hq,hd], k/v [B,Skv,Hkv,hd] (no rope yet)."""
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[0], x.shape[1]
+    Skv = x_kv.shape[1]
+    q = q.reshape(B, S, -1, hd)
+    k = k.reshape(B, Skv, -1, hd)
+    v = v.reshape(B, Skv, -1, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    # activation layout: batch over dp, heads over tp
+    q = constrain(q, env, env.dpx, None, env.plan.tp_axis, None)
+    k = constrain(k, env, env.dpx, None, None, None)
+    v = constrain(v, env, env.dpx, None, None, None)
+    return q, k, v
+
+
+def _group(q, hkv):
+    """[B,S,Hq,hd] -> [B,Hkv,G,S,hd]."""
+    B, S, Hq, hd = q.shape
+    g = Hq // hkv
+    return q.reshape(B, S, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+
+
+def _ungroup(o):
+    """[B,Hkv,G,S,hd] -> [B,S,Hq*hd]."""
+    B, Hkv, G, S, hd = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hkv * G * hd)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """additive f32 bias [..., Sq, Sk]."""
+    ok = jnp.ones(jnp.broadcast_shapes(q_pos[..., :, None].shape,
+                                       k_pos[..., None, :].shape), bool)
+    if causal:
+        ok &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window > 0:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_naive(q, k, v, cfg: ModelConfig, *, causal: bool, window: int = 0,
+                    q_pos=None, k_pos=None):
+    """Full-matrix reference (smoke/tests)."""
+    hkv = k.shape[2]
+    qg = _group(q, hkv)  # [B,Hkv,G,Sq,hd]
+    kk = k.transpose(0, 2, 1, 3)  # [B,Hkv,Sk,hd]
+    vv = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kk).astype(jnp.float32) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if k_pos is None:
+        k_pos = jnp.arange(Sk)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)
+    a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", a, vv)
+    return _ungroup(o)
+
+
+def attention_chunked(q, k, v, cfg: ModelConfig, env: Env, *, causal: bool,
+                      window: int = 0, q_chunk: int = 1024, kv_chunk: int = 1024):
+    unroll = True if env.plan.inner_unroll else 1
+    """Flash-style online-softmax attention in pure XLA.
+
+    Memory-bounded: scans q chunks (outer) and kv chunks (inner), carrying
+    (m, l, acc). Masked blocks are still *computed* (static scan lengths) —
+    that causal waste is visible in the roofline useful-flops ratio; the
+    Pallas TPU kernel (kernels/flash_attention) skips them with pl.when.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    hkv = k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = _group(q, hkv)  # [B,Hkv,G,Sq,hd]
+    kk = k.transpose(0, 2, 1, 3)  # [B,Hkv,Sk,hd]
+    vv = v.transpose(0, 2, 1, 3)
+    G = qg.shape[2]
+
+    def q_step(_, qi):
+        qc, qpos = qi  # [B,Hkv,G,Cq,hd], [Cq]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kpos = ki  # [B,Hkv,Ck,hd] x2, [Ck]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc).astype(jnp.float32) * scale
+            s = s + _mask_bias(qpos, kpos, causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new may be -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, hkv, G, q_chunk, hd), jnp.float32)
+        ks = kk.reshape(B, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+        vs = vv.reshape(B, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+        kpos = jnp.arange(Sk).reshape(nk, kv_chunk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kpos),
+                                      unroll=unroll)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.astype(q.dtype)
+
+    qs = qg.reshape(B, hkv, G, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    qpos = jnp.arange(Sq).reshape(nq, q_chunk)
+    _, outs = jax.lax.scan(q_step, None, (qs, qpos),
+                           unroll=unroll)  # [nq,B,Hkv,G,Cq,hd]
+    o = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, hkv, G, Sq, hd)
+    return _ungroup(o)
+
+
+def attention_window_prefill(q, k, v, cfg: ModelConfig, env: Env, *, window: int,
+                             q_chunk: int = 1024):
+    unroll = True if env.plan.inner_unroll else 1
+    """Sliding-window causal attention with an optimal kv span per q chunk.
+
+    For q chunk starting at t0, keys in [t0 - window, t0 + Cq) suffice, so we
+    dynamic-slice a (Cq + window)-wide kv span instead of scanning all of Sk.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    hkv = k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    assert Sq % q_chunk == 0 and Sq == Sk
+    nq = Sq // q_chunk
+    span = q_chunk + window
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = _group(q, hkv)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    # pad keys on the left by `window` so every span slice is in-bounds
+    kk = jnp.pad(kk, ((0, 0), (0, 0), (window, 0), (0, 0)))
+    vv = jnp.pad(vv, ((0, 0), (0, 0), (window, 0), (0, 0)))
+    G = qg.shape[2]
+
+    def q_step(_, i):
+        t0 = i * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(qg, t0, q_chunk, axis=3)
+        kc = jax.lax.dynamic_slice_in_dim(kk, t0, span, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(vv, t0, span, axis=2)
+        qpos = t0 + jnp.arange(q_chunk)
+        kpos = t0 - window + jnp.arange(span)  # positions < 0 are padding
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc).astype(jnp.float32) * scale
+        bias = _mask_bias(qpos, kpos, True, window)
+        bias = jnp.where((kpos < 0)[None, :], -jnp.inf, bias)
+        s = s + bias
+        a = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", a, vc)
+        return None, o
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq), unroll=unroll)
+    o = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, hkv, G, Sq, hd)
+    return _ungroup(o)
+
+
+def attention_decode(q, k_cache, v_cache, cur_len, cfg: ModelConfig, env: Env,
+                     *, window: int = 0):
+    """Single-token attention over a (possibly seq-sharded) KV cache.
+
+    q: [B,1,Hq,hd]; caches: [B,Hkv,Smax,hd] — sharded over the TP axis on
+    Smax when plan.kv_cache == 'seq_sharded' (flash-decoding layout: GSPMD
+    emits the partial-softmax collectives; the Pallas kernels/flash_decode
+    kernel is the TPU-native version of this merge).
+    """
+    B, _, Hq, hd = q.shape
+    hkv = k_cache.shape[1]
+    Smax = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qg = _group(q, hkv)[:, :, :, 0]  # [B,Hkv,G,hd]
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    kpos = jnp.arange(Smax)
+    ok = kpos <= cur_len  # cur_len: scalar int32 (current write position)
+    if window > 0:
+        ok = ok & (kpos >= cur_len - window + 1)
+    s = jnp.where(ok, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgk,bhkd->bhgd", a, v_cache)
+    return o.reshape(B, 1, hkv * qg.shape[2] * hd)
+
+
+def attention(p, x, cfg: ModelConfig, env: Env, *, positions, causal: bool = True,
+              window: int = 0, x_kv=None, rope: bool = True):
+    """Full-sequence attention (train/prefill). Returns [B,S,d]."""
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, x_kv, cfg, env)
+    if rope:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    impl = env.plan.attn_impl
+    if impl == "xla_chunked" and x.shape[1] > env.plan.attn_q_chunk:
+        if window > 0 and x_kv is x:
+            o = attention_window_prefill(q, k, v, cfg, env, window=window,
+                                         q_chunk=env.plan.attn_q_chunk)
+        else:
+            o = attention_chunked(q, k, v, cfg, env, causal=causal, window=window,
+                                  q_chunk=env.plan.attn_q_chunk,
+                                  kv_chunk=env.plan.attn_kv_chunk)
+    elif impl == "pallas" and x.shape[1] > 128:
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   n_kv_heads=max(cfg.n_kv_heads, 1))
+    else:
+        o = attention_naive(q, k, v, cfg, causal=causal, window=window)
+    o = o @ p["wo"]
+    return constrain(o, env, env.dpx, None, None)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, ff),
+        "w_up": dense_init(k2, d, ff),
+        "w_down": dense_init(k3, ff, d),
+    }
+
+
+def mlp(p, x, env: Env):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, env, env.dpx, None, env.plan.tp_axis)
+    o = h @ p["w_down"]
+    return constrain(o, env, *out_dims(env, o.shape[1]))

@@ -1,0 +1,510 @@
+"""Model assembly: one functional implementation drives all 10 architectures.
+
+A model is `embed -> scan(repeating pattern unit) -> tail -> norm -> unembed`.
+The pattern unit is a tuple of sub-blocks (cfg.block_pattern), so uniform
+archs scan single blocks and recurrentgemma scans (rglru, rglru, local)
+units. Whisper adds an encoder stack and cross-attention; qwen2-vl prepends
+stubbed vision embeddings and uses M-RoPE.
+
+Modes:
+  train/prefill: full-sequence forward. prefill also emits KV/state caches.
+  decode:        single-token step with carried caches (cur_len scalar).
+
+Parameters and caches for scanned units are stacked on a leading num_blocks
+dim; cost_analysis sees the unit body once (roofline composes the rest —
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.env import Env, constrain, head_pad, kv_head_pad, vocab_pad
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(kind: str, key, cfg: ModelConfig, env: Env) -> dict:
+    ks = jax.random.split(key, 4)
+    z = lambda: jnp.zeros((cfg.d_model,), jnp.float32)
+    if kind in ("attn", "enc", "local"):
+        return {"ln1": z(), "attn": L.init_attention(ks[0], cfg, env),
+                "ln2": z(), "mlp": L.init_mlp(ks[1], cfg)}
+    if kind == "moe":
+        return {"ln1": z(), "attn": L.init_attention(ks[0], cfg, env),
+                "ln2": z(), "moe": M.init_moe(ks[1], cfg, env)}
+    if kind == "dec":
+        return {"ln1": z(), "attn": L.init_attention(ks[0], cfg, env),
+                "lnx": z(), "xattn": L.init_attention(ks[1], cfg, env),
+                "ln2": z(), "mlp": L.init_mlp(ks[2], cfg)}
+    if kind == "rglru":
+        return {"ln1": z(), "rec": R.init_rglru_block(ks[0], cfg, env),
+                "ln2": z(), "mlp": L.init_mlp(ks[1], cfg)}
+    if kind == "rwkv":
+        return {"ln1": z(), "ln2": z(), "mix": R.init_rwkv_block(ks[0], cfg, env)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig, env: Env) -> Pytree:
+    kE, kU, kB, kT, kEnc = jax.random.split(key, 5)
+    d, vp = cfg.d_model, vocab_pad(cfg, env)
+    pattern = cfg.block_pattern
+
+    def init_unit(k):
+        return tuple(
+            _init_block(kind, kk, cfg, env)
+            for kind, kk in zip(pattern, jax.random.split(k, len(pattern)))
+        )
+
+    params: Dict[str, Pytree] = {
+        "embed": L.dense_init(kE, vp, d).reshape(vp, d),
+        "blocks": jax.vmap(init_unit)(jax.random.split(kB, cfg.num_blocks)),
+        "tail": tuple(
+            _init_block(kind, kk, cfg, env)
+            for kind, kk in zip(cfg.pattern_tail,
+                                jax.random.split(kT, max(len(cfg.pattern_tail), 1)))
+        ),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "unembed": L.dense_init(kU, d, vp),
+    }
+    if cfg.is_encdec:
+        def init_enc(k):
+            return (_init_block("enc", k, cfg, env),)
+        params["enc_blocks"] = jax.vmap(init_enc)(
+            jax.random.split(kEnc, cfg.encoder_layers))
+        params["enc_norm"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def count_params(cfg: ModelConfig, env: Env, padded: bool = True) -> int:
+    """Exact parameter count from shapes (via eval_shape — no allocation)."""
+    import math
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, env), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if not padded:
+        d, hd = cfg.d_model, cfg.head_dim
+        dh = head_pad(cfg, env) - cfg.n_heads
+        dv = vocab_pad(cfg, env) - cfg.vocab_size
+        n_attn = sum(k in ("attn", "moe", "local", "enc") for k in
+                     cfg.block_pattern) * cfg.num_blocks
+        n_attn += sum(k in ("attn", "moe", "local") for k in cfg.pattern_tail)
+        n_attn += cfg.encoder_layers + 2 * (cfg.block_pattern.count("dec")
+                                            * cfg.num_blocks)
+        total -= n_attn * 2 * dh * hd * d  # padded wq + wo rows
+        total -= 2 * dv * d  # padded embed/unembed rows
+    return total
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind: str, cfg: ModelConfig, B: int, smax: int,
+                 enc_len: int = 0, env: Env = None) -> Optional[dict]:
+    hkv, hd = (kv_head_pad(cfg, env) if env is not None
+               else max(cfg.n_kv_heads, 1)), cfg.head_dim
+    if kind in ("attn", "moe", "enc"):
+        return {"k": jnp.zeros((B, hkv, smax, hd), jnp.bfloat16),
+                "v": jnp.zeros((B, hkv, smax, hd), jnp.bfloat16)}
+    if kind == "dec":
+        return {"k": jnp.zeros((B, hkv, smax, hd), jnp.bfloat16),
+                "v": jnp.zeros((B, hkv, smax, hd), jnp.bfloat16),
+                "xk": jnp.zeros((B, hkv, enc_len, hd), jnp.bfloat16),
+                "xv": jnp.zeros((B, hkv, enc_len, hd), jnp.bfloat16)}
+    if kind == "local":
+        w = min(cfg.local_window, smax)
+        return {"k": jnp.zeros((B, hkv, w, hd), jnp.bfloat16),
+                "v": jnp.zeros((B, hkv, w, hd), jnp.bfloat16)}
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, B)
+    if kind == "rwkv":
+        return R.rwkv_init_state(cfg, B)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, env: Env, batch: int, max_len: int) -> Pytree:
+    """Stacked (scan-compatible) cache pytree."""
+    enc_len = max_len // cfg.enc_downsample if cfg.is_encdec else 0
+
+    def unit_cache(_):
+        return tuple(_block_cache(k, cfg, batch, max_len, enc_len, env)
+                     for k in cfg.block_pattern)
+
+    stacked = jax.vmap(unit_cache)(jnp.arange(cfg.num_blocks))
+    tail = tuple(_block_cache(k, cfg, batch, max_len, enc_len, env)
+                 for k in cfg.pattern_tail)
+    return {"blocks": stacked, "tail": tail}
+
+
+def grow_caches(caches: Pytree, extra: int) -> Pytree:
+    """Extend prefill-emitted KV caches (length == prompt) by `extra` slots
+    so decode can append. Cross-attention caches (xk/xv) keep their length;
+    recurrent states have no seq dim and pass through."""
+    def grow(path, x):
+        leaf = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if leaf in ("k", "v") and x.ndim >= 4 and x.dtype == jnp.bfloat16:
+            pad = [(0, 0)] * x.ndim
+            pad[-2] = (0, extra)
+            return jnp.pad(x, pad)
+        return x
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
+                   cache, cur_len, *, window: int = 0, causal: bool = True,
+                   x_kv=None, rope: bool = True, cross: bool = False):
+    """Self/cross attention sub-layer. Returns (out, new_cache_entries)."""
+    if mode in ("train", "prefill"):
+        q, k, v = L._project_qkv(p, h, h if x_kv is None else x_kv, cfg, env)
+        if rope:
+            ap = (functools.partial(L.apply_mrope, theta=cfg.rope_theta,
+                                    sections=cfg.mrope_sections)
+                  if cfg.mrope else
+                  functools.partial(L.apply_rope, theta=cfg.rope_theta))
+            q = ap(q, positions=positions)
+            kpos = positions if x_kv is None else jnp.arange(k.shape[1])
+            if cfg.mrope and x_kv is not None:
+                kpos = positions  # cross-attn never used with mrope archs
+            k = ap(k, positions=kpos)
+        impl = env.plan.attn_impl
+        Sq = q.shape[1]
+        if impl == "xla_chunked" and Sq > env.plan.attn_q_chunk and x_kv is None:
+            if window > 0:
+                o = L.attention_window_prefill(q, k, v, cfg, env, window=window,
+                                               q_chunk=env.plan.attn_q_chunk)
+            else:
+                o = L.attention_chunked(q, k, v, cfg, env, causal=causal,
+                                        window=window,
+                                        q_chunk=env.plan.attn_q_chunk,
+                                        kv_chunk=env.plan.attn_kv_chunk)
+        elif impl == "pallas" and Sq > 128 and x_kv is None:
+            from repro.kernels.flash_attention import ops as fa_ops
+            o = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                       n_kv_heads=max(cfg.n_kv_heads, 1))
+        else:
+            o = L.attention_naive(q, k, v, cfg, causal=causal and x_kv is None,
+                                  window=window)
+        o = constrain(o @ p["wo"], env,
+                      *L.out_dims(env, o.shape[1]))
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            kc = k.transpose(0, 2, 1, 3)  # [B,Hkv,S,hd]
+            vc = v.transpose(0, 2, 1, 3)
+            if window > 0:  # keep the trailing window, ring-aligned (slot=pos%w)
+                S = kc.shape[2]
+                w = min(window, S)
+                kc = jnp.roll(kc[:, :, -w:], (S - w) % w, axis=2)
+                vc = jnp.roll(vc[:, :, -w:], (S - w) % w, axis=2)
+            if x_kv is None:
+                if env.plan.kv_cache == "seq_sharded" and window == 0:
+                    kc = constrain(kc, env, env.dpx, None, env.plan.tp_axis, None)
+                    vc = constrain(vc, env, env.dpx, None, env.plan.tp_axis, None)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = {"xk": kc, "xv": vc}
+        return o, new_cache
+
+    # ---- decode -----------------------------------------------------------
+    assert mode == "decode"
+    B = h.shape[0]
+    q, k, v = L._project_qkv(p, h, h, cfg, env)
+    x_kv = "cached-cross" if cross else None
+    if rope:
+        pos = jnp.full((B, 1), cur_len)
+        if cfg.mrope:
+            q = L.apply_mrope(q, positions[:, None, :] if positions.ndim == 2
+                              else positions, cfg.rope_theta, cfg.mrope_sections)
+            k = L.apply_mrope(k, positions[:, None, :] if positions.ndim == 2
+                              else positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+    if x_kv is not None:  # cross-attention over precomputed enc cache
+        enc_len = cache["xk"].shape[2]
+        o = L.attention_decode(q, cache["xk"], cache["xv"],
+                               jnp.asarray(enc_len - 1, jnp.int32), cfg, env)
+        return (constrain(o @ p["wo"], env, env.dpx, None, None),
+                {"xk": cache["xk"], "xv": cache["xv"]})
+    kc, vc = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # [B,Hkv,1,hd]
+    if window > 0:
+        idx = cur_len % cache["k"].shape[2]
+    else:
+        idx = cur_len
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, idx, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, idx, axis=2)
+    if env.plan.kv_cache == "seq_sharded":
+        new_k = constrain(new_k, env, env.dpx, None, env.plan.tp_axis, None)
+        new_v = constrain(new_v, env, env.dpx, None, env.plan.tp_axis, None)
+    if window > 0:
+        # ring buffer: every stored entry is within the window; mask validity
+        w = cache["k"].shape[2]
+        valid_up_to = jnp.minimum(cur_len, w - 1)
+        o = L.attention_decode(q, new_k, new_v, valid_up_to, cfg, env)
+    else:
+        o = L.attention_decode(q, new_k, new_v, cur_len, cfg, env)
+    o = constrain(o @ p["wo"], env, env.dpx, None, None)
+    return o, {"k": new_k, "v": new_v}
+
+
+def _sp(h, env: Env, mode: str):
+    """Sequence-parallel residual constraint: turns the TP all-reduce of the
+    preceding row-sharded matmul into reduce-scatter + bf16 all-gather."""
+    if (env.plan.seq_shard_acts and mode == "train" and env.tp > 1
+            and h.shape[1] % env.tp == 0):
+        return constrain(h, env, env.dpx, env.plan.tp_axis, None)
+    return h
+
+
+def _apply_block(kind: str, p, h, cfg: ModelConfig, env: Env, mode: str,
+                 positions, cache, cur_len, enc_out=None):
+    """One sub-block. Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if kind in ("attn", "moe", "local", "enc"):
+        window = cfg.local_window if kind == "local" else 0
+        causal = kind != "enc"
+        a, nc = _attn_sublayer(p["attn"], L.rms_norm(h, p["ln1"], eps), cfg, env,
+                               mode if kind != "enc" else "train",
+                               positions, cache, cur_len,
+                               window=window, causal=causal)
+        h = _sp(h + a, env, mode)
+        hn = L.rms_norm(h, p["ln2"], eps)
+        if kind == "moe":
+            y, aux = M.moe_layer(p["moe"], hn, cfg, env)
+        else:
+            y = L.mlp(p["mlp"], hn, env)
+        return h + y, nc, aux
+    if kind == "dec":
+        a, nc1 = _attn_sublayer(p["attn"], L.rms_norm(h, p["ln1"], eps), cfg, env,
+                                mode, positions, cache, cur_len)
+        h = h + a
+        a, nc2 = _attn_sublayer(p["xattn"], L.rms_norm(h, p["lnx"], eps), cfg, env,
+                                mode, positions, cache, cur_len,
+                                x_kv=enc_out, rope=False, causal=False,
+                                cross=True)
+        h = h + a
+        y = L.mlp(p["mlp"], L.rms_norm(h, p["ln2"], eps), env)
+        nc = {**(nc1 or {}), **(nc2 or {})} or None
+        return h + y, nc, aux
+    if kind == "rglru":
+        st = cache if mode == "decode" else None
+        y, ns = R.rglru_block(p["rec"], L.rms_norm(h, p["ln1"], eps), cfg, env,
+                              st, return_state=(mode == "prefill"))
+        h = _sp(h + y, env, mode)
+        y = L.mlp(p["mlp"], L.rms_norm(h, p["ln2"], eps), env)
+        return h + y, ns, aux
+    if kind == "rwkv":
+        st = cache if mode == "decode" else None
+        rs = mode == "prefill"
+        y, ns_tm = R.rwkv_time_mix(p["mix"], L.rms_norm(h, p["ln1"], eps),
+                                   cfg, env, st, return_state=rs)
+        h = _sp(h + y, env, mode)
+        y, ns_cm = R.rwkv_channel_mix(p["mix"], L.rms_norm(h, p["ln2"], eps),
+                                      cfg, env, st, return_state=rs)
+        h = h + y
+        nc = None
+        if mode in ("decode", "prefill") and ns_tm is not None:
+            nc = {**ns_tm, "cm_prev": ns_cm}
+        return h, nc, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack runner
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(fn, env: Env):
+    if env.plan.remat == "nothing":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if env.plan.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
+               positions, caches=None, cur_len=None, enc_out=None,
+               pattern: Optional[Tuple[str, ...]] = None):
+    """Scan the repeating unit, then run the unrolled tail.
+
+    Returns (h, new_caches, aux). caches/new_caches structure:
+    {"blocks": stacked-per-unit tuple, "tail": tuple} or None.
+    """
+    pattern = cfg.block_pattern if pattern is None else pattern
+    use_cache = mode in ("prefill", "decode")
+
+    def apply_unit(hh, p_unit, c_unit):
+        aux = jnp.zeros((), jnp.float32)
+        ncs = []
+        for i, kind in enumerate(pattern):
+            if mode == "decode":
+                c = c_unit[i]
+            elif mode == "prefill":
+                c = {}
+            else:
+                c = None
+            hh, nc, a = _apply_block(kind, p_unit[i], hh, cfg, env, mode,
+                                     positions, c, cur_len, enc_out)
+            aux = aux + a
+            ncs.append(nc)
+        return hh, (tuple(ncs) if use_cache else 0), aux
+
+    apply_unit_w = _remat_wrap(apply_unit, env) if mode == "train" else apply_unit
+    trip = jax.tree.leaves(stacked)[0].shape[0]
+
+    if mode == "decode" and caches is not None:
+        xs = (stacked, caches["blocks"])
+    else:
+        xs = (stacked, jnp.zeros((trip,), jnp.int32))
+
+    sp = (env.plan.seq_shard_acts and mode == "train" and env.tp > 1
+          and h.shape[1] % env.tp == 0)
+
+    def body(carry, xs_):
+        p_unit, c_unit = xs_
+        hh, aux = carry
+        hh, ncs, a = apply_unit_w(hh, p_unit,
+                                  c_unit if mode == "decode" else None)
+        if sp:  # sequence-parallel residual stream between units
+            hh = constrain(hh, env, env.dpx, env.plan.tp_axis, None)
+        return (hh, aux + a), ncs
+
+    if (env.plan.seq_shard_acts and mode == "train" and env.tp > 1
+            and h.shape[1] % env.tp == 0):
+        h = constrain(h, env, env.dpx, env.plan.tp_axis, None)
+    (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs,
+                                unroll=env.plan.scan_unroll)
+
+    new_tail = []
+    tail_caches = (caches or {}).get("tail", ())
+    for i, kind in enumerate(pattern if tail is None else
+                             cfg.pattern_tail):
+        if mode == "decode":
+            c = tail_caches[i]
+        elif mode == "prefill":
+            c = {}
+        else:
+            c = None
+        h, nc, a = _apply_block(kind, tail[i], h, cfg, env, mode, positions, c,
+                                cur_len, enc_out)
+        aux = aux + a
+        new_tail.append(nc)
+
+    new_caches = {"blocks": ys, "tail": tuple(new_tail)} if use_cache else None
+    return h, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def build_mrope_positions(S: int, nv: int, cur_len=None):
+    """Qwen2-VL 3D positions: vision patches on a (h,w) grid at t=0; text
+    continues linearly from grid+index. Returns [1,S,3] (or [1,1,3] decode)."""
+    g = max(int(math_isqrt(nv)), 1)
+    if cur_len is not None:
+        p = g + cur_len - nv
+        return jnp.broadcast_to(p, (1, 1, 3)).astype(jnp.int32)
+    idx = jnp.arange(S)
+    is_vis = idx < nv
+    t = jnp.where(is_vis, 0, g + idx - nv)
+    hh = jnp.where(is_vis, idx // g, g + idx - nv)
+    ww = jnp.where(is_vis, idx % g, g + idx - nv)
+    return jnp.stack([t, hh, ww], -1)[None].astype(jnp.int32)
+
+
+def math_isqrt(n: int) -> int:
+    import math
+    return math.isqrt(max(n, 0))
+
+
+def forward(params, tokens, cfg: ModelConfig, env: Env, mode: str = "train",
+            caches=None, cur_len=None, vision_embeds=None, frames=None):
+    """tokens: [B,S] int32 (decode: [B,1]).
+
+    vision_embeds: [B,Nv,d] (vlm stub), frames: [B,Se,d] (whisper stub).
+    Returns (logits [B,S,Vpad], new_caches, aux).
+    """
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    h = constrain(h, env, env.dpx, None, None)
+    B, S = tokens.shape
+
+    positions = jnp.arange(S)
+    enc_out = None
+
+    if cfg.family == "vlm" and mode != "decode":
+        assert vision_embeds is not None
+        h = jnp.concatenate([vision_embeds.astype(h.dtype), h], axis=1)
+        h = constrain(h, env, env.dpx, None, None)
+        S = h.shape[1]
+        positions = build_mrope_positions(S, cfg.num_vision_embeds)
+    elif cfg.family == "vlm":
+        positions = build_mrope_positions(1, cfg.num_vision_embeds,
+                                          cur_len=cur_len)
+    elif mode == "decode":
+        positions = None  # per-sublayer from cur_len
+
+    if cfg.is_encdec and mode != "decode":
+        assert frames is not None
+        eo = constrain(frames.astype(h.dtype), env, env.dpx, None, None)
+        enc_pos = jnp.arange(eo.shape[1])
+        eo, _, _ = _run_stack(params["enc_blocks"], (), eo, cfg, env, "train",
+                              enc_pos, pattern=("enc",))
+        enc_out = L.rms_norm(eo, params["enc_norm"], cfg.norm_eps)
+
+    h, new_caches, aux = _run_stack(params["blocks"], params["tail"], h, cfg,
+                                    env, mode, positions, caches, cur_len,
+                                    enc_out)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["unembed"]
+    logits = constrain(logits, env, env.dpx, None, env.plan.tp_axis)
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg: ModelConfig, env: Env, aux_weight: float = 0.01):
+    """batch: {"tokens": [B,S], "labels": [B,S]} (+ modality stubs).
+
+    Cross-entropy over the (vocab-padded, possibly TP-sharded) logits, with
+    padded vocab columns masked via an iota comparison (GSPMD-friendly: no
+    gather over the sharded vocab dim).
+    """
+    logits, _, aux = forward(params, batch["tokens"], cfg, env, mode="train",
+                             vision_embeds=batch.get("vision_embeds"),
+                             frames=batch.get("frames"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # loss over the text region only
+        logits = logits[:, cfg.num_vision_embeds:]
+    vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    viota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vp), 2)
+    lf = jnp.where(viota < cfg.vocab_size, lf, -1e30)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.sum(jnp.where(viota == labels[..., None], lf, 0.0), axis=-1)
+    loss = jnp.mean(logz - ll)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}

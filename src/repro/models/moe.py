@@ -1,0 +1,201 @@
+"""Mixture-of-Experts layer: sort-based (dropless-style, capacity-padded)
+dispatch with two production sharding modes (DESIGN.md §4):
+
+  "ep": experts sharded over the TP axis (E % tp == 0, e.g. llama4-scout
+        16e/16): tokens move to their expert's shard via lax.all_to_all
+        inside shard_map — GShard-faithful expert parallelism.
+  "tp": TP-within-expert (ff sharded over the TP axis; e.g. grok-1 8e on a
+        16-way axis, where EP is inapplicable): every shard computes all
+        experts on its ff slice; psum after the down-projection.
+
+Dispatch is sort-based (argsort by expert id + capacity-clipped scatter),
+not the one-hot [G,S,E,C] einsum — the one-hot mask alone would be ~20 TB
+for grok-1 train_4k. Overflowing tokens are dropped (pass through the
+residual), standard GShard behavior at capacity_factor 1.25.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.env import Env
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, env: Env) -> dict:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], d, E, dtype=jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, ff))(jax.random.split(ks[1], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, ff))(jax.random.split(ks[2], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, ff, d))(jax.random.split(ks[3], E)),
+    }
+
+
+def _capacity(n_tokens: int, E: int, k: int, cf: float) -> int:
+    if n_tokens * k <= E:  # decode-scale dispatch: dropless worst case,
+        return n_tokens * k  # no MXU alignment padding
+    c = int(n_tokens * k * cf / E) + 1
+    return max(8, -(-c // 8) * 8)  # multiple of 8, >= 8
+
+
+def _route(x_flat, router_w, E: int, k: int):
+    """Returns (e_sorted, tok_sorted, gate_sorted, keep_rank, aux_loss)."""
+    n = x_flat.shape[0]
+    logits = (x_flat.astype(jnp.float32) @ router_w)  # [N,E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    gval, gidx = jax.lax.top_k(gates, k)  # [N,k]
+    gval = gval / jnp.maximum(jnp.sum(gval, -1, keepdims=True), 1e-9)
+    e_flat = gidx.reshape(-1)
+    g_flat = gval.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, tok_s, g_s = e_flat[order], tok_flat[order], g_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - starts[e_s]
+    # Switch-style load-balance aux loss: E * sum(frac_tokens * frac_prob)
+    frac_tok = counts.astype(jnp.float32) / (n * k)
+    frac_prob = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(frac_tok * frac_prob)
+    return e_s, tok_s, g_s, rank, aux
+
+
+def _dispatch(x_flat, router_w, E: int, k: int, capacity: int):
+    e_s, tok_s, g_s, rank, aux = _route(x_flat, router_w, E, k)
+    keep = rank < capacity
+    dest = jnp.where(keep, e_s * capacity + rank, E * capacity)
+    vals = x_flat[tok_s] * keep[:, None].astype(x_flat.dtype)
+    buf = jnp.zeros((E * capacity + 1, x_flat.shape[1]), x_flat.dtype)
+    buf = buf.at[dest].set(vals)
+    return buf[: E * capacity], (tok_s, g_s, dest, keep), aux
+
+
+def _combine(expert_out, meta, n_tokens: int):
+    """expert_out [E*C, d] -> y [N, d]."""
+    tok_s, g_s, dest, keep = meta
+    padded = jnp.concatenate(
+        [expert_out, jnp.zeros((1, expert_out.shape[1]), expert_out.dtype)], 0
+    )
+    rows = padded[dest] * (g_s * keep).astype(expert_out.dtype)[:, None]
+    y = jnp.zeros((n_tokens, expert_out.shape[1]), expert_out.dtype)
+    return y.at[tok_s].add(rows)
+
+
+def _expert_ffn(buf, wg, wu, wd):
+    """buf [E, C, d]; weights [E, d, ff]/[E, ff, d] (possibly ff-sharded)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _gather_fsdp(w, axes, dim: int):
+    for a in axes:
+        w = jax.lax.all_gather(w, a, axis=dim, tiled=True)
+    return w
+
+
+def moe_layer(p, x, cfg: ModelConfig, env: Env):
+    """x: [B, S, d] (global). Returns (y, aux_loss)."""
+    m = cfg.moe
+    E, k, cf = m.num_experts, m.top_k, m.capacity_factor
+    B, S, d = x.shape
+
+    if env.mesh is None:
+        flat = x.reshape(B * S, d)
+        cap = _capacity(B * S, E, k, cf)
+        buf, meta, aux = _dispatch(flat, p["router"], E, k, cap)
+        out = _expert_ffn(buf.reshape(E, cap, d), p["w_gate"], p["w_up"], p["w_down"])
+        y = _combine(out.reshape(E * cap, d), meta, B * S)
+        return y.reshape(B, S, d), aux
+
+    mode = env.plan.resolve_moe(cfg, env.tp)
+    dpx = env.dpx if (env.dpx and B % env.dp == 0) else ()
+    dp_local = env.dp if dpx else 1
+    tp_axis = env.tp_axis
+    # EP: also split tokens over the TP axis before dispatch — otherwise every
+    # model shard dispatches the SAME token set and each expert receives tp
+    # redundant copies (measured 12x wasted expert FLOPs; EXPERIMENTS §Perf).
+    seq_split = (mode == "ep" and tp_axis is not None and S % max(env.tp, 1) == 0
+                 and S >= env.tp)
+    n_local = (B // dp_local) * (S // (env.tp if seq_split else 1))
+    cap = _capacity(n_local, E, k, cf)
+    fsdp_axes = tuple(a for a in dpx) if env.plan.fsdp else ()
+
+    xspec = env.spec(dpx or None, tp_axis if seq_split else None, None)
+    rspec = env.spec(None, None)
+
+    if mode == "ep":
+        # experts sharded over tp_axis; weight d-dim FSDP-sharded over data
+        wspec_in = env.spec(tp_axis, fsdp_axes or None, None)
+        wspec_out = env.spec(tp_axis, None, fsdp_axes or None)
+
+        def body(xl, wr, wg, wu, wd):
+            Bl, Sl, _ = xl.shape
+            flat = xl.reshape(Bl * Sl, d)
+            buf, meta, aux = _dispatch(flat, wr, E, k, cap)
+            buf = buf.reshape(E, cap, d)
+            # route tokens to their expert's shard
+            buf = jax.lax.all_to_all(buf, tp_axis, split_axis=0, concat_axis=1,
+                                     tiled=True)  # [E/tp, tp*cap, d]
+            if fsdp_axes:
+                wg = _gather_fsdp(wg, fsdp_axes, 1)
+                wu = _gather_fsdp(wu, fsdp_axes, 1)
+                wd = _gather_fsdp(wd, fsdp_axes, 2)
+            out = _expert_ffn(buf, wg, wu, wd)  # [E/tp, tp*cap, d]
+            out = jax.lax.all_to_all(out, tp_axis, split_axis=1, concat_axis=0,
+                                     tiled=True)  # [E, cap, d]
+            y = _combine(out.reshape(E * cap, d), meta, Bl * Sl)
+            return y.reshape(Bl, Sl, d), aux
+
+    else:  # "tp": ff sharded; all shards compute all experts on their slice
+        wspec_in = env.spec(None, fsdp_axes or None, tp_axis)
+        wspec_out = env.spec(None, tp_axis, fsdp_axes or None)
+
+        def body(xl, wr, wg, wu, wd):
+            Bl, Sl, _ = xl.shape
+            flat = xl.reshape(Bl * Sl, d)
+            buf, meta, aux = _dispatch(flat, wr, E, k, cap)
+            if fsdp_axes:
+                wg = _gather_fsdp(wg, fsdp_axes, 1)
+                wu = _gather_fsdp(wu, fsdp_axes, 1)
+                wd = _gather_fsdp(wd, fsdp_axes, 2)  # d dim (ff stays sharded)
+            out = _expert_ffn(buf.reshape(E, cap, d), wg, wu, wd)
+            if tp_axis is not None:
+                out = jax.lax.psum(out, tp_axis)  # ff was sharded
+            y = _combine(out.reshape(E * cap, d), meta, Bl * Sl)
+            return y.reshape(Bl, Sl, d), aux
+
+    fn = shard_map(
+        body,
+        mesh=env.mesh,
+        in_specs=(xspec, rspec, wspec_in, wspec_in, wspec_out),
+        out_specs=(xspec, env.spec()),
+        check_rep=False,
+    )
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, jnp.mean(aux)
+
+
+def moe_param_specs(cfg: ModelConfig, env: Env, mode: str):
+    """PartitionSpecs for the stored MoE weights (matches moe_layer in_specs)."""
+    fsdp = env.plan.fsdp
+    if mode == "ep":
+        return {
+            "router": env.spec(None, None),
+            "w_gate": env.spec(env.plan.tp_axis, "data" if fsdp else None, None),
+            "w_up": env.spec(env.plan.tp_axis, "data" if fsdp else None, None),
+            "w_down": env.spec(env.plan.tp_axis, None, "data" if fsdp else None),
+        }
+    return {
+        "router": env.spec(None, None),
+        "w_gate": env.spec(None, "data" if fsdp else None, env.plan.tp_axis),
+        "w_up": env.spec(None, "data" if fsdp else None, env.plan.tp_axis),
+        "w_down": env.spec(None, env.plan.tp_axis, "data" if fsdp else None),
+    }

@@ -1,0 +1,318 @@
+"""Recurrent layers: Griffin RG-LRU block and RWKV-6 (Finch) time/channel mix.
+
+Training/prefill use parallel forms (associative scan for RG-LRU, chunked
+recurrence for RWKV-6); decode uses the exact single-step recurrences with
+explicit carried state. The Pallas kernels (kernels/rglru, kernels/rwkv6)
+are the TPU-tiled versions of the same math, validated against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.env import Env, constrain, out_dims
+from repro.models.layers import dense_init
+
+# ---------------------------------------------------------------------------
+# Griffin RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+_GATE_BLOCKS = 16  # block-diagonal recurrence gates (Griffin); aligns with TP
+
+
+def init_rglru_block(key, cfg: ModelConfig, env: Env) -> dict:
+    d, w, cw = cfg.d_model, cfg.rglru_width, cfg.conv_width
+    g = _GATE_BLOCKS if w % _GATE_BLOCKS == 0 else 1
+    bw = w // g
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(-jnp.log(jax.random.uniform(
+        ks[6], (w,), jnp.float32, 0.9, 0.999)) / _RGLRU_C))
+    bg = lambda k: (jax.random.normal(k, (g, bw, bw), jnp.float32)
+                    / math.sqrt(bw)).astype(jnp.bfloat16)
+    return {
+        "w_in": dense_init(ks[0], d, w),
+        "w_gate_in": dense_init(ks[1], d, w),
+        "conv_w": (jax.random.normal(ks[2], (cw, w), jnp.float32) / math.sqrt(cw)
+                   ).astype(jnp.bfloat16),
+        "w_rgate": bg(ks[3]),  # block-diagonal [G, w/G, w/G]
+        "w_igate": bg(ks[4]),
+        "lam": lam,
+        "w_out": dense_init(ks[5], w, d),
+    }
+
+
+def _block_diag_matmul(u, wb):
+    """u [B,S,w] x block-diag wb [G, w/G, w/G] -> [B,S,w] (no cross-block
+    terms: each TP shard holds whole blocks -> no collective)."""
+    B, S, w = u.shape
+    g, bw, _ = wb.shape
+    ub = u.reshape(B, S, g, bw)
+    return jnp.einsum("bsgi,gij->bsgj", ub, wb).reshape(B, S, w)
+
+
+def _causal_conv1d(x, conv_w, state=None):
+    """Depthwise causal conv. x [B,S,w], conv_w [cw,w]. state [B,cw-1,w]."""
+    cw = conv_w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * conv_w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_gates(p, u):
+    """u [B,S,w] (f32) -> (a, b): h_t = a*h + b."""
+    r = jax.nn.sigmoid(_block_diag_matmul(u, p["w_rgate"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag_matmul(u, p["w_igate"].astype(jnp.float32)))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * u)
+    return a, b
+
+
+def rglru_scan(a, b, h0=None):
+    """Parallel linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    a, b: [B, S, w] f32. h0: [B, w] or None (zeros). Returns h [B,S,w].
+    """
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg: ModelConfig, env: Env, state=None,
+                return_state: bool = False):
+    """Griffin recurrent block. x [B,S,d] -> (y [B,S,d], new_state).
+
+    state = {"h": [B,w], "conv": [B,cw-1,w]} for decode; None for train.
+    return_state=True (prefill): returns the post-prompt state for decoding.
+    """
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u_pre = x @ p["w_in"]
+    u_pre = constrain(u_pre, env, env.dpx, None, env.plan.tp_axis)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv1d(u_pre, p["conv_w"], conv_state)
+    a, b = _rglru_gates(p, u.astype(jnp.float32))
+    if state is None:
+        h = rglru_scan(a, b)
+        new_state = None
+        if return_state:
+            cw = p["conv_w"].shape[0]
+            tail = u_pre[:, -(cw - 1):, :].astype(jnp.bfloat16)
+            if tail.shape[1] < cw - 1:  # prompt shorter than conv window
+                tail = jnp.pad(tail, ((0, 0), (cw - 1 - tail.shape[1], 0), (0, 0)))
+            new_state = {"h": h[:, -1, :], "conv": tail}
+    else:
+        h = a * state["h"][:, None, :] + b  # S == 1
+        new_state = {"h": h[:, -1, :], "conv": new_conv}
+    y = (gate * h.astype(gate.dtype)) @ p["w_out"]
+    return constrain(y, env, *out_dims(env, y.shape[1])), new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> dict:
+    w, cw = cfg.rglru_width, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, w), jnp.bfloat16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+_DECAY_LORA = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig, env: Env) -> dict:
+    d, H, hd, ff = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+    assert H * hd == d
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # lerp for r,k,v,g,w
+        "w_r": dense_init(ks[0], d, d),
+        "w_k": dense_init(ks[1], d, d),
+        "w_v": dense_init(ks[2], d, d),
+        "w_g": dense_init(ks[3], d, d),
+        "w_o": dense_init(ks[4], d, d),
+        "decay_base": -6.0 + jax.random.normal(ks[5], (d,), jnp.float32) * 0.3,
+        "decay_A": dense_init(ks[6], d, _DECAY_LORA, dtype=jnp.float32),
+        "decay_B": dense_init(ks[7], _DECAY_LORA, d, dtype=jnp.float32),
+        "bonus_u": jax.random.normal(ks[8], (H, hd), jnp.float32) * 0.3,
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head groupnorm scale
+        # channel-mix
+        "cmu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "cm_k": dense_init(ks[9], d, ff),
+        "cm_v": dense_init(ks[10], ff, d),
+        "cm_r": dense_init(ks[11], d, d),
+    }
+
+
+def _token_shift(x, prev=None):
+    """x_{t-1} with x_{-1} = prev (decode) or 0 (train)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]], 1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def rwkv_decay(p, xw):
+    """Data-dependent decay (the Finch contribution): log w_t, [B,S,d] f32."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"]) @ p["decay_B"]
+    return -jnp.exp(jnp.clip(p["decay_base"] + lora, -20.0, 8.0))  # log w <= 0
+
+
+def _group_norm_heads(x, scale, H, eps=1e-5):
+    """x [B,S,H,hd] normalized per head."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    B, S = x.shape[0], x.shape[1]
+    return (y.reshape(B, S, -1) * scale).astype(x.dtype)
+
+
+def rwkv_time_mix_chunked(r, k, v, logw, u, chunk: int = 32, s0=None,
+                          unroll=1):
+    """Exact chunked WKV6 recurrence.
+
+    r,k,v: [B,S,H,hd]; logw: [B,S,H,hd] (<=0); u: [H,hd].
+    Returns (o [B,S,H,hd], s_final [B,H,hd,hd]).
+
+    o_t = r_t^T S_{t-1} + (r_t . (u*k_t)) v_t ;  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Within a chunk the pairwise decay D[t,s,c] = exp(clip(L_{t-1}-L_s)) is
+    formed explicitly (stable; the Pallas kernel uses the factorized form
+    with per-block rescaling).
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    rf = r.astype(jnp.float32).reshape(B, n, chunk, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, n, chunk, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, n, chunk, H, hd)
+    lw = logw.reshape(B, n, chunk, H, hd)
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    t_idx = jnp.arange(chunk)
+    strict = (t_idx[:, None] > t_idx[None, :]).astype(jnp.float32)  # [t,s]
+
+    def step(S_in, xs):
+        rc, kc, vc, lc = xs  # [B,chunk,H,hd] each
+        L = jnp.cumsum(lc, axis=1)  # L_t = sum_{u<=t} log w_u
+        Lprev = L - lc  # L_{t-1}
+        # intra-chunk: A[t,s] = sum_c r[t,c] k[s,c] exp(L_{t-1,c} - L_{s,c}), s<t
+        diff = Lprev[:, :, None, :, :] - L[:, None, :, :, :]  # [B,t,s,H,hd]
+        D = jnp.exp(jnp.clip(diff, -60.0, 0.0))
+        A = jnp.einsum("bthc,bshc,btshc->bhts", rc, kc, D)
+        A = A * strict[None, None]
+        Au = jnp.einsum("bthc,bthc->bth", rc, u[None, None] * kc)  # diagonal
+        o = jnp.einsum("bhts,bshc->bthc", A, vc)
+        o = o + Au[..., None] * vc  # diagonal (bonus-u) term
+        # inter-chunk: contribution of carried state
+        rP = rc * jnp.exp(jnp.clip(Lprev, -60.0, 0.0))
+        o = o + jnp.einsum("bthc,bhcd->bthd", rP, S_in)
+        # state update: S_out = diag(exp(L_T)) S_in + sum_s diag(exp(L_T - L_s)) k_s v_s^T
+        LT = L[:, -1]  # [B,H,hd]
+        kT = kc * jnp.exp(jnp.clip(LT[:, None] - L, -60.0, 0.0))
+        S_out = jnp.exp(jnp.clip(LT, -60.0, 0.0))[..., None] * S_in + jnp.einsum(
+            "bshc,bshd->bhcd", kT, vc)
+        return S_out, o
+
+    xs = (rf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4))
+    s_fin, outs = jax.lax.scan(step, s0, xs, unroll=unroll)
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return o.astype(r.dtype), s_fin
+
+
+def rwkv_time_mix_step(r, k, v, logw, u, s):
+    """Single decode step. r,k,v,logw: [B,1,H,hd]; s: [B,H,hd,hd]."""
+    rf, kf, vf = (a.astype(jnp.float32)[:, 0] for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32)[:, 0])  # [B,H,hd]
+    att = s + (u[None] * kf)[..., None] * vf[..., None, :]  # [B,H,hd,hd]
+    o = jnp.einsum("bhc,bhcd->bhd", rf, att)
+    s_new = w[..., None] * s + kf[..., None] * vf[..., None, :]
+    return o[:, None].astype(r.dtype), s_new
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), jnp.bfloat16),
+        "cm_prev": jnp.zeros((batch, d), jnp.bfloat16),
+    }
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, env: Env, state=None,
+                  return_state: bool = False):
+    """x [B,S,d] -> (y [B,S,d], new_state_partial)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    prev = None if state is None else state["tm_prev"]
+    xs = _token_shift(x, prev)
+    xr = _lerp(x, xs, p["mu"][0])
+    xk = _lerp(x, xs, p["mu"][1])
+    xv = _lerp(x, xs, p["mu"][2])
+    xg = _lerp(x, xs, p["mu"][3])
+    xw = _lerp(x, xs, p["mu"][4])
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = rwkv_decay(p, xw).reshape(B, S, H, hd)
+    r = constrain(r, env, env.dpx, None, env.plan.tp_axis, None)
+    k = constrain(k, env, env.dpx, None, env.plan.tp_axis, None)
+    v = constrain(v, env, env.dpx, None, env.plan.tp_axis, None)
+    if state is None:
+        o, s_fin = rwkv_time_mix_chunked(
+            r, k, v, logw, p["bonus_u"], chunk=env.plan.rwkv_chunk,
+            unroll=True if env.plan.inner_unroll else 1)
+        new_state = ({"s": s_fin, "tm_prev": x[:, -1, :].astype(jnp.bfloat16)}
+                     if return_state else None)
+    else:
+        o, s_fin = rwkv_time_mix_step(r, k, v, logw, p["bonus_u"], state["s"])
+        new_state = {"s": s_fin, "tm_prev": x[:, -1, :]}
+    o = _group_norm_heads(o, p["ln_x"], H)
+    y = (o * g.astype(o.dtype)) @ p["w_o"]
+    return constrain(y, env, *out_dims(env, y.shape[1])), new_state
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, env: Env, state=None,
+                     return_state: bool = False):
+    prev = None if state is None else state["cm_prev"]
+    xs = _token_shift(x, prev)
+    xk = _lerp(x, xs, p["cmu"][0])
+    xr = _lerp(x, xs, p["cmu"][1])
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    kk = constrain(kk, env, env.dpx, None, env.plan.tp_axis)
+    hv = kk @ p["cm_v"]
+    rr = jax.nn.sigmoid(xr @ p["cm_r"])
+    y = rr * hv
+    new = (x[:, -1, :].astype(jnp.bfloat16)
+           if (state is not None or return_state) else None)
+    return constrain(y, env, *out_dims(env, y.shape[1])), new

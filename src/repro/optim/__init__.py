@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    global_norm,
+    make_train_state,
+)
+from repro.optim.compress import ef_psum_grads, init_error  # noqa: F401

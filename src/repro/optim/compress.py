@@ -1,0 +1,63 @@
+"""Error-feedback int8 gradient compression for the cross-pod sync axis.
+
+Real deployments compress the DCN-crossing gradient traffic; XLA collectives
+have no int8-allreduce wire format, so this module reproduces the *numerics*
+(per-row int8 quantization with error feedback accumulating the residual)
+inside shard_map — the convergence behavior is faithful, the wire saving is
+modeled in the roofline collective term (launch/roofline.py applies the 4x
+byte discount when plan.grad_compression == "int8_ef").
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _q(x):
+    if x.ndim < 2:
+        return x, None
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq(q, scale):
+    return q if scale is None else q.astype(jnp.float32) * scale
+
+
+def compress_decompress(x, err):
+    """One EF-compression round on a local tensor.
+
+    Returns (decompressed, new_err): decompressed is what the wire would
+    carry (int8-quantized view of x+err); new_err is the residual."""
+    xf = x.astype(jnp.float32) + err
+    q, s = _q(xf)
+    dq = _dq(q, s)
+    return dq, xf - dq
+
+
+def ef_psum_grads(grads: Pytree, err: Pytree, axis_name: str
+                  ) -> Tuple[Pytree, Pytree]:
+    """Error-feedback compressed psum over `axis_name` (use inside shard_map).
+
+    Each shard quantizes (grad + carried error) to int8, the quantized views
+    are summed across the axis, and the local quantization residual feeds
+    back next step."""
+    def one(g, e):
+        dq, new_e = compress_decompress(g, e)
+        return jax.lax.pmean(dq, axis_name), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def init_error(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,203 @@
+"""Sharding rules: DP/FSDP/TP/EP/SP partition specs for every tree in the
+system (params, optimizer state, KV/state caches, batches).
+
+One resolver maps a tree path + rank to a PartitionSpec; every dim whose
+size the mesh axis does not divide falls back to replication (validated
+against the actual mesh), so the same rules serve the production 16x16 mesh,
+subprocess 8-device test meshes, and oversubscribed single-CPU sims.
+
+Layout summary (DESIGN.md §4):
+  column weights  [d_in, d_out]    P(fsdp, tp)     (QKV, MLP-in, ...)
+  row weights     [d_in, d_out]    P(tp, fsdp)     (O, MLP-out, ...)
+  embed/unembed                    P(None, tp)
+  MoE experts                      moe_param_specs (ep|tp mode)
+  KV caches (decode)               seq-sharded over tp (flash-decoding)
+  recurrent states                 width/heads over tp
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.env import Env
+
+Pytree = Any
+
+_COL = {"wq", "w_gate", "w_up", "w_in", "w_gate_in", "w_r", "w_k", "w_v",
+        "w_g", "cm_k", "cm_r", "decay_B"}
+_ROW = {"wo", "w_down", "w_out", "cm_v", "w_o"}
+_REPL_SMALL = {"bk", "bv", "q_norm", "k_norm", "ln1", "ln2", "lnx", "ln_x",
+               "final_norm", "enc_norm", "mu", "cmu", "decay_A", "router"}
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _param_dims(names, cfg: ModelConfig, env: Env) -> Tuple:
+    """Spec dims for an (unstacked) parameter leaf."""
+    leaf = names[-1]
+    tp = env.plan.tp_axis
+    fs = ("pod", "data") if env.plan.fsdp else None
+    if "moe" in names and leaf in (_MOE_LEAVES | {"router"}):
+        mode = env.plan.resolve_moe(cfg, max(env.tp, 1))
+        if leaf == "router":
+            return (None, None)
+        if mode == "ep":
+            return {"w_gate": (tp, fs, None), "w_up": (tp, fs, None),
+                    "w_down": (tp, None, fs)}[leaf]
+        return {"w_gate": (None, fs, tp), "w_up": (None, fs, tp),
+                "w_down": (None, tp, fs)}[leaf]
+    if leaf in ("embed", "unembed"):
+        return (None, tp)
+    if leaf in _COL:
+        return (fs, tp)
+    if leaf in _ROW:
+        return (tp, fs)
+    if leaf in ("wk", "wv"):
+        return (fs, None)  # small KV projections: replicate columns (GQA)
+    if leaf == "bq":
+        return (tp,)
+    if leaf == "conv_w":
+        return (None, tp)
+    if leaf in ("w_rgate", "w_igate"):
+        return (tp, None, None)  # block-diagonal gates: blocks over tp
+    if leaf in ("lam", "decay_base"):
+        return (tp,)
+    if leaf == "bonus_u":
+        return (tp, None)
+    return None  # -> replicate
+
+
+def _cache_dims(names, rank: int, cfg: ModelConfig, env: Env) -> Tuple:
+    leaf = names[-1]
+    tp = env.plan.tp_axis
+    dp = env.dpx or None
+    seq_sh = env.plan.kv_cache == "seq_sharded"
+    if leaf in ("k", "v", "xk", "xv"):  # [B, Hkv, S, hd]
+        return (dp, None, tp if seq_sh else None, None)
+    if leaf == "h":  # rglru state [B, w]
+        return (dp, tp)
+    if leaf == "conv":  # [B, cw-1, w]
+        return (dp, None, tp)
+    if leaf == "s":  # rwkv state [B, H, hd, hd]
+        return (dp, tp, None, None)
+    if leaf in ("tm_prev", "cm_prev"):  # [B, d]
+        return (dp, None)
+    return None
+
+
+def _resolve(names, rank: int, cfg: ModelConfig, env: Env,
+             kind: str) -> Tuple:
+    leaf = names[-1]
+    if leaf == "step":
+        return ()
+    # optimizer state wrapping: .../<param>/q or /s  (int8 moments)
+    if kind == "state" and leaf in ("q", "s") and len(names) >= 2:
+        base = _resolve(names[:-1], rank if leaf == "q" else rank + 1, cfg,
+                        env, "state")
+        return base if leaf == "q" else base[:-1]
+    if kind == "cache":
+        dims = _cache_dims(names, rank, cfg, env)
+    else:
+        dims = _param_dims(names, cfg, env)
+    if dims is None:
+        dims = (None,) * rank
+    # stacked leading scan dim for repeated blocks
+    stacked = any(n in ("blocks", "enc_blocks") for n in names[:-1])
+    if kind == "cache":
+        stacked = "blocks" in names[:1]
+    if stacked and len(dims) == rank - 1:
+        dims = (None,) + dims
+    if len(dims) != rank:  # rank mismatch (e.g. replicated default)
+        dims = tuple(dims[:rank]) + (None,) * max(0, rank - len(dims))
+    return dims
+
+
+def _validated(dims, shape, env: Env) -> P:
+    """Drop axis assignments that do not divide the dim size."""
+    if env.mesh is None:
+        return P()
+    out = []
+    for size, d in zip(shape, dims):
+        if d is None:
+            out.append(None)
+            continue
+        axes = d if isinstance(d, tuple) else (d,)
+        axes = tuple(a for a in axes if a in env.axis_names)
+        if not axes:
+            out.append(None)
+            continue
+        n = 1
+        for a in axes:
+            n *= env.mesh.shape[a]
+        out.append((d if not isinstance(d, tuple) else axes)
+                   if (n > 0 and size % n == 0) else None)
+    return P(*out)
+
+
+def _tree_specs(struct: Pytree, cfg: ModelConfig, env: Env, kind: str
+                ) -> Pytree:
+    def one(path, leaf):
+        names = _names(path)
+        dims = _resolve(names, len(leaf.shape), cfg, env, kind)
+        return _validated(dims, leaf.shape, env)
+
+    return jax.tree_util.tree_map_with_path(one, struct)
+
+
+# ---- public API --------------------------------------------------------------
+
+
+def param_specs(params_struct: Pytree, cfg: ModelConfig, env: Env) -> Pytree:
+    return _tree_specs(params_struct, cfg, env, "param")
+
+
+def state_specs(state_struct: Pytree, cfg: ModelConfig, env: Env) -> Pytree:
+    """Train state {"params":…, "opt": {step, master, m, v}}."""
+    return _tree_specs(state_struct, cfg, env, "state")
+
+
+def cache_specs(cache_struct: Pytree, cfg: ModelConfig, env: Env) -> Pytree:
+    return _tree_specs(cache_struct, cfg, env, "cache")
+
+
+def batch_specs(batch_struct: Pytree, cfg: ModelConfig, shape: ShapeConfig,
+                env: Env) -> Pytree:
+    dp = env.dpx if (env.dp and shape.global_batch % max(env.dp, 1) == 0) \
+        else None
+
+    def one(path, leaf):
+        dims = (dp,) + (None,) * (len(leaf.shape) - 1)
+        return _validated(dims, leaf.shape, env)
+
+    return jax.tree_util.tree_map_with_path(one, batch_struct)
+
+
+def to_shardings(specs: Pytree, env: Env) -> Optional[Pytree]:
+    if env.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(env.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def apply_shardings(tree: Pytree, specs: Pytree, env: Env) -> Pytree:
+    """device_put a concrete tree with the resolved shardings."""
+    sh = to_shardings(specs, env)
+    if sh is None:
+        return tree
+    return jax.tree.map(jax.device_put, tree, sh)

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# pytest must see ONE device (the dry-run alone forces 512 in subprocesses)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.configs.base import ParallelPlan
+from repro.models.env import Env
+
+
+@pytest.fixture(scope="session")
+def local_env():
+    plan = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
+                        kv_cache="replicated")
+    return Env(mesh=None, plan=plan)
+
+
+@pytest.fixture()
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,122 @@
+"""The paper's behaviors end-to-end: auto-registration -> rendered hostfile
+-> mesh; auto-scaling; failure handling; stragglers (hypothesis properties
+included)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ClusterImage, StragglerPolicy, TargetSizePolicy,
+                        VirtualCluster)
+from repro.core.membership import HPC_SERVICE
+from repro.core.template import HOSTFILE_KEY
+from repro.configs import get_smoke
+from repro.configs.base import ParallelPlan
+
+
+def test_hostfile_renders_live_set():
+    c = VirtualCluster(n_compute=2)
+    hf = c.hostfile
+    assert "compute001" in hf and "compute002" in hf and "head000" in hf
+    # published to KV like consul-template writing the file (paper Fig. 5)
+    assert c.registry.kv_get(HOSTFILE_KEY).value == hf
+    c.shutdown()
+
+
+def test_scale_up_auto_joins_and_rerenders():
+    c = VirtualCluster(n_compute=2)
+    e0 = c.rendering.epoch
+    c.scale_to(4)
+    r = c.rendering
+    assert r.epoch > e0
+    assert len(r.view.compute) == 4
+    assert all(f"compute00{i}" in r.hostfile for i in (1, 2, 3, 4))
+    c.shutdown()
+
+
+def test_crash_is_reaped_by_ttl_and_view_shrinks():
+    c = VirtualCluster(n_compute=3, ttl=2.0)
+    victims = c.compute_nodes()
+    c.crash_node(victims[-1])
+    c.pump(dt=3.0)  # TTL lapses
+    assert len(c.compute_nodes()) == 2
+    assert victims[-1] not in c.hostfile
+    c.shutdown()
+
+
+def test_partition_acts_like_failure_then_rejoin():
+    c = VirtualCluster(n_compute=2, ttl=2.0)
+    n = c.compute_nodes()[0]
+    c.sim.partition(n)
+    c.pump(dt=3.0)
+    assert n not in c.compute_nodes()
+    c.sim.heal(n)
+    c.sim.nodes[n].agent.start()  # re-register after partition heals
+    c.pump()
+    assert n in c.compute_nodes()
+    c.shutdown()
+
+
+def test_straggler_policy_replaces_slow_node():
+    c = VirtualCluster(n_compute=3, policy=StragglerPolicy(factor=2.0))
+    slow = c.compute_nodes()[1]
+    c.sim.make_straggler(slow, bias_s=5.0)
+    c.sim.report_step_times(step=1, base_s=1.0)
+    c.pump(autoscale=True)
+    nodes = c.compute_nodes()
+    assert slow not in nodes, "straggler drained"
+    assert len(nodes) == 3, "replaced, not shrunk"
+    c.shutdown()
+
+
+def test_mpirun_analogue_runs_spmd_on_rendered_mesh():
+    c = VirtualCluster(n_compute=2)
+
+    def job(mesh):
+        # the paper's Fig. 8: an SPMD reduction over the rendered mesh
+        x = jnp.arange(16.0)
+        return float(jax.jit(lambda v: v.sum())(x))
+
+    assert c.submit(job) == 120.0
+    c.shutdown()
+
+
+def test_image_skew_detection():
+    cfg = get_smoke("yi-9b")
+    plan = ParallelPlan()
+    img = ClusterImage.build("t", cfg, plan, "train")
+    c = VirtualCluster(n_compute=2, image=img)
+    assert c.verify_images()
+    # a node advertising a different digest is version skew (paper §I)
+    c.registry.register(HPC_SERVICE, "rogue", "simnet://rogue",
+                        meta={"image": "sha256:deadbeef", "n_devices": "1"})
+    assert not c.verify_images()
+    c.shutdown()
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(st.sampled_from(["add", "drain", "crash"]),
+                    min_size=1, max_size=12))
+def test_membership_invariants_under_random_churn(ops):
+    """Epochs are monotonic; the rendered hostfile always equals the live
+    catalog; node count never goes negative."""
+    c = VirtualCluster(n_compute=2, ttl=2.0)
+    last_epoch = c.rendering.epoch
+    for op in ops:
+        nodes = c.compute_nodes()
+        if op == "add":
+            c.sim.add_nodes(1)
+        elif op == "drain" and len(nodes) > 1:
+            c.sim.remove_nodes([nodes[-1]])
+        elif op == "crash" and len(nodes) > 1:
+            c.crash_node(nodes[0])
+            c.pump(dt=3.0)
+        r = c.pump()
+        if r is not None:
+            assert r.epoch >= last_epoch
+            last_epoch = r.epoch
+            live = {m.node_id for m in r.view.members}
+            for nid in live:
+                assert nid in r.hostfile
+    c.shutdown()

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_ref_loop
+from repro.kernels.rwkv6.ops import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def _mk(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,hd,causal,window,bq,bk",
+    [
+        (1, 128, 4, 4, 32, True, 0, 64, 64),
+        (2, 256, 4, 2, 64, True, 0, 128, 128),
+        (1, 256, 8, 1, 64, True, 64, 64, 64),  # MQA + sliding window
+        (2, 128, 4, 4, 128, False, 0, 128, 128),  # bidirectional
+        (1, 192, 6, 2, 32, True, 0, 64, 64),  # non-pow2 seq
+    ])
+def test_flash_attention_sweep(dtype, B, S, Hq, Hkv, hd, causal, window,
+                               bq, bk, rng):
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, S, Hq, hd), dtype)
+    k = _mk(ks[1], (B, S, Hkv, hd), dtype)
+    v = _mk(ks[2], (B, S, Hkv, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        n_kv_heads=Hkv, block_q=bq, block_k=bk,
+                        interpret=True)
+    r = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    r = r.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                 - r.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    S=st.sampled_from([64, 128, 256]),
+    Hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(S, Hkv, g, causal):
+    rng = jax.random.PRNGKey(S * 31 + Hkv * 7 + g)
+    ks = jax.random.split(rng, 3)
+    Hq, hd, B = Hkv * g, 32, 1
+    q = _mk(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = _mk(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = _mk(ks[2], (B, S, Hkv, hd), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, n_kv_heads=Hkv,
+                        block_q=64, block_k=64, interpret=True)
+    r = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=causal)
+    r = r.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd)
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-3
+
+
+@pytest.mark.parametrize("cur", [0, 17, 255, 511])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(cur, dtype, rng):
+    B, Hq, Hkv, S, hd = 2, 8, 2, 512, 64
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, Hq, hd), dtype)
+    k = _mk(ks[1], (B, Hkv, S, hd), dtype)
+    v = _mk(ks[2], (B, Hkv, S, hd), dtype)
+    o = flash_decode(q, k, v, cur, block_k=128, interpret=True)
+    r = decode_ref(q, k, v, cur)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32) - r))) < tol
+
+
+def test_flash_decode_merge_identity(rng):
+    """Merging two half-cache partials == attention over the full cache."""
+    from repro.kernels.flash_decode.kernel import flash_decode_kernel
+    B, Hq, Hkv, S, hd = 1, 4, 2, 256, 32
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, Hq, hd), jnp.float32)
+    k = _mk(ks[1], (B, Hkv, S, hd), jnp.float32)
+    v = _mk(ks[2], (B, Hkv, S, hd), jnp.float32)
+    o1, m1, l1 = flash_decode_kernel(q, k[:, :, :128], v[:, :, :128], 127,
+                                     block_k=64, interpret=True)
+    o2, m2, l2 = flash_decode_kernel(q, k[:, :, 128:], v[:, :, 128:], 127,
+                                     block_k=64, interpret=True)
+    mg = jnp.maximum(m1, m2)
+    w1, w2 = l1 * jnp.exp(m1 - mg), l2 * jnp.exp(m2 - mg)
+    merged = (o1 * w1 + o2 * w2) / (w1 + w2)
+    ref = decode_ref(q, k, v, 255)
+    assert float(jnp.max(jnp.abs(merged - ref))) < 1e-3
+
+
+@pytest.mark.parametrize("B,S,W,bt,bw", [
+    (2, 128, 64, 32, 64), (1, 256, 128, 64, 128), (2, 64, 256, 16, 128)])
+def test_rglru_kernel_sweep(B, S, W, bt, bw, rng):
+    ks = jax.random.split(rng, 3)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.05, 0.999)
+    b = jax.random.normal(ks[1], (B, S, W), jnp.float32)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    hk = rglru_scan(a, b, h0, block_t=bt, block_w=bw, interpret=True)
+    hr = rglru_ref_loop(a, b, h0)
+    assert float(jnp.max(jnp.abs(hk - hr))) < 2e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(decay=st.floats(0.01, 6.0), S=st.sampled_from([64, 128]))
+def test_rglru_kernel_extreme_decay_property(decay, S):
+    """Stability under strong decay (the log-space clip must not blow up)."""
+    rng = jax.random.PRNGKey(int(decay * 1000) + S)
+    ks = jax.random.split(rng, 2)
+    a = jnp.exp(-decay * jax.random.uniform(ks[0], (1, S, 64), minval=0.5,
+                                            maxval=1.0))
+    b = jax.random.normal(ks[1], (1, S, 64), jnp.float32)
+    hk = rglru_scan(a, b, None, block_t=32, block_w=64, interpret=True)
+    hr = rglru_ref_loop(a, b, None)
+    assert bool(jnp.all(jnp.isfinite(hk)))
+    assert float(jnp.max(jnp.abs(hk - hr))) < 2e-3
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (2, 128, 2, 32, 32), (1, 64, 4, 64, 16), (1, 96, 1, 16, 32)])
+def test_wkv6_kernel_sweep(B, S, H, hd, chunk, rng):
+    ks = jax.random.split(rng, 5)
+    mk = lambda k: jax.random.normal(k, (B, S, H, hd), jnp.float32) * 0.5
+    r, k_, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    o, sf = wkv6(r, k_, v, logw, u, chunk=chunk, interpret=True)
+    orf, sr = wkv6_ref(*(a.transpose(0, 2, 1, 3) for a in (r, k_, v, logw)),
+                       u)
+    assert float(jnp.max(jnp.abs(o - orf.transpose(0, 2, 1, 3)))) < 2e-3
+    assert float(jnp.max(jnp.abs(sf - sr))) < 2e-3

@@ -1,0 +1,90 @@
+"""Registry semantics: Consul-analogue behaviors the paper relies on."""
+import pytest
+
+from repro.core.clock import ManualClock
+from repro.core.membership import HPC_SERVICE
+from repro.core.registry import (RegistryError, ReplicatedRegistry,
+                                 ServiceRegistry)
+
+
+def mk(n=1):
+    clock = ManualClock()
+    reg = (ServiceRegistry(clock) if n == 1
+           else ReplicatedRegistry(n, clock))
+    return clock, reg
+
+
+def test_register_and_catalog():
+    clock, reg = mk()
+    reg.register(HPC_SERVICE, "n1", "simnet://n1", ttl=2.0,
+                 meta={"n_devices": "4"})
+    reg.register(HPC_SERVICE, "n2", "simnet://n2", ttl=2.0)
+    cat = reg.catalog(HPC_SERVICE)
+    assert [e.node_id for e in cat] == ["n1", "n2"]
+    assert cat[0].meta["n_devices"] == "4"
+
+
+def test_ttl_expiry_reaps_silent_node():
+    clock, reg = mk()
+    reg.register(HPC_SERVICE, "n1", "a", ttl=2.0)
+    reg.register(HPC_SERVICE, "n2", "a", ttl=2.0)
+    clock.advance(1.5)
+    reg.heartbeat(HPC_SERVICE, "n1")  # n2 goes silent
+    clock.advance(1.0)
+    reaped = reg.sweep()
+    assert [e.node_id for e in reaped] == ["n2"]
+    assert [e.node_id for e in reg.catalog(HPC_SERVICE)] == ["n1"]
+
+
+def test_heartbeat_after_dereg_returns_false():
+    _, reg = mk()
+    reg.register(HPC_SERVICE, "n1", "a")
+    reg.deregister(HPC_SERVICE, "n1")
+    assert reg.heartbeat(HPC_SERVICE, "n1") is False
+
+
+def test_index_monotonic_and_kv_versioning():
+    _, reg = mk()
+    i1 = reg.kv_put("k", "v1")
+    i2 = reg.kv_put("k", "v2")
+    assert i2 > i1
+    assert reg.kv_get("k").value == "v2"
+    assert reg.kv_get("k").modify_index == i2
+
+
+def test_replicated_write_survives_minority_failure():
+    clock, reg = mk(3)
+    reg.register(HPC_SERVICE, "n1", "a")
+    reg.replicas[2].alive = False  # one follower down: quorum still 2/3
+    reg.register(HPC_SERVICE, "n2", "a")
+    assert len(reg.catalog(HPC_SERVICE)) == 2
+
+
+def test_leader_failover_preserves_state():
+    clock, reg = mk(3)
+    reg.register(HPC_SERVICE, "n1", "a")
+    reg.kv_put("key", "val")
+    reg.kill_leader()
+    with pytest.raises(RegistryError):
+        reg.register(HPC_SERVICE, "n2", "a")
+    new_leader = reg.failover()
+    assert new_leader != "consul-0"
+    assert reg.kv_get("key").value == "val"
+    reg.register(HPC_SERVICE, "n2", "a")  # writes work again
+    assert len(reg.catalog(HPC_SERVICE)) == 2
+
+
+def test_no_quorum_blocks_writes():
+    clock, reg = mk(3)
+    reg.replicas[1].alive = False
+    reg.replicas[2].alive = False
+    with pytest.raises(RegistryError):
+        reg.register(HPC_SERVICE, "n1", "a")
+
+
+def test_revived_replica_catches_up():
+    clock, reg = mk(3)
+    reg.replicas[2].alive = False
+    reg.kv_put("k", "v")
+    reg.revive(2)
+    assert reg.replicas[2].kv_get("k").value == "v"

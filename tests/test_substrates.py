@@ -1,0 +1,165 @@
+"""Optimizer, data pipeline, checkpoint substrates (+hypothesis properties)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import MemmapCorpus, SyntheticLM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
+                         ef_psum_grads, init_error)
+from repro.optim.compress import compress_decompress
+
+
+# ---- optimizer ---------------------------------------------------------------
+
+
+def _quadratic_converges(state_dtype):
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=300, state_dtype=state_dtype)
+    params = {"w": jnp.full((4, 64), 5.0, jnp.float32)}
+    state = adamw_init(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+        return adamw_update(g, state, cfg)
+
+    for _ in range(200):
+        params, state = step(params, state)
+    return float(jnp.max(jnp.abs(params["w"] - 1.0)))
+
+
+def test_adamw_fp32_converges():
+    assert _quadratic_converges("fp32") < 0.05
+
+
+def test_adamw_int8_states_converge():
+    """The 8-bit moment quantization must not break optimization."""
+    assert _quadratic_converges("int8") < 0.1
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_lr(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(cosine_lr(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(cosine_lr(cfg, jnp.asarray(100))) == pytest.approx(0.1, .01)
+
+
+def test_int8_state_memory_is_smaller():
+    cfg8 = AdamWConfig(state_dtype="int8")
+    params = {"w": jnp.zeros((256, 256), jnp.bfloat16)}
+    s8 = adamw_init(params, cfg8)
+    sz = lambda t: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    s32 = adamw_init(params, AdamWConfig(state_dtype="fp32"))
+    assert sz(s8["m"]) < 0.3 * sz(s32["m"])
+
+
+# ---- gradient compression -----------------------------------------------------
+
+
+def test_error_feedback_reduces_bias(rng):
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    g = jax.random.normal(rng, (8, 128)) * 0.01
+    err = jnp.zeros_like(g)
+    acc_c, acc_t = jnp.zeros_like(g), jnp.zeros_like(g)
+    for _ in range(50):
+        dq, err = compress_decompress(g, err)
+        acc_c += dq
+        acc_t += g
+    rel = float(jnp.linalg.norm(acc_c - acc_t) / jnp.linalg.norm(acc_t))
+    assert rel < 0.01  # EF keeps the long-run sum unbiased
+
+
+# ---- data pipeline ---------------------------------------------------------------
+
+
+def test_synthetic_determinism():
+    src = SyntheticLM(1000, 32, seed=3)
+    a = src.batch_np(step=5, batch=8)
+    b = src.batch_np(step=5, batch=8)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    c = src.batch_np(step=6, batch=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert np.array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_shards=st.sampled_from([1, 2, 4]), step=st.integers(0, 100))
+def test_shards_are_disjoint_slices(n_shards, step):
+    """Sharded draws are deterministic per (seed, step, shard) and distinct
+    across shards."""
+    src = SyntheticLM(5000, 16, seed=1)
+    batches = [src.batch_np(step, 8, shard=s, n_shards=n_shards)
+               for s in range(n_shards)]
+    for i in range(n_shards):
+        again = src.batch_np(step, 8, shard=i, n_shards=n_shards)
+        assert np.array_equal(batches[i]["tokens"], again["tokens"])
+        for j in range(i + 1, n_shards):
+            assert not np.array_equal(batches[i]["tokens"],
+                                      batches[j]["tokens"])
+
+
+def test_memmap_corpus_roundtrip(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    MemmapCorpus.write(path, np.arange(10_000) % 777)
+    c = MemmapCorpus(path, seq_len=32, seed=0)
+    b = c.batch_np(0, 4)
+    assert b["tokens"].shape == (4, 32)
+    assert np.array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---- checkpoint ---------------------------------------------------------------------
+
+
+def _tree(rng):
+    ks = jax.random.split(rng, 3)
+    return {
+        "params": {"w": jax.random.normal(ks[0], (8, 16)).astype(jnp.bfloat16),
+                   "b": jax.random.normal(ks[1], (16,), jnp.float32)},
+        "opt": {"step": jnp.asarray(7, jnp.int32),
+                "m": (jax.random.normal(ks[2], (8, 16)),)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _tree(rng)
+    mgr.save(7, state, {"note": "x"})
+    struct = jax.eval_shape(lambda: state)
+    out = mgr.restore(struct)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+    assert mgr.metadata()["note"] == "x"
+
+
+def test_checkpoint_retention_and_latest(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _tree(rng)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.available_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_then_restore(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _tree(rng)
+    mgr.save_async(9, state)
+    mgr.wait()
+    assert mgr.latest_step() == 9
+
+
+def test_checkpoint_rejects_tree_mismatch(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _tree(rng)
+    mgr.save(1, state)
+    bad = {"params": state["params"]}
+    with pytest.raises(ValueError):
+        mgr.restore(jax.eval_shape(lambda: bad))

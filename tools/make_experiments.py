@@ -1,0 +1,26 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from reports/dryrun."""
+import json
+import os
+import sys
+
+
+def table(d, cols):
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        r = json.load(open(os.path.join(d, fn)))
+        rows.append(r)
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant |"
+           " useful | fraction | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r.get('useful_flops_ratio', 0):.3f} | "
+            f"{r.get('roofline_fraction', 0):.3f} | {m['fits_16GB']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table(sys.argv[1], None))
