@@ -1,8 +1,12 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# --smoke runs the cheap subset (CI: tools/ci.sh).
+import argparse
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # so `python benchmarks/run.py` finds the package
 
 
 def main() -> None:
@@ -10,12 +14,26 @@ def main() -> None:
                                           bench_cluster_formation,
                                           bench_env_capture,
                                           bench_interconnect_model,
-                                          bench_mpi_job, bench_step_time)
+                                          bench_mpi_job,
+                                          bench_serve_throughput,
+                                          bench_serve_throughput_full,
+                                          bench_step_time)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="cheap subset for CI smoke runs")
+    args = ap.parse_args()
+
+    if args.smoke:
+        benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput)
+    else:
+        benches = (bench_cluster_formation, bench_autoscale_response,
+                   bench_mpi_job, bench_env_capture,
+                   bench_interconnect_model, bench_serve_throughput_full,
+                   bench_step_time)
 
     print("name,us_per_call,derived")
-    for bench in (bench_cluster_formation, bench_autoscale_response,
-                  bench_mpi_job, bench_env_capture,
-                  bench_interconnect_model, bench_step_time):
+    for bench in benches:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us},{derived}", flush=True)

@@ -18,7 +18,9 @@ from repro.core.elastic import ElasticTrainer
 
 def main():
     plan = ParallelPlan(fsdp=False, remat="full", attn_impl="naive")
-    cluster = VirtualCluster(n_compute=3, ttl=2.0,
+    # 4 nodes: 3 survive the crash below — median-based straggler detection
+    # needs >=3 reporters for one 5x outlier to clear factor*median
+    cluster = VirtualCluster(n_compute=4, ttl=2.0,
                              policy=StragglerPolicy(factor=2.0))
     cfg = get_smoke("paper-demo")
     shape = ShapeConfig("ft", 32, 8, "train")

@@ -1,12 +1,21 @@
-"""Serving demo: discovery-registered replicas + batched prefill/decode.
+"""Serving demo: continuous batching with load-driven autoscaling.
+
+A Poisson arrival trace is served by the slot-pooled continuous-batching
+engine; the engine publishes queue depth / latency / occupancy into the
+registry KV, and the cluster's QueueDepthPolicy grows the node set while the
+backlog is deep, then shrinks it as the queue drains. Output tokens are
+verified against the one-shot serve_batch baseline.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
+import os
 import subprocess
 import sys
 
 if __name__ == "__main__":
     sys.exit(subprocess.call(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "paper-demo",
-         "--smoke", "--requests", "4", "--prompt-len", "16", "--gen", "8"],
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))
+         "--smoke", "--trace", "poisson", "--verify"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # containers with libtpu probe TPU metadata forever otherwise
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}))

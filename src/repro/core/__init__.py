@@ -2,6 +2,7 @@
 from repro.core.agent import NodeAgent  # noqa: F401
 from repro.core.autoscaler import (  # noqa: F401
     AutoScaler,
+    LatencyPolicy,
     QueueDepthPolicy,
     ScalePlan,
     StepTimePolicy,

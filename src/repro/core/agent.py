@@ -31,6 +31,7 @@ class NodeAgent:
         self._running = False
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
+        self._serving_keys: set = set()  # serving metric names last published
 
     # -- lifecycle ------------------------------------------------------------
     @property
@@ -77,6 +78,24 @@ class NodeAgent:
         if not self._running:
             return
         self.registry.kv_put(f"metrics/{self.node_id}/queue_depth", str(depth))
+
+    def report_serving(self, metrics: Dict[str, float]) -> None:
+        """Publish a ServingMetrics snapshot (queue depth, tokens/s,
+        latency percentiles, slot occupancy) — the signals the serving-aware
+        scaling policies consume.
+
+        Keys the snapshot omits (ServingMetrics' "no data in window"
+        contract) are tombstoned with an empty value so stale readings
+        can't keep driving the policy after their window lapses —
+        AutoScaler.read_metrics skips non-numeric values."""
+        if not self._running:
+            return
+        for name in self._serving_keys - set(metrics):
+            self.registry.kv_put(f"metrics/{self.node_id}/{name}", "")
+        for name, val in metrics.items():
+            self.registry.kv_put(f"metrics/{self.node_id}/{name}",
+                                 f"{float(val):.6f}")
+        self._serving_keys = set(metrics)
 
     # -- threaded mode (examples/benchmarks; tests use tick()) -------------------
     def run_threaded(self, interval: Optional[float] = None) -> None:

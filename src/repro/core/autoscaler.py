@@ -79,6 +79,37 @@ class StepTimePolicy:
 
 
 @dataclass
+class LatencyPolicy:
+    """Serve-driven scaling: grow while p95 request latency exceeds the
+    target; shrink only once latency is comfortably inside the target AND
+    the arrival queue is empty (draining a backlog at low latency still
+    needs the capacity)."""
+    target_p95_ms: float
+    min_nodes: int = 1
+    max_nodes: int = 64
+    headroom: float = 0.5  # scale down below headroom*target
+
+    def decide(self, view, metrics):
+        n = len(view.compute)
+        p95 = metrics.get("latency_p95_ms", None)
+        depth = metrics.get("queue_depth", 0.0)
+        occ = metrics.get("slot_occupancy", 0.0)
+        if p95 is None:
+            # no completions in the metrics window: hold while anything is
+            # queued or in flight (mid-burst warmup), shrink once truly idle
+            if depth == 0 and occ == 0 and n > self.min_nodes:
+                return ScalePlan(n - 1, reason="idle")
+            return ScalePlan(n, reason="no-data")
+        if p95 > self.target_p95_ms and n < self.max_nodes:
+            return ScalePlan(n + 1, reason=f"p95 {p95:.0f}ms > "
+                                           f"{self.target_p95_ms:.0f}ms")
+        if (p95 < self.headroom * self.target_p95_ms and depth == 0
+                and n > self.min_nodes):
+            return ScalePlan(n - 1, reason=f"p95 {p95:.0f}ms in headroom")
+        return ScalePlan(n, reason="in-band")
+
+
+@dataclass
 class StragglerPolicy:
     """Replace nodes whose reported step time exceeds factor x median."""
     factor: float = 2.0
@@ -117,8 +148,10 @@ class AutoScaler:
         out: Dict[str, float] = {}
         for key, entry in registry.kv_prefix("metrics/").items():
             _, node, name = key.split("/", 2)
+            val = entry.value.split(":")[-1]
+            if not val:  # tombstone: metric's window lapsed (report_serving)
+                continue
             try:
-                val = entry.value.split(":")[-1]
                 out[f"node_{name}/{node}"] = float(val)
             except ValueError:
                 continue
@@ -128,15 +161,27 @@ class AutoScaler:
         depths = [v for k, v in out.items() if k.startswith("node_queue_depth/")]
         if depths:
             out["queue_depth"] = sum(depths)
+        # serving metrics (NodeAgent.report_serving snapshots): latencies
+        # take the worst node, throughput sums, occupancy averages
+        for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
+                          ("ttft_p95_ms", max), ("tokens_per_s", sum),
+                          ("deadline_misses", sum)):
+            vals = [v for k, v in out.items()
+                    if k.startswith(f"node_{name}/")]
+            if vals:
+                out[name] = agg(vals)
+        occ = [v for k, v in out.items() if k.startswith("node_slot_occupancy/")]
+        if occ:
+            out["slot_occupancy"] = sum(occ) / len(occ)
         return out
 
-    def step(self, view: ClusterView, metrics: Dict[str, float]
-             ) -> Optional[ScalePlan]:
-        """One reconcile iteration. Returns the applied plan (or None)."""
-        now = self.clock.now()
-        if now - self._last_action_t < self.cooldown_s:
-            return None
-        plan = self.policy.decide(view, metrics)
+    def apply_plan(self, view: ClusterView, plan: ScalePlan
+                   ) -> Optional[ScalePlan]:
+        """Clamp and apply one plan through the provisioner (no cooldown
+        check — callers gate). Returns the applied plan, or None if noop.
+        This is also the one-shot path for operator actions
+        (VirtualCluster.scale_to), which must not disturb the installed
+        policy."""
         target = max(self.min_nodes, min(self.max_nodes, plan.target))
         plan = ScalePlan(target, plan.replace, plan.reason)
         current = len(view.compute)
@@ -150,6 +195,14 @@ class AutoScaler:
         elif target < current:
             victims = [m.node_id for m in view.compute[target:]]
             self.provisioner.remove_nodes(victims)
-        self._last_action_t = now
-        self.history.append((now, plan.reason))
+        self._last_action_t = self.clock.now()
+        self.history.append((self._last_action_t, plan.reason))
         return plan
+
+    def step(self, view: ClusterView, metrics: Dict[str, float]
+             ) -> Optional[ScalePlan]:
+        """One reconcile iteration. Returns the applied plan (or None)."""
+        now = self.clock.now()
+        if now - self._last_action_t < self.cooldown_s:
+            return None
+        return self.apply_plan(view, self.policy.decide(view, metrics))

@@ -13,7 +13,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 
 from repro.core.agent import NodeAgent
-from repro.core.autoscaler import AutoScaler, Policy, TargetSizePolicy
+from repro.core.autoscaler import (AutoScaler, Policy, ScalePlan,
+                                   TargetSizePolicy)
 from repro.core.clock import Clock, ManualClock
 from repro.core.image import ClusterImage, ImageHub
 from repro.core.membership import HPC_SERVICE
@@ -87,11 +88,54 @@ class VirtualCluster:
 
     # -- scaling API -------------------------------------------------------------------
     def scale_to(self, n: int) -> Rendering:
-        self.scaler.policy = TargetSizePolicy(n)
+        """Operator-issued one-shot resize. Applies a single plan directly;
+        a metric-driven autoscaling policy stays in charge of subsequent
+        reconcile iterations (it is NOT replaced). A TargetSizePolicy —
+        including the constructor default — is retargeted to `n` so later
+        autoscale pumps (e.g. straggler healing) hold the operator's size
+        instead of reverting to the old pin."""
+        if isinstance(self.scaler.policy, TargetSizePolicy):
+            self.scaler.policy.target = n
         view = self.current_view()
-        self.scaler.step(view, {})
+        self.scaler.apply_plan(view, ScalePlan(n, reason=f"scale_to({n})"))
         self.sim.pump()
         return self.template.poll() or self.rendering
+
+    # -- long-running serving (continuous batching; serve/scheduler.py) ------------------
+    def serve(self, engine, requests=(), *, dt=0.05, autoscale: bool = True,
+              max_steps: int = 100_000, on_step=None):
+        """Drive a ServingEngine to completion against this cluster.
+
+        Each iteration: one scheduler step (admit / mixed-batch decode /
+        retire), publish the engine's metrics snapshot through the head
+        node's agent into the registry KV, then pump the control plane with
+        autoscaling — so the installed policy (QueueDepthPolicy,
+        LatencyPolicy, ...) resizes the cluster *mid-serve* from live load.
+
+        `dt` is the simulated wall time of one decode step: a float, or a
+        callable (n_compute -> seconds) to model data-parallel speedup —
+        more nodes drain the queue faster, which is what lets the policy
+        scale back down. The engine must share this cluster's clock.
+
+        Returns engine.results() (rid -> tokens).
+        """
+        assert engine.clock is self.clock, \
+            "engine must be built with clock=cluster.clock"
+        engine.submit(requests)
+        head_agent = self.sim.nodes[self.head_id].agent
+        steps = 0
+        while not engine.drained() and steps < max_steps:
+            snap = engine.step()
+            head_agent.report_serving(snap)
+            n = max(len(self.current_view().compute), 1)
+            step_dt = dt(n) if callable(dt) else dt
+            self.pump(dt=step_dt, autoscale=autoscale)
+            if on_step is not None:
+                on_step(steps, snap, self)
+            steps += 1
+        if not engine.drained():
+            raise RuntimeError(f"serve did not drain in {max_steps} steps")
+        return engine.results()
 
     # -- fault injection passthrough -----------------------------------------------------
     def crash_node(self, node_id: str) -> None:

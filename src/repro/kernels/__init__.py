@@ -14,3 +14,12 @@ def default_interpret() -> bool:
     import jax
 
     return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat constructor: pltpu.CompilerParams on current JAX,
+    pltpu.TPUCompilerParams on jax<=0.4.x (the name was changed upstream)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

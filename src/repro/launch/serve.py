@@ -1,7 +1,16 @@
-"""Serving driver: batched prefill + decode over the virtual cluster.
+"""Serving CLI — a thin driver over the continuous-batching engine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch paper-demo --smoke \
-      --requests 8 --prompt-len 32 --gen 16
+Closed-loop demo (trace mode): inject a Poisson arrival trace, serve it via
+continuous batching on a VirtualCluster whose autoscaling policy reads the
+engine's published metrics, and watch the cluster grow 1->N while the queue
+is deep and shrink back as it drains:
+
+  PYTHONPATH=src python -m repro.launch.serve --trace poisson --smoke
+
+One-shot baseline (the pre-continuous-batching path, kept for comparison and
+for the token-for-token correctness tests):
+
+  PYTHONPATH=src python -m repro.launch.serve --trace oneshot --smoke
 """
 from __future__ import annotations
 
@@ -13,17 +22,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
-from repro.configs.base import ParallelPlan, ShapeConfig
-from repro.core import ClusterImage, VirtualCluster
+from repro.configs.base import ParallelPlan
+from repro.core import ClusterImage, LatencyPolicy, QueueDepthPolicy, \
+    VirtualCluster
 from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
+from repro.serve import (SERVE_PLAN, ServingEngine, burst_trace,
+                         poisson_trace)
 
 
 def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan):
+    """One-shot batch serving: prefill every prompt together, then decode
+    the uniform batch to gen_len. The correctness baseline for the
+    continuous-batching engine."""
     env = Env(mesh=mesh, plan=plan)
     B, S = prompts.shape
-    total = S + gen_len
     prefill = jax.jit(St.make_prefill_step(cfg, env))
     decode = jax.jit(St.make_decode_step(cfg, env), donate_argnums=(1,))
 
@@ -50,30 +64,89 @@ def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan):
     return jnp.concatenate(out, axis=1)
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="paper-demo")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--nodes", type=int, default=2)
-    args = ap.parse_args()
+def _build_policy(args):
+    if args.policy == "latency":
+        return LatencyPolicy(target_p95_ms=args.target_p95_ms,
+                             min_nodes=args.nodes, max_nodes=args.max_nodes)
+    return QueueDepthPolicy(target_per_node=args.queue_per_node,
+                            min_nodes=args.nodes, max_nodes=args.max_nodes)
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    plan = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
-                        kv_cache="replicated")
-    image = ClusterImage.build(f"{cfg.name}-serve", cfg, plan, "serve")
-    cluster = VirtualCluster(n_compute=args.nodes, image=image)
+
+def run_trace(args, cfg, params) -> int:
+    policy = _build_policy(args)
+    image = ClusterImage.build(f"{cfg.name}-serve", cfg, SERVE_PLAN, "serve")
+    cluster = VirtualCluster(n_compute=args.nodes, image=image, policy=policy,
+                             cooldown_s=args.cooldown)
     print("serving replicas register to the catalog:\n" + cluster.hostfile)
 
-    rng = jax.random.PRNGKey(0)
-    env0 = Env(mesh=None, plan=plan)
-    params = Mo.init_params(rng, cfg, env0)
+    engine = ServingEngine(cfg, params, num_slots=args.slots,
+                           prompt_len=args.prompt_len, max_gen=args.gen_max,
+                           clock=cluster.clock)
+    make = burst_trace if args.trace == "burst" else None
+    if make is not None:
+        trace = make(args.requests, prompt_len=args.prompt_len,
+                     vocab_size=cfg.vocab_size, gen_len=args.gen,
+                     seed=args.seed)
+    else:
+        trace = poisson_trace(args.requests, args.rate,
+                              prompt_len=args.prompt_len,
+                              vocab_size=cfg.vocab_size, gen_len=args.gen,
+                              gen_len_max=args.gen_max, seed=args.seed)
+
+    sizes = []  # scaling timeline: (sim_t, n_compute)
+
+    def on_step(i, snap, c):
+        n = len(c.current_view().compute)
+        if not sizes or sizes[-1][1] != n:
+            sizes.append((c.clock.now(), n))
+            print(f"  t={c.clock.now():7.2f}s  nodes={n}  "
+                  f"queue={snap['queue_depth']:.0f}  "
+                  f"p95={snap.get('latency_p95_ms', 0.0):.0f}ms  "
+                  f"occ={snap['slot_occupancy']:.2f}")
+
+    # one decode step costs step_time on one node; N data-parallel serving
+    # replicas drain the shared queue ~N x faster (sim speedup model)
+    dt = lambda n: args.step_time / max(n, 1)
+    t0 = time.time()
+    out = cluster.serve(engine, trace, dt=dt, on_step=on_step)
+    wall = time.time() - t0
+
+    peak = max((n for _, n in sizes), default=args.nodes)
+    final = len(cluster.current_view().compute)
+    n_tok = sum(len(t) for t in out.values())
+    snap = engine.snapshot()
+    print(f"served {len(out)}/{len(trace)} requests, {n_tok} tokens "
+          f"in {engine.clock.now():.2f}s sim ({wall:.2f}s wall)")
+    print(f"autoscale: start={args.nodes} peak={peak} final={final} "
+          f"({len(cluster.scaler.history)} actions)")
+    print(f"p50={snap.get('latency_p50_ms', 0.0):.0f}ms "
+          f"p95={snap.get('latency_p95_ms', 0.0):.0f}ms "
+          f"tokens/s(sim)={snap['tokens_per_s']:.1f}")
+
+    rc = 0
+    if args.verify:
+        prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+        base = np.asarray(serve_batch(None, cfg, params, prompts,
+                                      args.gen_max, SERVE_PLAN))
+        ok = all(np.array_equal(base[r.rid][:r.gen_len], np.array(out[r.rid]))
+                 for r in trace)
+        print(f"verify vs one-shot baseline: "
+              f"{'token-for-token MATCH' if ok else 'MISMATCH'}")
+        rc = 0 if ok else 1
+    cluster.shutdown()
+    return rc
+
+
+def run_oneshot(args, cfg, params) -> int:
+    image = ClusterImage.build(f"{cfg.name}-serve", cfg, SERVE_PLAN, "serve")
+    cluster = VirtualCluster(n_compute=args.nodes, image=image)
+    print("serving replicas register to the catalog:\n" + cluster.hostfile)
+    rng = jax.random.PRNGKey(args.seed)
     prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
                                  cfg.vocab_size, dtype=jnp.int32)
     t0 = time.time()
-    toks = cluster.submit(serve_batch, cfg, params, prompts, args.gen, plan)
+    toks = cluster.submit(serve_batch, cfg, params, prompts, args.gen,
+                          SERVE_PLAN)
     dt = time.time() - t0
     n_tok = args.requests * args.gen
     print(f"generated {n_tok} tokens in {dt:.2f}s "
@@ -81,6 +154,47 @@ def main() -> int:
     print("sample:", np.asarray(toks[0])[:16])
     cluster.shutdown()
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="paper-demo")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "burst", "oneshot"))
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen-max", type=int, default=None,
+                    help="max gen length (default: --gen)")
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="poisson arrival rate, requests/s (sim time)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots (max concurrent decodes)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="initial / minimum compute nodes")
+    ap.add_argument("--max-nodes", type=int, default=6)
+    ap.add_argument("--policy", default="queue", choices=("queue", "latency"))
+    ap.add_argument("--queue-per-node", type=int, default=2)
+    ap.add_argument("--target-p95-ms", type=float, default=400.0)
+    ap.add_argument("--step-time", type=float, default=0.05,
+                    help="simulated seconds per decode step on one node")
+    ap.add_argument("--cooldown", type=float, default=0.3,
+                    help="autoscaler cooldown between actions (sim seconds)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="check tokens against the one-shot baseline")
+    args = ap.parse_args()
+    if args.gen_max is None:
+        args.gen_max = args.gen
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    rng = jax.random.PRNGKey(0)
+    params = Mo.init_params(rng, cfg, Env(mesh=None, plan=SERVE_PLAN))
+
+    if args.trace == "oneshot":
+        return run_oneshot(args, cfg, params)
+    return run_trace(args, cfg, params)
 
 
 if __name__ == "__main__":

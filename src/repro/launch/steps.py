@@ -65,6 +65,19 @@ def make_decode_step(cfg: ModelConfig, env: Env):
     return decode_step
 
 
+def make_slot_decode_step(cfg: ModelConfig, env: Env):
+    """Decode step for a slot-pooled cache (continuous batching).
+
+    The same step as make_decode_step — Mo.forward accepts cur_len as a
+    scalar or a [B] int32 vector, and with a vector each row (slot) attends
+    and writes at its own position, so requests at different generation
+    depths share one jitted step. Rows holding free slots still compute
+    (their writes land in slots that insert fully overwrites) — callers
+    mask their outputs.
+    """
+    return make_decode_step(cfg, env)
+
+
 # ---------------------------------------------------------------------------
 # shape-struct builders (no allocation)
 # ---------------------------------------------------------------------------

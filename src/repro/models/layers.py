@@ -312,9 +312,15 @@ def attention_decode(q, k_cache, v_cache, cur_len, cfg: ModelConfig, env: Env,
     qg = _group(q, hkv)[:, :, :, 0]  # [B,Hkv,G,hd]
     s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache).astype(jnp.float32) * scale
     kpos = jnp.arange(Smax)
-    ok = kpos <= cur_len  # cur_len: scalar int32 (current write position)
+    # cur_len: scalar int32, or [B] int32 when rows sit at different write
+    # positions (continuous batching: each KV slot decodes independently)
+    cl = jnp.asarray(cur_len)
+    if cl.ndim:
+        cl = cl[:, None, None, None]
+        kpos = kpos[None, None, None, :]
+    ok = kpos <= cl
     if window > 0:
-        ok = ok & (kpos >= cur_len - window + 1)
+        ok = ok & (kpos >= cl - window + 1)
     s = jnp.where(ok, s, -jnp.inf)
     a = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     o = jnp.einsum("bhgk,bhkd->bhgd", a, v_cache)

@@ -165,6 +165,58 @@ def grow_caches(caches: Pytree, extra: int) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# slot-pool cache ops (continuous batching: serve/slots.py)
+#
+# A pooled cache is an ordinary init_cache() pytree whose batch dim is the
+# slot dim. Layout (see init_cache): leaves under "blocks" are stacked
+# [num_blocks, B, ...]; leaves under "tail" are [B, ...] — so the slot axis
+# is 1 for blocks and 0 for tail. All three ops are jit-safe with a traced
+# slot index, so admitting a request never re-compiles.
+# ---------------------------------------------------------------------------
+
+
+def cache_insert_slot(pool: Pytree, request: Pytree, slot) -> Pytree:
+    """Write a single-request (batch-1) cache pytree into `slot` of a pooled
+    cache. The request cache must already be grown to the pool's seq length
+    (grow_caches). Every leaf of the slot is overwritten, so freed slots need
+    no zeroing before reuse."""
+    def ins(axis):
+        def f(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=axis)
+        return f
+
+    return {"blocks": jax.tree.map(ins(1), pool["blocks"], request["blocks"]),
+            "tail": jax.tree.map(ins(0), pool["tail"], request["tail"])}
+
+
+def cache_evict_slot(pool: Pytree, slot) -> Pytree:
+    """Zero `slot` of a pooled cache (hygiene / tests; insert fully
+    overwrites, so eviction is logically just freeing the slot)."""
+    def z(axis):
+        def f(x):
+            shp = list(x.shape)
+            shp[axis] = 1
+            return jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.zeros(shp, x.dtype), slot, axis=axis)
+        return f
+
+    return {"blocks": jax.tree.map(z(1), pool["blocks"]),
+            "tail": jax.tree.map(z(0), pool["tail"])}
+
+
+def cache_read_slot(pool: Pytree, slot) -> Pytree:
+    """Extract `slot` as a batch-1 cache pytree (inverse of insert)."""
+    def rd(axis):
+        def f(x):
+            return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=axis)
+        return f
+
+    return {"blocks": jax.tree.map(rd(1), pool["blocks"]),
+            "tail": jax.tree.map(rd(0), pool["tail"])}
+
+
+# ---------------------------------------------------------------------------
 # block application
 # ---------------------------------------------------------------------------
 
@@ -224,12 +276,15 @@ def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
         return o, new_cache
 
     # ---- decode -----------------------------------------------------------
+    # cur_len is a scalar (uniform batch) or a [B] vector (continuous
+    # batching: every KV slot sits at its own write position).
     assert mode == "decode"
     B = h.shape[0]
+    cl = jnp.asarray(cur_len)
     q, k, v = L._project_qkv(p, h, h, cfg, env)
     x_kv = "cached-cross" if cross else None
     if rope:
-        pos = jnp.full((B, 1), cur_len)
+        pos = jnp.broadcast_to(cl.reshape(-1, 1), (B, 1))
         if cfg.mrope:
             q = L.apply_mrope(q, positions[:, None, :] if positions.ndim == 2
                               else positions, cfg.rope_theta, cfg.mrope_sections)
@@ -245,12 +300,16 @@ def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
         return (constrain(o @ p["wo"], env, env.dpx, None, None),
                 {"xk": cache["xk"], "xv": cache["xv"]})
     kc, vc = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # [B,Hkv,1,hd]
-    if window > 0:
-        idx = cur_len % cache["k"].shape[2]
+    Sc = cache["k"].shape[2]
+    idx = cl % Sc if window > 0 else cl
+    if cl.ndim:  # per-row write positions: masked write along the seq dim
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (B, 1, Sc, 1), 2)
+              == idx[:, None, None, None])
+        new_k = jnp.where(oh, kc, cache["k"])
+        new_v = jnp.where(oh, vc, cache["v"])
     else:
-        idx = cur_len
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, idx, axis=2)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, idx, axis=2)
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, idx, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, idx, axis=2)
     if env.plan.kv_cache == "seq_sharded":
         new_k = constrain(new_k, env, env.dpx, None, env.plan.tp_axis, None)
         new_v = constrain(new_v, env, env.dpx, None, env.plan.tp_axis, None)

@@ -1,0 +1,20 @@
+"""Continuous-batching serving subsystem.
+
+request -> RequestQueue -> ServingEngine (SlotPool + jitted prefill/decode)
+-> ServingMetrics -> registry KV -> AutoScaler policies -> cluster size.
+
+See docs/serving.md for the full loop and the one-command demo.
+"""
+from repro.serve.metrics import ServingMetrics, percentile  # noqa: F401
+from repro.serve.request import (  # noqa: F401
+    Request,
+    RequestQueue,
+    burst_trace,
+    poisson_trace,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    SERVE_PLAN,
+    ServingEngine,
+    run_to_completion,
+)
+from repro.serve.slots import SlotPool  # noqa: F401

@@ -1,0 +1,95 @@
+"""ServingMetrics — the exporter that closes the serving → autoscaler loop.
+
+Counters and sliding windows over the serving clock, snapshotted into the
+flat metric names AutoScaler.read_metrics() aggregates:
+
+    queue_depth       arrived-but-unadmitted requests (summed across nodes)
+    tokens_per_s      decode throughput over the trailing window
+    latency_p50_ms /  request completion latency percentiles
+    latency_p95_ms    (arrival -> last token, trailing window)
+    ttft_p95_ms       time to first token percentile
+    slot_occupancy    fraction of KV slots in use
+    deadline_misses   completed requests that blew their deadline (cumulative)
+
+NodeAgent.report_serving(snapshot()) writes each as metrics/<node>/<name> —
+the same KV path the straggler policy's step-time metrics use, so serving
+load is just another signal the reconcile loop reads.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.request import Request
+
+
+def percentile(values, q: float) -> float:
+    vs = list(values)
+    if not vs:
+        return 0.0
+    return float(np.percentile(vs, q))
+
+
+class ServingMetrics:
+    def __init__(self, *, window_s: float = 10.0):
+        self.window_s = window_s
+        self._tokens: Deque[Tuple[float, int]] = deque()  # (t, n_tokens)
+        self._latency: Deque[Tuple[float, float]] = deque()  # (t_done, s)
+        self._ttft: Deque[Tuple[float, float]] = deque()
+        self.total_tokens = 0
+        self.completed = 0
+        self.deadline_misses = 0
+
+    # -- recording ----------------------------------------------------------
+    def record_tokens(self, now: float, n: int) -> None:
+        if n > 0:
+            self._tokens.append((now, n))
+            self.total_tokens += n
+
+    def record_first_token(self, req: Request, now: float) -> None:
+        self._ttft.append((now, now - req.arrival_t))
+
+    def record_done(self, req: Request, now: float) -> None:
+        self.completed += 1
+        self._latency.append((now, now - req.arrival_t))
+        if req.missed_deadline:
+            self.deadline_misses += 1
+
+    def _trim(self, now: float) -> None:
+        horizon = now - self.window_s
+        for dq in (self._tokens, self._latency, self._ttft):
+            while dq and dq[0][0] < horizon:
+                dq.popleft()
+
+    # -- snapshot -----------------------------------------------------------
+    def snapshot(self, now: float, *, queue_depth: int,
+                 slot_occupancy: float) -> Dict[str, float]:
+        """Latency keys are OMITTED until a request completes (resp. emits a
+        first token) inside the window — publishing 0ms for "no data" would
+        read as excellent latency and make LatencyPolicy scale down
+        mid-flight (its no-data branch keys off the absence)."""
+        self._trim(now)
+        toks = sum(n for _, n in self._tokens)
+        span = self.window_s
+        if self._tokens:
+            # all in-window tokens at one timestamp (first step, or after an
+            # idle gap): fall back to the window span rather than ~0
+            span = now - self._tokens[0][0]
+            if span <= 0.0:
+                span = self.window_s
+        out = {
+            "queue_depth": float(queue_depth),
+            "tokens_per_s": toks / span if toks else 0.0,
+            "slot_occupancy": slot_occupancy,
+            "deadline_misses": float(self.deadline_misses),
+        }
+        lats = [s for _, s in self._latency]
+        ttfts = [s for _, s in self._ttft]
+        if lats:
+            out["latency_p50_ms"] = percentile(lats, 50.0) * 1e3
+            out["latency_p95_ms"] = percentile(lats, 95.0) * 1e3
+        if ttfts:
+            out["ttft_p95_ms"] = percentile(ttfts, 95.0) * 1e3
+        return out

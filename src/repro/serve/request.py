@@ -1,0 +1,116 @@
+"""Requests, the arrival queue, and trace generators.
+
+A Request is one generation job: a fixed-length prompt (the engine jits one
+prefill shape — variable prompts are padded by the trace generator), a
+per-request generation length, an arrival time on the serving clock, and an
+optional latency deadline. The RequestQueue gates admission on arrival time
+so a whole trace can be loaded up front and replayed deterministically under
+a ManualClock.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [prompt_len] int32
+    gen_len: int
+    arrival_t: float = 0.0
+    deadline_s: float = math.inf  # budget from arrival to completion
+    # -- filled in by the engine ------------------------------------------
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.arrival_t
+
+    @property
+    def missed_deadline(self) -> bool:
+        lat = self.latency_s
+        return lat is not None and lat > self.deadline_s
+
+
+class RequestQueue:
+    """Arrival-ordered queue with time-gated admission.
+
+    push() keeps the pending deque sorted by arrival time (traces are
+    generated sorted; online pushes append). pop_ready(now) releases the
+    next request whose arrival time has passed.
+    """
+
+    def __init__(self, requests: Optional[Sequence[Request]] = None):
+        self._pending: Deque[Request] = deque(
+            sorted(requests or [], key=lambda r: r.arrival_t))
+
+    def push(self, req: Request) -> None:
+        if self._pending and req.arrival_t < self._pending[-1].arrival_t:
+            items = sorted([*self._pending, req], key=lambda r: r.arrival_t)
+            self._pending = deque(items)
+        else:
+            self._pending.append(req)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        if self._pending and self._pending[0].arrival_t <= now:
+            return self._pending.popleft()
+        return None
+
+    def depth(self, now: float) -> int:
+        """Requests that have arrived but not been admitted."""
+        return sum(1 for r in self._pending if r.arrival_t <= now)
+
+    def __len__(self) -> int:  # total pending, arrived or not
+        return len(self._pending)
+
+
+def poisson_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
+                  vocab_size: int, gen_len: int = 16,
+                  gen_len_max: Optional[int] = None,
+                  deadline_s: float = math.inf,
+                  seed: int = 0) -> List[Request]:
+    """Poisson arrivals (exponential inter-arrival at `rate_rps`) with random
+    prompts and uniform gen lengths in [gen_len, gen_len_max]. Deterministic
+    for a given seed."""
+    rng = np.random.default_rng(seed)
+    gmax = gen_len if gen_len_max is None else gen_len_max
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        out.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab_size, size=(prompt_len,),
+                                dtype=np.int32),
+            gen_len=int(rng.integers(gen_len, gmax + 1)),
+            arrival_t=t,
+            deadline_s=deadline_s,
+        ))
+    return out
+
+
+def burst_trace(n_requests: int, *, prompt_len: int, vocab_size: int,
+                gen_len: int = 16, at: float = 0.0,
+                deadline_s: float = math.inf, seed: int = 0) -> List[Request]:
+    """All requests arrive at once — the worst-case queue spike the
+    autoscaler must absorb."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid,
+                    prompt=rng.integers(0, vocab_size, size=(prompt_len,),
+                                        dtype=np.int32),
+                    gen_len=gen_len, arrival_t=at, deadline_s=deadline_s)
+            for rid in range(n_requests)]

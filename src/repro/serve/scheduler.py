@@ -1,0 +1,178 @@
+"""ServingEngine — continuous batching over a slot-pooled KV cache.
+
+One scheduler iteration (step()):
+
+  1. admit: while a KV slot is free and a request has arrived, run the
+     batch-1 prefill, write its cache into the slot (jitted, traced slot
+     index — no re-compile), and emit the request's first token;
+  2. decode: one jitted step over the *whole* pool — a [num_slots] cur_len
+     vector lets every slot attend and write at its own depth, so requests
+     join and leave the running batch freely;
+  3. retire: slots whose request hit gen_len free up and their latency is
+     recorded.
+
+The engine never re-jits after construction: prefill is pinned to
+(1, prompt_len), decode to (num_slots, 1). Greedy (argmax) decoding keeps
+continuous-batched output token-for-token equal to the one-shot
+serve_batch baseline — the correctness bar tests/test_serving.py holds it to.
+
+The clock is injected: tests and the simulated cluster drive a ManualClock
+(deterministic arrival replay); nothing here sleeps.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelPlan
+from repro.core.clock import Clock, ManualClock
+from repro.launch import steps as St
+from repro.models.env import Env
+from repro.serve.metrics import ServingMetrics
+from repro.serve.request import Request, RequestQueue
+from repro.serve.slots import SlotPool
+
+Pytree = Any
+
+SERVE_PLAN = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
+                          kv_cache="replicated")
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Pytree, *,
+                 num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
+                 plan: Optional[ParallelPlan] = None, mesh=None,
+                 clock: Optional[Clock] = None,
+                 metrics_window_s: float = 10.0):
+        self.cfg = cfg
+        self.params = params
+        self.prompt_len = prompt_len
+        self.max_gen = max_gen
+        self.clock = clock or ManualClock()
+        env = Env(mesh=mesh, plan=plan or SERVE_PLAN)
+        self.env = env
+        self.pool = SlotPool(cfg, env, num_slots=num_slots,
+                             prompt_len=prompt_len, max_gen=max_gen)
+        self.queue = RequestQueue()
+        self.metrics = ServingMetrics(window_s=metrics_window_s)
+        self._prefill = jax.jit(St.make_prefill_step(cfg, env))
+        self._decode = jax.jit(St.make_slot_decode_step(cfg, env),
+                               donate_argnums=(1,))
+        self._last_tok = np.zeros((num_slots, 1), np.int32)
+        self._inflight: Dict[int, Request] = {}  # rid -> request
+        self.completed: List[Request] = []
+        self.decode_steps = 0
+
+    # -- state -----------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(self._inflight)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def drained(self) -> bool:
+        return not self.busy and not self.pending()
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            if len(r.prompt) != self.prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} != "
+                    f"engine prompt_len {self.prompt_len} (pad the trace)")
+            if r.gen_len > self.max_gen:
+                raise ValueError(f"request {r.rid}: gen_len {r.gen_len} > "
+                                 f"engine max_gen {self.max_gen}")
+            self.queue.push(r)
+
+    # -- scheduler iteration ------------------------------------------------------
+    def step(self) -> Dict[str, float]:
+        """Admit arrivals, step the mixed decode batch once, retire finished
+        requests. Returns the metrics snapshot (what a node would publish)."""
+        now = self.clock.now()
+        while True:
+            free = self.pool.free_slots()
+            if not free:
+                break
+            req = self.queue.pop_ready(now)
+            if req is None:
+                break
+            self._admit(free[0], req, now)
+
+        active = self.pool.active_slots()
+        if active:
+            logits, self.pool.caches = self._decode(
+                self.params, self.pool.caches, jnp.asarray(self._last_tok),
+                jnp.asarray(self.pool.cur_lens()))
+            nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab_size], -1)
+                             ).astype(np.int32)
+            self.decode_steps += 1
+            emitted = 0
+            for slot in active:
+                info = self.pool.advance(slot)
+                req = self._inflight[info.rid]
+                req.tokens.append(int(nxt[slot]))
+                self._last_tok[slot, 0] = nxt[slot]
+                emitted += 1
+                if self.pool.finished(slot):
+                    self._retire(slot, now)
+            self.metrics.record_tokens(now, emitted)
+        return self.snapshot()
+
+    def _admit(self, slot: int, req: Request, now: float) -> None:
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+        self.pool.insert(slot, req.rid, caches, req.gen_len)
+        first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        req.t_admit = now
+        req.t_first_token = now
+        req.tokens.append(first)
+        self._last_tok[slot, 0] = first
+        self._inflight[req.rid] = req
+        self.metrics.record_first_token(req, now)
+        self.metrics.record_tokens(now, 1)
+        if self.pool.finished(slot):  # gen_len == 1: prefill was the job
+            self._retire(slot, now)
+
+    def _retire(self, slot: int, now: float) -> None:
+        rid = self.pool.rid_of(slot)
+        req = self._inflight.pop(rid)
+        req.t_done = now
+        self.completed.append(req)
+        self.metrics.record_done(req, now)
+        self.pool.evict(slot)
+
+    # -- reporting ----------------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        now = self.clock.now()
+        return self.metrics.snapshot(now, queue_depth=self.queue.depth(now),
+                                     slot_occupancy=self.pool.occupancy)
+
+    def results(self) -> Dict[int, List[int]]:
+        """rid -> generated tokens, for every completed request."""
+        return {r.rid: list(r.tokens) for r in self.completed}
+
+
+def run_to_completion(engine: ServingEngine,
+                      requests: Sequence[Request] = (), *,
+                      dt: float = 0.05, max_steps: int = 100_000,
+                      on_step: Optional[Callable[[int, Dict[str, float]],
+                                                 None]] = None
+                      ) -> Dict[int, List[int]]:
+    """Standalone drain loop (no cluster): step the engine, advance the
+    clock by `dt` between iterations. VirtualCluster.serve() is the
+    cluster-integrated version of this loop."""
+    engine.submit(requests)
+    steps = 0
+    while not engine.drained() and steps < max_steps:
+        snap = engine.step()
+        engine.clock.sleep(dt)
+        if on_step is not None:
+            on_step(steps, snap)
+        steps += 1
+    if not engine.drained():
+        raise RuntimeError(f"serve did not drain in {max_steps} steps")
+    return engine.results()

@@ -1,0 +1,128 @@
+"""SlotPool — a fixed-capacity, slot-addressed KV-cache pool.
+
+The pool owns one init_cache() pytree whose batch dim is the slot dim, plus
+host-side bookkeeping (which request occupies which slot, each slot's write
+position). Inserting a prefilled request and stepping the mixed decode batch
+are both jitted once at pool shape — admission never re-compiles, which is
+what lets new requests join a running decode batch (continuous batching).
+
+All device work is functional: insert/evict return nothing but swap the
+pool's cache pytree; the engine owns the only reference (buffers are donated
+through the jitted ops, so a pool slot update does not copy the pool).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as Mo
+from repro.models.env import Env
+
+Pytree = Any
+
+FREE = -1  # slot_rid value for an unoccupied slot
+
+
+@dataclass
+class SlotInfo:
+    rid: int
+    cur_len: int  # next decode write position for this slot
+    tokens_done: int  # generated so far (prefill emits the first)
+    gen_len: int
+
+
+class SlotPool:
+    def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
+                 prompt_len: int, max_gen: int):
+        if cfg.family == "vlm" or cfg.is_encdec:
+            raise ValueError(
+                f"{cfg.name}: continuous batching supports decoder-only "
+                "archs (vlm/enc-dec prefill carries extra modalities)")
+        if "local" in cfg.block_pattern + cfg.pattern_tail:
+            # sliding-window blocks keep a ring-aligned cache of size
+            # min(window, seq); growing a prompt-sized ring to the pool's
+            # ring size would scramble the slot=pos%w alignment
+            raise ValueError(
+                f"{cfg.name}: sliding-window ('local') blocks are not yet "
+                "supported by the slot pool (ring-buffer caches cannot be "
+                "grown after prefill)")
+        self.cfg = cfg
+        self.env = env
+        self.num_slots = num_slots
+        self.prompt_len = prompt_len
+        self.max_gen = max_gen
+        self.caches: Pytree = Mo.init_cache(cfg, env, num_slots,
+                                            prompt_len + max_gen)
+        self._slots: List[Optional[SlotInfo]] = [None] * num_slots
+        # grow the batch-1 prefill cache to pool seq length, then write it
+        # into the slot — one jitted op, slot index traced (no re-jit per slot)
+        self._insert = jax.jit(
+            lambda pool, c, slot: Mo.cache_insert_slot(
+                pool, Mo.grow_caches(c, max_gen), slot),
+            donate_argnums=(0,))
+        self._evict = jax.jit(Mo.cache_evict_slot, donate_argnums=(0,))
+
+    # -- occupancy ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self.free_slots()) / max(self.num_slots, 1)
+
+    def info(self, slot: int) -> Optional[SlotInfo]:
+        return self._slots[slot]
+
+    def rid_of(self, slot: int) -> int:
+        s = self._slots[slot]
+        return FREE if s is None else s.rid
+
+    # -- admission / retirement --------------------------------------------
+    def insert(self, slot: int, rid: int, prefill_caches: Pytree,
+               gen_len: int) -> None:
+        """Bind `rid` to `slot` and write its prefilled (batch-1, length
+        prompt_len) cache into the pool."""
+        assert self._slots[slot] is None, f"slot {slot} occupied"
+        self.caches = self._insert(self.caches, prefill_caches,
+                                   jnp.asarray(slot, jnp.int32))
+        self._slots[slot] = SlotInfo(rid=rid, cur_len=self.prompt_len,
+                                     tokens_done=1, gen_len=gen_len)
+
+    def evict(self, slot: int, *, zero: bool = False) -> None:
+        """Free `slot`. Insert fully overwrites a slot, so zeroing is only
+        for hygiene (tests assert evicted slots hold no stale KV)."""
+        self._slots[slot] = None
+        if zero:
+            self.caches = self._evict(self.caches,
+                                      jnp.asarray(slot, jnp.int32))
+
+    # -- decode-batch views ---------------------------------------------------
+    def cur_lens(self) -> np.ndarray:
+        """[num_slots] int32 write positions (free slots pinned to 0; their
+        writes land in slots that insert fully overwrites)."""
+        return np.array([0 if s is None else s.cur_len for s in self._slots],
+                        np.int32)
+
+    def advance(self, slot: int) -> SlotInfo:
+        """Record one decoded token for `slot`; returns the updated info."""
+        s = self._slots[slot]
+        assert s is not None
+        s.cur_len += 1
+        s.tokens_done += 1
+        return s
+
+    def finished(self, slot: int) -> bool:
+        s = self._slots[slot]
+        return s is not None and s.tokens_done >= s.gen_len
+
+    # -- introspection (tests) ----------------------------------------------
+    def read_slot(self, slot: int) -> Pytree:
+        return Mo.cache_read_slot(self.caches, jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,84 @@
+"""Tiny deterministic stand-in for hypothesis (optional test dep).
+
+When hypothesis isn't installed, property tests import these shims and run
+each property over a small fixed set of examples drawn deterministically
+from the declared strategies — no shrinking, no randomization, but every
+suite collects and every property gets exercised from a clean checkout
+(`pip install -r requirements.txt` brings in the real thing).
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+def sampled_from(xs):
+    return _Strategy(xs)
+
+
+def booleans():
+    return _Strategy([False, True])
+
+
+def integers(min_value=0, max_value=100):
+    mid = (min_value + max_value) // 2
+    return _Strategy(sorted({min_value, mid, max_value}))
+
+
+def floats(min_value=0.0, max_value=1.0):
+    mid = (min_value + max_value) / 2.0
+    return _Strategy(sorted({min_value, mid, max_value}))
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10):
+    rnd = random.Random(0)
+    out = []
+    for n in sorted({min_size, (min_size + max_size) // 2, max_size}):
+        out.append([rnd.choice(elements.examples) for _ in range(n)])
+    return _Strategy(out)
+
+
+class _St:
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+
+
+st = _St()
+
+
+def given(**strategies):
+    """Run the property once per example row; row i takes example
+    i % len(examples) from each strategy (cycled), so every strategy's
+    examples all appear at least once."""
+    def deco(fn):
+        def runner():
+            n = max(len(s.examples) for s in strategies.values())
+            for i in range(n):
+                kwargs = {name: s.examples[i % len(s.examples)]
+                          for name, s in strategies.items()}
+                fn(**kwargs)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco

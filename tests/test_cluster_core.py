@@ -1,14 +1,18 @@
 """The paper's behaviors end-to-end: auto-registration -> rendered hostfile
 -> mesh; auto-scaling; failure handling; stragglers (hypothesis properties
-included)."""
+included; without hypothesis the churn property runs on fixed examples)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import (ClusterImage, StragglerPolicy, TargetSizePolicy,
-                        VirtualCluster)
+try:  # optional test dep: falls back to fixed deterministic examples
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (ClusterImage, QueueDepthPolicy, StragglerPolicy,
+                        TargetSizePolicy, VirtualCluster)
 from repro.core.membership import HPC_SERVICE
 from repro.core.template import HOSTFILE_KEY
 from repro.configs import get_smoke
@@ -92,6 +96,34 @@ def test_image_skew_detection():
     c.registry.register(HPC_SERVICE, "rogue", "simnet://rogue",
                         meta={"image": "sha256:deadbeef", "n_devices": "1"})
     assert not c.verify_images()
+    c.shutdown()
+
+
+def test_scale_to_retargets_default_policy_for_autoscale_pumps():
+    """With the implicit TargetSizePolicy, an autoscale pump after
+    scale_to must hold the operator's size, not revert to the
+    constructor pin (the straggler-healing pattern in the examples)."""
+    c = VirtualCluster(n_compute=2)
+    c.scale_to(4)
+    assert len(c.compute_nodes()) == 4
+    c.pump(autoscale=True)
+    assert len(c.compute_nodes()) == 4, "pump reverted the operator resize"
+    c.shutdown()
+
+
+def test_scale_to_does_not_replace_installed_policy():
+    """Operator scale_to is a one-shot plan; the configured autoscaling
+    policy must survive it (regression: scale_to used to pin
+    TargetSizePolicy permanently, disabling autoscaling)."""
+    pol = QueueDepthPolicy(target_per_node=2, min_nodes=1, max_nodes=8)
+    c = VirtualCluster(n_compute=1, policy=pol)
+    c.scale_to(3)
+    assert len(c.compute_nodes()) == 3
+    assert c.scaler.policy is pol, "scale_to must not overwrite the policy"
+    # the still-installed policy keeps reconciling from metrics
+    c.registry.kv_put("metrics/head000/queue_depth", "8")
+    c.pump(autoscale=True)
+    assert len(c.compute_nodes()) == 4, "policy resumed after scale_to"
     c.shutdown()
 
 

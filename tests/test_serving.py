@@ -1,0 +1,314 @@
+"""Continuous-batching serving layer: slot pool, scheduler, metrics, and the
+closed serving -> metrics -> autoscaler loop. Everything runs on a
+ManualClock — arrival replay, latency percentiles, and scaling decisions are
+fully deterministic."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import LatencyPolicy, QueueDepthPolicy, VirtualCluster
+from repro.core.clock import ManualClock
+from repro.launch.serve import serve_batch
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.serve import (SERVE_PLAN, Request, RequestQueue, ServingEngine,
+                         burst_trace, percentile, poisson_trace,
+                         run_to_completion)
+
+CFG = get_smoke("paper-demo")
+ENV0 = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
+P = 16  # prompt length used throughout
+
+
+def _engine(num_slots=2, max_gen=8, clock=None):
+    return ServingEngine(CFG, PARAMS, num_slots=num_slots, prompt_len=P,
+                         max_gen=max_gen, clock=clock or ManualClock())
+
+
+def _trace(n, gen_len=4, arrival_t=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, (P,),
+                                        dtype=np.int32),
+                    gen_len=gen_len, arrival_t=arrival_t) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# queue + traces
+# ---------------------------------------------------------------------------
+
+
+def test_queue_gates_on_arrival_time():
+    q = RequestQueue(_trace(2, arrival_t=1.0))
+    assert q.pop_ready(0.5) is None and q.depth(0.5) == 0
+    assert len(q) == 2
+    r = q.pop_ready(1.0)
+    assert r is not None and q.depth(1.0) == 1
+
+
+def test_poisson_trace_is_deterministic_and_sorted():
+    a = poisson_trace(10, 5.0, prompt_len=P, vocab_size=CFG.vocab_size,
+                      gen_len=4, gen_len_max=8, seed=3)
+    b = poisson_trace(10, 5.0, prompt_len=P, vocab_size=CFG.vocab_size,
+                      gen_len=4, gen_len_max=8, seed=3)
+    assert [r.arrival_t for r in a] == [r.arrival_t for r in b]
+    assert all(x.arrival_t <= y.arrival_t for x, y in zip(a, a[1:]))
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert all(4 <= r.gen_len <= 8 for r in a)
+
+
+def test_snapshot_omits_latency_keys_until_data_exists():
+    """No completions in the window -> no latency keys published. A 0ms
+    placeholder would read as excellent latency and make LatencyPolicy
+    scale down mid-flight; its no-data branch keys off the absence."""
+    clock = ManualClock()
+    eng = _engine(num_slots=1, clock=clock)
+    eng.submit(_trace(1, gen_len=4))
+    snap = eng.step()  # admitted, first token emitted, nothing completed
+    assert "latency_p95_ms" not in snap and "latency_p50_ms" not in snap
+    assert "ttft_p95_ms" in snap  # first token did land
+    assert snap["tokens_per_s"] > 0
+    pol = LatencyPolicy(target_p95_ms=100.0, min_nodes=1, max_nodes=4)
+
+    class V:
+        compute = (1, 2, 3)
+
+    m = dict(snap)
+    assert pol.decide(V, m).target == 3, "no latency data -> hold, not shrink"
+
+
+# ---------------------------------------------------------------------------
+# slot admission / eviction
+# ---------------------------------------------------------------------------
+
+
+def test_slot_admission_and_eviction_lifecycle():
+    clock = ManualClock()
+    eng = _engine(num_slots=2, clock=clock)
+    eng.submit(_trace(3, gen_len=3))
+    eng.step()
+    # 2 slots -> 2 admitted, third waits in queue
+    assert len(eng.pool.free_slots()) == 0
+    assert eng.pool.occupancy == 1.0
+    assert eng.queue.depth(clock.now()) == 1
+    rids = {eng.pool.rid_of(s) for s in eng.pool.active_slots()}
+    assert rids == {0, 1}
+    # drive to completion: finished slots free up and request 2 is admitted
+    for _ in range(10):
+        clock.advance(0.05)
+        eng.step()
+        if eng.drained():
+            break
+    assert eng.drained()
+    assert sorted(eng.results()) == [0, 1, 2]
+    assert eng.pool.free_slots() == [0, 1]
+    # every request produced exactly gen_len tokens
+    assert all(len(t) == 3 for t in eng.results().values())
+
+
+def test_admitting_mid_decode_does_not_disturb_running_requests():
+    """The continuous-batching property: a request joining the batch leaves
+    already-running slots' tokens unchanged (same as a solo run)."""
+    tr = _trace(2, gen_len=6, seed=7)
+    tr[1].arrival_t = 0.12  # joins while request 0 is mid-decode
+    solo = _engine(num_slots=1, clock=ManualClock())
+    out_solo = run_to_completion(solo, [_trace(2, gen_len=6, seed=7)[0]],
+                                 dt=0.05)
+    eng = _engine(num_slots=2, clock=ManualClock())
+    out = run_to_completion(eng, tr, dt=0.05)
+    assert out[0] == out_solo[0]
+
+
+def test_evicted_slot_is_zeroed_when_requested():
+    eng = _engine(num_slots=2)
+    eng.submit(_trace(1, gen_len=2))
+    run_to_completion(eng, dt=0.05)
+    # re-point: evict with zeroing and check the KV slot is actually zeroed
+    lg, caches = eng._prefill(PARAMS, {"tokens": jnp.asarray(
+        _trace(1)[0].prompt)[None]})
+    eng.pool.insert(0, 99, caches, 4)
+    slot = eng.pool.read_slot(0)
+    assert any(float(jnp.abs(l).sum()) > 0 for l in jax.tree.leaves(slot))
+    eng.pool.evict(0, zero=True)
+    slot = eng.pool.read_slot(0)
+    assert all(float(jnp.abs(l).sum()) == 0 for l in jax.tree.leaves(slot))
+    assert eng.pool.rid_of(0) == -1
+
+
+def test_gen_len_one_request_completes_at_admission():
+    eng = _engine(num_slots=1)
+    out = run_to_completion(eng, _trace(1, gen_len=1), dt=0.05)
+    assert len(out[0]) == 1
+    assert eng.pool.free_slots() == [0]
+
+
+def test_engine_rejects_sliding_window_archs():
+    """'local' ring-buffer caches can't be grown after prefill; the pool
+    must refuse them up front instead of crashing inside XLA at admit."""
+    cfg = get_smoke("recurrentgemma-9b")
+    with pytest.raises(ValueError, match="local"):
+        ServingEngine(cfg, {}, num_slots=1, prompt_len=8, max_gen=4)
+
+
+def test_engine_rejects_mis_sized_requests():
+    eng = _engine(num_slots=1, max_gen=4)
+    bad_prompt = Request(rid=0, prompt=np.zeros((P + 1,), np.int32), gen_len=2)
+    with pytest.raises(ValueError):
+        eng.submit([bad_prompt])
+    bad_gen = Request(rid=1, prompt=np.zeros((P,), np.int32), gen_len=9)
+    with pytest.raises(ValueError):
+        eng.submit([bad_gen])
+
+
+# ---------------------------------------------------------------------------
+# correctness: continuous batching == one-shot
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_batched_tokens_match_one_shot():
+    """Requests flowing through a 2-slot pool (staggered admissions, mixed
+    depths) must emit token-for-token what the one-shot uniform batch
+    emits."""
+    gen = 8
+    trace = poisson_trace(6, 12.0, prompt_len=P, vocab_size=CFG.vocab_size,
+                          gen_len=gen, seed=11)
+    eng = _engine(num_slots=2, max_gen=gen)
+    out = run_to_completion(eng, trace, dt=0.05)
+    prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+    base = np.asarray(serve_batch(None, CFG, PARAMS, prompts, gen,
+                                  SERVE_PLAN))
+    for r in trace:
+        assert np.array_equal(base[r.rid], np.array(out[r.rid])), r.rid
+
+
+def test_mixed_gen_lengths_match_one_shot_prefix():
+    gen_max = 8
+    trace = poisson_trace(5, 10.0, prompt_len=P, vocab_size=CFG.vocab_size,
+                          gen_len=2, gen_len_max=gen_max, seed=5)
+    eng = _engine(num_slots=3, max_gen=gen_max)
+    out = run_to_completion(eng, trace, dt=0.05)
+    prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+    base = np.asarray(serve_batch(None, CFG, PARAMS, prompts, gen_max,
+                                  SERVE_PLAN))
+    for r in trace:
+        assert np.array_equal(base[r.rid][:r.gen_len], np.array(out[r.rid]))
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_and_deadlines():
+    clock = ManualClock()
+    eng = _engine(num_slots=1, clock=clock)
+    tr = _trace(2, gen_len=3)
+    tr[1].deadline_s = 0.01  # will queue behind request 0 -> miss
+    run_to_completion(eng, tr, dt=0.1)
+    snap = eng.snapshot()
+    assert snap["queue_depth"] == 0.0
+    assert snap["deadline_misses"] == 1.0
+    assert snap["latency_p95_ms"] >= snap["latency_p50_ms"] > 0
+    assert eng.metrics.total_tokens == 6
+    lat = [r.latency_s for r in eng.completed]
+    assert all(l is not None and l > 0 for l in lat)
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: serve -> metrics -> policy -> cluster size
+# ---------------------------------------------------------------------------
+
+
+def _serve_cluster(policy, n=1, cooldown=0.3):
+    c = VirtualCluster(n_compute=n, policy=policy, cooldown_s=cooldown)
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, prompt_len=P, max_gen=8,
+                        clock=c.clock)
+    return c, eng
+
+
+def test_queue_depth_policy_scales_up_and_back_down_mid_serve():
+    pol = QueueDepthPolicy(target_per_node=2, min_nodes=1, max_nodes=4)
+    c, eng = _serve_cluster(pol)
+    trace = burst_trace(10, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=8, seed=2)
+    sizes = []
+
+    def on_step(i, snap, cl):
+        sizes.append(len(cl.current_view().compute))
+
+    out = c.serve(eng, trace, dt=lambda nn: 0.05 / max(nn, 1),
+                  on_step=on_step)
+    assert sorted(out) == list(range(10))
+    assert max(sizes) > 1, "burst backlog must trigger scale-up"
+    assert sizes[-1] == 1, "drained queue must scale back to min_nodes"
+    # the policy was never replaced mid-serve
+    assert c.scaler.policy is pol
+    c.shutdown()
+
+
+def test_latency_policy_scales_on_p95():
+    pol = LatencyPolicy(target_p95_ms=150.0, min_nodes=1, max_nodes=4)
+    c, eng = _serve_cluster(pol)
+    trace = burst_trace(8, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=8, seed=4)
+    sizes = []
+    c.serve(eng, trace, dt=lambda nn: 0.05 / max(nn, 1),
+            on_step=lambda i, s, cl: sizes.append(
+                len(cl.current_view().compute)))
+    assert max(sizes) > 1, "p95 over target must trigger scale-up"
+    c.shutdown()
+
+
+def test_latency_policy_decisions():
+    pol = LatencyPolicy(target_p95_ms=100.0, min_nodes=1, max_nodes=4)
+
+    class V:
+        compute = (1, 2)
+
+    assert pol.decide(V, {}).target == 1  # no data, nothing in flight: idle
+    # no latency data but work queued or slots busy -> hold, don't shrink
+    assert pol.decide(V, {"queue_depth": 3.0}).target == 2
+    assert pol.decide(V, {"slot_occupancy": 0.5}).target == 2
+    assert pol.decide(V, {"latency_p95_ms": 500.0}).target == 3
+    assert pol.decide(V, {"latency_p95_ms": 10.0,
+                          "queue_depth": 0.0}).target == 1
+    # low latency but a backlog: keep capacity
+    assert pol.decide(V, {"latency_p95_ms": 10.0,
+                          "queue_depth": 5.0}).target == 2
+
+
+def test_serving_metrics_flow_into_scaler_aggregation():
+    c = VirtualCluster(n_compute=1)
+    agent = c.sim.nodes[c.head_id].agent
+    agent.report_serving({"latency_p95_ms": 120.0, "tokens_per_s": 50.0,
+                          "queue_depth": 3.0, "slot_occupancy": 0.5})
+    c.sim.nodes[c.compute_nodes()[0]].agent.report_serving(
+        {"latency_p95_ms": 80.0, "tokens_per_s": 30.0, "queue_depth": 1.0,
+         "slot_occupancy": 1.0})
+    m = c.scaler.read_metrics(c.registry)
+    assert m["latency_p95_ms"] == 120.0  # worst node
+    assert m["tokens_per_s"] == 80.0  # summed
+    assert m["queue_depth"] == 4.0  # summed
+    assert m["slot_occupancy"] == pytest.approx(0.75)  # averaged
+    c.shutdown()
+
+
+def test_stale_serving_metrics_are_tombstoned():
+    """A metric the snapshot stops reporting (its window lapsed) must stop
+    reaching the policy — otherwise a burst-era p95 pins the cluster at
+    max_nodes long after the burst drained."""
+    c = VirtualCluster(n_compute=1)
+    agent = c.sim.nodes[c.head_id].agent
+    agent.report_serving({"latency_p95_ms": 900.0, "queue_depth": 5.0})
+    assert c.scaler.read_metrics(c.registry)["latency_p95_ms"] == 900.0
+    # next snapshot omits latency (no completions in window)
+    agent.report_serving({"queue_depth": 0.0})
+    m = c.scaler.read_metrics(c.registry)
+    assert "latency_p95_ms" not in m
+    assert m["queue_depth"] == 0.0
+    c.shutdown()

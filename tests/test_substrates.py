@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:  # optional test dep: falls back to fixed deterministic examples
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import MemmapCorpus, SyntheticLM

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + benchmark smoke subset + the closed-loop
+# serving demo with token verification. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke =="
+python benchmarks/run.py --smoke
+
+echo "== serving demo (continuous batching + autoscale + verify) =="
+python -m repro.launch.serve --trace poisson --smoke --verify
