@@ -14,7 +14,8 @@ def main() -> None:
                                           bench_cluster_formation,
                                           bench_env_capture,
                                           bench_interconnect_model,
-                                          bench_mpi_job,
+                                          bench_mpi_job, bench_serve_paged,
+                                          bench_serve_paged_full,
                                           bench_serve_throughput,
                                           bench_serve_throughput_full,
                                           bench_step_time)
@@ -25,12 +26,13 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput)
+        benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput,
+                   bench_serve_paged)
     else:
         benches = (bench_cluster_formation, bench_autoscale_response,
                    bench_mpi_job, bench_env_capture,
                    bench_interconnect_model, bench_serve_throughput_full,
-                   bench_step_time)
+                   bench_step_time, bench_serve_paged_full)
 
     print("name,us_per_call,derived")
     for bench in benches:

@@ -93,7 +93,10 @@ class LatencyPolicy:
         n = len(view.compute)
         p95 = metrics.get("latency_p95_ms", None)
         depth = metrics.get("queue_depth", 0.0)
-        occ = metrics.get("slot_occupancy", 0.0)
+        # paged KV publishes block occupancy (the signal that actually
+        # gates admission); fall back to slot occupancy
+        occ = max(metrics.get("slot_occupancy", 0.0),
+                  metrics.get("kv_block_occupancy", 0.0))
         if p95 is None:
             # no completions in the metrics window: hold while anything is
             # queued or in flight (mid-burst warmup), shrink once truly idle
@@ -170,9 +173,11 @@ class AutoScaler:
                     if k.startswith(f"node_{name}/")]
             if vals:
                 out[name] = agg(vals)
-        occ = [v for k, v in out.items() if k.startswith("node_slot_occupancy/")]
-        if occ:
-            out["slot_occupancy"] = sum(occ) / len(occ)
+        for name in ("slot_occupancy", "kv_block_occupancy"):
+            occ = [v for k, v in out.items()
+                   if k.startswith(f"node_{name}/")]
+            if occ:
+                out[name] = sum(occ) / len(occ)
         return out
 
     def apply_plan(self, view: ClusterView, plan: ScalePlan

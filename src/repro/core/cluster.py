@@ -106,11 +106,14 @@ class VirtualCluster:
               max_steps: int = 100_000, on_step=None):
         """Drive a ServingEngine to completion against this cluster.
 
-        Each iteration: one scheduler step (admit / mixed-batch decode /
-        retire), publish the engine's metrics snapshot through the head
-        node's agent into the registry KV, then pump the control plane with
-        autoscaling — so the installed policy (QueueDepthPolicy,
-        LatencyPolicy, ...) resizes the cluster *mid-serve* from live load.
+        Each iteration: one scheduler step (admit / mixed-batch decode +
+        prefill lanes / retire), publish the engine's metrics snapshot
+        through the head node's agent into the registry KV, then pump the
+        control plane with autoscaling — so the installed policy
+        (QueueDepthPolicy, LatencyPolicy, ...) resizes the cluster
+        *mid-serve* from live load. With a paged KV engine the snapshot
+        carries kv_block_occupancy — blocks in use, the signal that
+        actually gates admission — alongside slot_occupancy.
 
         `dt` is the simulated wall time of one decode step: a float, or a
         callable (n_compute -> seconds) to model data-parallel speedup —

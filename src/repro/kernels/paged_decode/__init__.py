@@ -1,0 +1,12 @@
+"""Paged flash-decode: one-token attention over a block-paged KV pool.
+
+The KV cache is a global pool of fixed-size blocks [NB, Hkv, bs, hd];
+each batch row names its blocks through a [B, MB] block table (vLLM-style
+paged attention). The Pallas kernel scalar-prefetches the table and the
+per-row valid lengths so block DMA addresses come straight from SMEM and
+blocks past a row's current length are skipped entirely.
+"""
+from repro.kernels.paged_decode.ops import (  # noqa: F401
+    paged_flash_decode,
+    paged_gather_decode,
+)

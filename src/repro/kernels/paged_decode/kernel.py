@@ -1,0 +1,116 @@
+"""Paged flash-decode Pallas TPU kernel.
+
+One-token attention where K/V live in a global block pool [NB, Hkv, bs, hd]
+indexed by per-row block tables (serve/blocks.py). Both the table and the
+per-row valid lengths ride in via scalar prefetch (SMEM): the table entry
+feeds the K/V BlockSpec index maps directly — the gather IS the DMA
+schedule, no materialized [B, MB*bs] copy of the cache. Blocks past a
+row's current length skip both compute (pl.when) and HBM traffic: their
+index map clamps to the row's last valid block, and the Pallas pipeline
+elides the copy when consecutive grid steps name the same block — so a
+row that has decoded 40 tokens reads ceil(40/bs) blocks no matter how
+wide its table is.
+
+Grid: (B, Hq, MB) — blocks innermost/sequential; scratch carries the
+online-softmax (m, l, acc) like kernels/flash_decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _pd_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_sc, l_sc, acc_sc, *, scale: float, bs: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    cur_len = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    k_start = j * bs
+
+    @pl.when(k_start <= cur_len)
+    def _compute():
+        q = q_ref[...].reshape(1, -1).astype(jnp.float32)  # [1, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bs, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(kpos <= cur_len, s, NEG_INF)
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(
+            o_ref.dtype).reshape(o_ref.shape)
+
+
+def paged_flash_decode_kernel(q, k_pool, v_pool, tables, lengths, *,
+                              interpret: bool = False):
+    """q: [B,Hq,hd]; k_pool/v_pool: [NB,Hkv,bs,hd]; tables: [B,MB] int32
+    physical block ids; lengths: [B] int32 last valid logical position
+    (-1 = row fully masked -> zero output).
+
+    Returns o [B,Hq,hd] f32.
+    """
+    B, Hq, hd = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    MB = tables.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_pd_kernel, scale=scale, bs=bs)
+
+    def kv_index(b, h, j, tbl, L, g=g):
+        # clamp dead blocks (j past the row's length) to the last live one:
+        # revisiting the same block index makes the pipeline skip the copy
+        j_live = jnp.maximum(jnp.minimum(j, L[b] // bs), 0)
+        return (tbl[b, j_live], h // g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + lengths land in SMEM
+        grid=(B, Hq, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, tbl, L: (b, h, 0)),
+            pl.BlockSpec((1, 1, bs, hd), kv_index),
+            pl.BlockSpec((1, 1, bs, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, j, tbl, L: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q, k_pool, v_pool)

@@ -1,0 +1,63 @@
+"""Public paged-decode ops: Pallas kernel + vectorized XLA gather fallback.
+
+SERVE_PLAN (serve/scheduler.py) picks the Pallas path on TPU; on CPU the
+serving hot loop runs layers.attention_paged_decode, which uses
+gather_blocks() below to rebuild each row's contiguous KV view and then
+the same attention_decode math as the slot pool — that shared fp path is
+what keeps the greedy token-exact equivalence tests meaningful without
+paying interpret-mode overhead. paged_gather_decode is the standalone
+(cfg/env-free) composition of the same gather + masked softmax, used to
+cross-check the kernel in tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.paged_decode.kernel import paged_flash_decode_kernel
+
+
+def gather_blocks(pool, tables):
+    """[NB,Hkv,bs,hd] pool + [B,MB] tables -> contiguous [B,Hkv,MB*bs,hd]
+    per-row KV view (logical order == table order). The one gather
+    implementation every XLA paged path shares."""
+    B, MB = tables.shape
+    _, Hkv, bs, hd = pool.shape
+    return pool[tables].transpose(0, 2, 1, 3, 4).reshape(B, Hkv, MB * bs, hd)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, k_pool, v_pool, tables, lengths, *,
+                       interpret: bool | None = None):
+    """Paged decode attention via the Pallas kernel.
+
+    q [B,Hq,hd]; k_pool/v_pool [NB,Hkv,bs,hd]; tables [B,MB]; lengths [B].
+    Returns [B,Hq,hd] f32 (callers cast)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return paged_flash_decode_kernel(q, k_pool, v_pool, tables, lengths,
+                                     interpret=interpret)
+
+
+@jax.jit
+def paged_gather_decode(q, k_pool, v_pool, tables, lengths):
+    """XLA composition: gather_blocks + masked softmax attention — same
+    math as the kernel, one materialized copy of the gathered KV."""
+    B, Hq, hd = q.shape
+    Hkv = k_pool.shape[1]
+    g = Hq // Hkv
+    kg = gather_blocks(k_pool, tables)
+    vg = gather_blocks(v_pool, tables)
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kg).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    kpos = jnp.arange(kg.shape[2])[None, None, None, :]
+    s = jnp.where(kpos <= lengths[:, None, None, None], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isfinite(a), a, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", a, vg.astype(jnp.float32))
+    return o.reshape(B, Hq, hd)

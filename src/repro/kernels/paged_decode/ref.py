@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention (tests/benchmarks)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_ref(q, k_pool, v_pool, tables, lengths):
+    """q: [B,Hq,hd]; k_pool/v_pool: [NB,Hkv,bs,hd]; tables: [B,MB] int32;
+    lengths: [B] int32 (last valid logical position, -1 = fully masked).
+
+    Gathers each row's blocks in table order and runs masked softmax
+    attention in f32. Returns [B,Hq,hd] f32.
+    """
+    B, Hq, hd = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    MB = tables.shape[1]
+    g = Hq // Hkv
+    kg = k_pool[tables].transpose(0, 2, 1, 3, 4).reshape(B, Hkv, MB * bs, hd)
+    vg = v_pool[tables].transpose(0, 2, 1, 3, 4).reshape(B, Hkv, MB * bs, hd)
+    qg = q.reshape(B, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kg.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    kpos = jnp.arange(MB * bs)[None, None, None, :]
+    ok = kpos <= lengths[:, None, None, None]
+    s = jnp.where(ok, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(jnp.isfinite(a), a, 0.0)  # fully-masked rows -> zeros
+    o = jnp.einsum("bhgk,bhkd->bhgd", a, vg.astype(jnp.float32))
+    return o.reshape(B, Hq, hd)

@@ -1,9 +1,10 @@
 """Serving CLI — a thin driver over the continuous-batching engine.
 
 Closed-loop demo (trace mode): inject a Poisson arrival trace, serve it via
-continuous batching on a VirtualCluster whose autoscaling policy reads the
-engine's published metrics, and watch the cluster grow 1->N while the queue
-is deep and shrink back as it drains:
+continuous batching over a paged (block-table) KV cache with chunked
+prefill on a VirtualCluster whose autoscaling policy reads the engine's
+published metrics, and watch the cluster grow 1->N while the queue is deep
+and shrink back as it drains:
 
   PYTHONPATH=src python -m repro.launch.serve --trace poisson --smoke
 
@@ -32,26 +33,42 @@ from repro.serve import (SERVE_PLAN, ServingEngine, burst_trace,
                          poisson_trace)
 
 
-def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan):
+def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan,
+                streamed_prefill: bool = False):
     """One-shot batch serving: prefill every prompt together, then decode
     the uniform batch to gen_len. The correctness baseline for the
-    continuous-batching engine."""
+    continuous-batching engine.
+
+    streamed_prefill=True feeds the prompt token-by-token through the same
+    decode step instead of one full-sequence prefill call — the one-shot
+    baseline whose floating-point path matches *chunked* prefill (a full
+    prefill reduces attention in GEMM order; per-token decode reduces
+    per-query — same math, different fp association, so greedy argmax can
+    flip on near-ties between the two; see docs/serving.md)."""
     env = Env(mesh=mesh, plan=plan)
     B, S = prompts.shape
-    prefill = jax.jit(St.make_prefill_step(cfg, env))
     decode = jax.jit(St.make_decode_step(cfg, env), donate_argnums=(1,))
 
-    # allocate full-length caches, then write the prompt via prefill
-    kw = {"tokens": prompts}
-    if cfg.family == "vlm":
-        kw["vision_embeds"] = jnp.zeros((B, cfg.num_vision_embeds,
-                                         cfg.d_model), jnp.float32)
-    if cfg.is_encdec:
-        kw["frames"] = jnp.zeros((B, S // cfg.enc_downsample, cfg.d_model),
-                                 jnp.float32)
-    logits, caches = prefill(params, kw)
-    # grow cache seq dim so decode can append (prefill emits length-S caches)
-    caches = Mo.grow_caches(caches, gen_len)
+    if streamed_prefill:
+        caches = Mo.init_cache(cfg, env, B, S + gen_len)
+        logits = None
+        for i in range(S):
+            logits, caches = decode(params, caches, prompts[:, i:i + 1],
+                                    jnp.asarray(i, jnp.int32))
+    else:
+        prefill = jax.jit(St.make_prefill_step(cfg, env))
+        # allocate full-length caches, then write the prompt via prefill
+        kw = {"tokens": prompts}
+        if cfg.family == "vlm":
+            kw["vision_embeds"] = jnp.zeros((B, cfg.num_vision_embeds,
+                                             cfg.d_model), jnp.float32)
+        if cfg.is_encdec:
+            kw["frames"] = jnp.zeros((B, S // cfg.enc_downsample,
+                                      cfg.d_model), jnp.float32)
+        logits, caches = prefill(params, kw)
+        # grow cache seq dim so decode can append (prefill emits length-S
+        # caches; window rings stay at min(w, S + gen))
+        caches = Mo.grow_caches(caches, gen_len, cfg)
     tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)[:, None]
     out = [tok]
     offset = cfg.num_vision_embeds if cfg.family == "vlm" else 0
@@ -81,7 +98,14 @@ def run_trace(args, cfg, params) -> int:
 
     engine = ServingEngine(cfg, params, num_slots=args.slots,
                            prompt_len=args.prompt_len, max_gen=args.gen_max,
+                           kv=args.kv, block_size=args.block_size,
+                           kv_blocks=args.kv_blocks,
+                           prefill_chunk=args.prefill_chunk,
                            clock=cluster.clock)
+    if args.kv == "paged":
+        print(f"paged KV: {engine.pool.num_blocks} blocks x "
+              f"{engine.pool.block_size} tokens, chunked prefill="
+              f"{engine.prefill_chunk or 'off'}")
     make = burst_trace if args.trace == "burst" else None
     if make is not None:
         trace = make(args.requests, prompt_len=args.prompt_len,
@@ -126,11 +150,16 @@ def run_trace(args, cfg, params) -> int:
     rc = 0
     if args.verify:
         prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+        # chunked prefill's fp path matches the streamed-prefill one-shot
+        # (full-prefill GEMM reassociates reductions; docs/serving.md)
+        streamed = bool(engine.prefill_chunk)
         base = np.asarray(serve_batch(None, cfg, params, prompts,
-                                      args.gen_max, SERVE_PLAN))
+                                      args.gen_max, SERVE_PLAN,
+                                      streamed_prefill=streamed))
         ok = all(np.array_equal(base[r.rid][:r.gen_len], np.array(out[r.rid]))
                  for r in trace)
-        print(f"verify vs one-shot baseline: "
+        tag = "streamed-prefill one-shot" if streamed else "one-shot"
+        print(f"verify vs {tag} baseline: "
               f"{'token-for-token MATCH' if ok else 'MISMATCH'}")
         rc = 0 if ok else 1
     cluster.shutdown()
@@ -171,6 +200,15 @@ def main() -> int:
                     help="poisson arrival rate, requests/s (sim time)")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-cache slots (max concurrent decodes)")
+    ap.add_argument("--kv", default="paged", choices=("paged", "slot"),
+                    help="paged block-table cache vs PR-1 slot reservation")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV: tokens per block")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="paged KV: physical blocks (default: worst case)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill lane width (0 disables; default: "
+                    "prompt_len on attention-only archs)")
     ap.add_argument("--nodes", type=int, default=1,
                     help="initial / minimum compute nodes")
     ap.add_argument("--max-nodes", type=int, default=6)

@@ -65,17 +65,60 @@ def make_decode_step(cfg: ModelConfig, env: Env):
     return decode_step
 
 
-def make_slot_decode_step(cfg: ModelConfig, env: Env):
-    """Decode step for a slot-pooled cache (continuous batching).
+def _select_tokens(prev_tok, meta):
+    """Device-side input-token select from the packed [3,T] step metadata
+    (rows: tok_src, fresh_tok, cur_len — one upload per step). Row i
+    decodes prev_tok[tok_src[i]] (last step's argmax, still on device)
+    unless tok_src[i] < 0, in which case it takes the freshly uploaded
+    fresh token (prompt-chunk token or a prefill-emitted first token).
+    This is what keeps the serving loop's per-step host traffic down to
+    one small upload and one [T] token-vector download."""
+    tok_src, fresh_tok = meta[0], meta[1]
+    safe = jnp.clip(tok_src, 0, prev_tok.shape[0] - 1)
+    return jnp.where(tok_src >= 0, prev_tok[safe], fresh_tok)
 
-    The same step as make_decode_step — Mo.forward accepts cur_len as a
-    scalar or a [B] int32 vector, and with a vector each row (slot) attends
-    and writes at its own position, so requests at different generation
-    depths share one jitted step. Rows holding free slots still compute
-    (their writes land in slots that insert fully overwrites) — callers
-    mask their outputs.
+
+def make_fused_decode_step(cfg: ModelConfig, env: Env):
+    """Slot-pool decode with the argmax fused on device.
+
+    meta is the packed [3,T] int32 (tok_src, fresh_tok, cur_len). Returns
+    (next_tokens [T] int32, new_caches) — logits never leave the device;
+    the engine transfers only the token vector each step."""
+    V = cfg.vocab_size
+
+    def step(params, caches, prev_tok, meta):
+        tok = _select_tokens(prev_tok, meta)
+        logits, new_caches, _ = Mo.forward(
+            params, tok[:, None], cfg, env, mode="decode", caches=caches,
+            cur_len=meta[2])
+        nxt = jnp.argmax(logits[:, 0, :V], axis=-1).astype(jnp.int32)
+        return nxt, new_caches
+
+    return step
+
+
+def make_paged_decode_step(cfg: ModelConfig, env: Env):
+    """Fused decode step over a paged (block-table) KV cache.
+
+    Rows are decode slots plus optional piggybacked prefill lanes: every
+    row writes its token's K/V into the physical block its table names at
+    cur_len and attends at its own depth, so a prompt chunk (consecutive
+    cur_len values sharing one table) prefills *inside* the running decode
+    batch — each chunk row sees exactly the keys at positions <= its own.
+    meta is the packed [3,T] int32 (tok_src, fresh_tok, cur_len). Argmax
+    is fused; the [T] token vector is the only per-step download.
     """
-    return make_decode_step(cfg, env)
+    V = cfg.vocab_size
+
+    def step(params, caches, prev_tok, meta, tables):
+        tok = _select_tokens(prev_tok, meta)
+        logits, new_caches, _ = Mo.forward(
+            params, tok[:, None], cfg, env, mode="decode", caches=caches,
+            cur_len=meta[2], block_tables=tables)
+        nxt = jnp.argmax(logits[:, 0, :V], axis=-1).astype(jnp.int32)
+        return nxt, new_caches
+
+    return step
 
 
 # ---------------------------------------------------------------------------

@@ -327,6 +327,21 @@ def attention_decode(q, k_cache, v_cache, cur_len, cfg: ModelConfig, env: Env,
     return o.reshape(B, 1, hkv * qg.shape[2] * hd)
 
 
+def attention_paged_decode(q, k_pool, v_pool, tables, lengths,
+                           cfg: ModelConfig, env: Env):
+    """Single-token attention over a block-paged KV pool — the vectorized
+    XLA gather fallback for the Pallas paged kernel (kernels/paged_decode).
+
+    q: [B,1,Hq,hd]; k_pool/v_pool: [NB,Hkv,bs,hd]; tables: [B,MB] int32
+    physical block ids (0 = null block); lengths: [B] int32 index of the
+    last valid gathered position. The gather reconstructs each row's KV in
+    logical order, so the math is identical to attention_decode over a
+    contiguous cache."""
+    from repro.kernels.paged_decode.ops import gather_blocks
+    return attention_decode(q, gather_blocks(k_pool, tables),
+                            gather_blocks(v_pool, tables), lengths, cfg, env)
+
+
 def attention(p, x, cfg: ModelConfig, env: Env, *, positions, causal: bool = True,
               window: int = 0, x_kv=None, rope: bool = True):
     """Full-sequence attention (train/prefill). Returns [B,S,d]."""

@@ -149,17 +149,40 @@ def init_cache(cfg: ModelConfig, env: Env, batch: int, max_len: int) -> Pytree:
     return {"blocks": stacked, "tail": tail}
 
 
-def grow_caches(caches: Pytree, extra: int) -> Pytree:
+def _unit_kind(path, cfg: ModelConfig) -> str:
+    """Block kind of a cache leaf from its tree path.
+
+    Cache pytrees are {"blocks": (per-kind dicts, stacked), "tail": (...)},
+    so path[0] names the group and path[1] is the index into the pattern."""
+    top = str(path[0].key) if hasattr(path[0], "key") else ""
+    i = getattr(path[1], "idx", None) if len(path) > 1 else None
+    pattern = cfg.block_pattern if top == "blocks" else cfg.pattern_tail
+    if i is None or i >= len(pattern):
+        return ""
+    return pattern[i]
+
+
+def grow_caches(caches: Pytree, extra: int,
+                cfg: Optional[ModelConfig] = None) -> Pytree:
     """Extend prefill-emitted KV caches (length == prompt) by `extra` slots
     so decode can append. Cross-attention caches (xk/xv) keep their length;
-    recurrent states have no seq dim and pass through."""
+    recurrent states have no seq dim and pass through. With `cfg`,
+    sliding-window ('local') ring caches grow only to the window size
+    (min(w, prompt + extra)) — a full ring must never be padded, or the
+    slot = pos % w alignment breaks."""
     def grow(path, x):
         leaf = str(path[-1].key) if hasattr(path[-1], "key") else ""
-        if leaf in ("k", "v") and x.ndim >= 4 and x.dtype == jnp.bfloat16:
-            pad = [(0, 0)] * x.ndim
-            pad[-2] = (0, extra)
-            return jnp.pad(x, pad)
-        return x
+        if leaf not in ("k", "v") or x.ndim < 4 or x.dtype != jnp.bfloat16:
+            return x
+        pad_n = extra
+        if cfg is not None and _unit_kind(path, cfg) == "local":
+            cur = x.shape[-2]
+            pad_n = max(min(cfg.local_window, cur + extra) - cur, 0)
+            if pad_n == 0:
+                return x
+        pad = [(0, 0)] * x.ndim
+        pad[-2] = (0, pad_n)
+        return jnp.pad(x, pad)
 
     return jax.tree_util.tree_map_with_path(grow, caches)
 
@@ -217,13 +240,161 @@ def cache_read_slot(pool: Pytree, slot) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# paged cache ops (block tables: serve/blocks.py)
+#
+# A paged cache replaces the per-slot seq dim with a global pool of
+# fixed-size KV blocks: attention k/v leaves are [num_blocks, Hkv, bs, hd]
+# (stacked [L, num_blocks, Hkv, bs, hd] under "blocks"), shared by every
+# request through per-request block tables; physical block 0 is a null
+# block that absorbs the writes of masked rows and is never allocated.
+# Recurrent state leaves (rglru/rwkv) have no seq dim and stay
+# row-addressed [num_rows, ...] exactly like the slot pool.
+# ---------------------------------------------------------------------------
+
+
+PAGEABLE_KINDS = ("attn", "moe", "local")
+
+
+def init_paged_cache(cfg: ModelConfig, env: Env, num_rows: int,
+                     num_blocks: int, block_size: int) -> Pytree:
+    """Block-pooled decode cache (same {"blocks","tail"} structure as
+    init_cache, so the decode scan consumes it unchanged)."""
+    hkv, hd = kv_head_pad(cfg, env), cfg.head_dim
+
+    def blk(kind):
+        if kind in PAGEABLE_KINDS:
+            return {"k": jnp.zeros((num_blocks, hkv, block_size, hd),
+                                   jnp.bfloat16),
+                    "v": jnp.zeros((num_blocks, hkv, block_size, hd),
+                                   jnp.bfloat16)}
+        if kind == "rglru":
+            return R.rglru_init_state(cfg, num_rows)
+        if kind == "rwkv":
+            return R.rwkv_init_state(cfg, num_rows)
+        raise ValueError(f"block kind {kind!r} has no paged-cache layout "
+                         "(enc/dec caches carry cross-attention state)")
+
+    stacked = jax.vmap(lambda _: tuple(blk(k) for k in cfg.block_pattern))(
+        jnp.arange(cfg.num_blocks))
+    tail = tuple(blk(k) for k in cfg.pattern_tail)
+    return {"blocks": stacked, "tail": tail}
+
+
+def _paged_kv_op(pool, cfg: ModelConfig, kv_fn, state_fn):
+    """tree-map a paged pool, dispatching k/v leaves (with their table kind)
+    vs row-addressed state leaves. kv_fn(dst, is_local, axis), state_fn(dst,
+    axis) where axis is the leading stacked-layer offset (1 under "blocks",
+    0 under "tail")."""
+    def f(path, dst, *rest):
+        kind = _unit_kind(path, cfg)
+        axis = 1 if str(path[0].key) == "blocks" else 0
+        if kind in PAGEABLE_KINDS:
+            return kv_fn(dst, kind == "local", axis, *rest)
+        return state_fn(dst, axis, *rest)
+
+    return f
+
+
+def make_paged_insert(cfg: ModelConfig, block_size: int):
+    """Jit-safe insert of a batch-1 prefill cache into a paged pool.
+
+    k/v leaves are chunked into block_size pieces scattered at the slot's
+    block-table entries (`tables` for global attention, `tables_local` for
+    window rings — ring layout from prefill is preserved verbatim, so the
+    pos % w alignment carries over); state leaves land at row `slot`.
+    Unallocated table entries are 0, so padding chunks fall into the null
+    block."""
+    bs = block_size
+
+    def kv(dst, is_local, axis, src, slot, tables, tables_local):
+        tbl = tables_local if is_local else tables
+        S = src.shape[-2]
+        nb = -(-S // bs)
+        pad = [(0, 0)] * src.ndim
+        pad[-2] = (0, nb * bs - S)
+        src = jnp.pad(src, pad).astype(dst.dtype)
+        if axis == 1:  # [L,1,H,nb*bs,hd] -> chunks [L,nb,H,bs,hd]
+            L, _, H, _, hd = src.shape
+            chunks = src.reshape(L, H, nb, bs, hd).transpose(0, 2, 1, 3, 4)
+            return dst.at[:, tbl[:nb]].set(chunks)
+        _, H, _, hd = src.shape
+        chunks = src.reshape(H, nb, bs, hd).transpose(1, 0, 2, 3)
+        return dst.at[tbl[:nb]].set(chunks)
+
+    def state(dst, axis, src, slot, tables, tables_local):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=axis)
+
+    def insert(pool, request, slot, tables, tables_local):
+        f = _paged_kv_op(pool, cfg, kv, state)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, d, s: f(p, d, s, slot, tables, tables_local),
+            pool, request)
+
+    return insert
+
+
+def make_paged_evict(cfg: ModelConfig):
+    """Zero a slot's blocks (and state row) in a paged pool — hygiene only;
+    allocation hygiene lives in the BlockManager free list."""
+    def kv(dst, is_local, axis, slot, tables, tables_local):
+        tbl = tables_local if is_local else tables
+        if axis == 1:
+            return dst.at[:, tbl].set(jnp.zeros((), dst.dtype))
+        return dst.at[tbl].set(jnp.zeros((), dst.dtype))
+
+    def state(dst, axis, slot, tables, tables_local):
+        shp = list(dst.shape)
+        shp[axis] = 1
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, jnp.zeros(shp, dst.dtype), slot, axis=axis)
+
+    def evict(pool, slot, tables, tables_local):
+        f = _paged_kv_op(pool, cfg, kv, state)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, d: f(p, d, slot, tables, tables_local), pool)
+
+    return evict
+
+
+def make_paged_read(cfg: ModelConfig):
+    """Gather one slot back out of a paged pool as a batch-1 cache pytree
+    (inverse of insert, introspection/tests). `valid`/`valid_local` mask
+    unallocated table entries so freed slots read as zeros regardless of
+    what masked-row writes left in the null block."""
+    def kv(dst, is_local, axis, slot, tables, tables_local, valid, valid_l):
+        tbl = tables_local if is_local else tables
+        ok = (valid_l if is_local else valid).astype(dst.dtype)
+        if axis == 1:
+            g = dst[:, tbl]  # [L,MB,H,bs,hd]
+            g = g * ok[None, :, None, None, None]
+            L, MB, H, bs, hd = g.shape
+            return g.transpose(0, 2, 1, 3, 4).reshape(L, 1, H, MB * bs, hd)
+        g = dst[tbl] * ok[:, None, None, None]  # [MB,H,bs,hd]
+        MB, H, bs, hd = g.shape
+        return g.transpose(1, 0, 2, 3).reshape(1, H, MB * bs, hd)
+
+    def state(dst, axis, slot, tables, tables_local, valid, valid_l):
+        return jax.lax.dynamic_slice_in_dim(dst, slot, 1, axis=axis)
+
+    def read(pool, slot, tables, tables_local, valid, valid_local):
+        f = _paged_kv_op(pool, cfg, kv, state)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, d: f(p, d, slot, tables, tables_local, valid,
+                           valid_local), pool)
+
+    return read
+
+
+# ---------------------------------------------------------------------------
 # block application
 # ---------------------------------------------------------------------------
 
 
 def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
                    cache, cur_len, *, window: int = 0, causal: bool = True,
-                   x_kv=None, rope: bool = True, cross: bool = False):
+                   x_kv=None, rope: bool = True, cross: bool = False,
+                   block_tables=None):
     """Self/cross attention sub-layer. Returns (out, new_cache_entries)."""
     if mode in ("train", "prefill"):
         q, k, v = L._project_qkv(p, h, h if x_kv is None else x_kv, cfg, env)
@@ -300,6 +471,31 @@ def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
         return (constrain(o @ p["wo"], env, env.dpx, None, None),
                 {"xk": cache["xk"], "xv": cache["xv"]})
     kc, vc = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # [B,Hkv,1,hd]
+    if block_tables is not None:
+        # paged cache: k/v live in a global block pool [NB,Hkv,bs,hd]; each
+        # row writes one token into its own block (via its table) and
+        # attends over the blocks the table names. Window ('local') layers
+        # keep a ring of the trailing window — pos % w indexing, masked by
+        # valid length; softmax over keys is permutation-invariant, so the
+        # ring order needs no unscrambling.
+        tbl = block_tables["local"] if window > 0 else block_tables["global"]
+        bs = cache["k"].shape[-2]
+        idx = cl % window if window > 0 else cl  # [B] write position
+        phys = jnp.take_along_axis(tbl, (idx // bs)[:, None], axis=1)[:, 0]
+        off = idx % bs
+        new_k = cache["k"].at[phys, :, off].set(
+            kc[:, :, 0].astype(cache["k"].dtype))
+        new_v = cache["v"].at[phys, :, off].set(
+            vc[:, :, 0].astype(cache["v"].dtype))
+        eff = jnp.minimum(cl, window - 1) if window > 0 else cl
+        if env.plan.attn_impl == "pallas":
+            from repro.kernels.paged_decode import ops as pd_ops
+            o = pd_ops.paged_flash_decode(q[:, 0], new_k, new_v, tbl, eff)
+            o = o.reshape(B, 1, -1).astype(h.dtype)
+        else:
+            o = L.attention_paged_decode(q, new_k, new_v, tbl, eff, cfg, env)
+        o = constrain(o @ p["wo"], env, env.dpx, None, None)
+        return o, {"k": new_k, "v": new_v}
     Sc = cache["k"].shape[2]
     idx = cl % Sc if window > 0 else cl
     if cl.ndim:  # per-row write positions: masked write along the seq dim
@@ -334,7 +530,7 @@ def _sp(h, env: Env, mode: str):
 
 
 def _apply_block(kind: str, p, h, cfg: ModelConfig, env: Env, mode: str,
-                 positions, cache, cur_len, enc_out=None):
+                 positions, cache, cur_len, enc_out=None, block_tables=None):
     """One sub-block. Returns (h, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     eps = cfg.norm_eps
@@ -344,7 +540,8 @@ def _apply_block(kind: str, p, h, cfg: ModelConfig, env: Env, mode: str,
         a, nc = _attn_sublayer(p["attn"], L.rms_norm(h, p["ln1"], eps), cfg, env,
                                mode if kind != "enc" else "train",
                                positions, cache, cur_len,
-                               window=window, causal=causal)
+                               window=window, causal=causal,
+                               block_tables=block_tables)
         h = _sp(h + a, env, mode)
         hn = L.rms_norm(h, p["ln2"], eps)
         if kind == "moe":
@@ -403,7 +600,7 @@ def _remat_wrap(fn, env: Env):
 
 def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
                positions, caches=None, cur_len=None, enc_out=None,
-               pattern: Optional[Tuple[str, ...]] = None):
+               pattern: Optional[Tuple[str, ...]] = None, block_tables=None):
     """Scan the repeating unit, then run the unrolled tail.
 
     Returns (h, new_caches, aux). caches/new_caches structure:
@@ -423,7 +620,8 @@ def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
             else:
                 c = None
             hh, nc, a = _apply_block(kind, p_unit[i], hh, cfg, env, mode,
-                                     positions, c, cur_len, enc_out)
+                                     positions, c, cur_len, enc_out,
+                                     block_tables)
             aux = aux + a
             ncs.append(nc)
         return hh, (tuple(ncs) if use_cache else 0), aux
@@ -465,7 +663,7 @@ def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
         else:
             c = None
         h, nc, a = _apply_block(kind, tail[i], h, cfg, env, mode, positions, c,
-                                cur_len, enc_out)
+                                cur_len, enc_out, block_tables)
         aux = aux + a
         new_tail.append(nc)
 
@@ -499,11 +697,14 @@ def math_isqrt(n: int) -> int:
 
 
 def forward(params, tokens, cfg: ModelConfig, env: Env, mode: str = "train",
-            caches=None, cur_len=None, vision_embeds=None, frames=None):
+            caches=None, cur_len=None, vision_embeds=None, frames=None,
+            block_tables=None):
     """tokens: [B,S] int32 (decode: [B,1]).
 
     vision_embeds: [B,Nv,d] (vlm stub), frames: [B,Se,d] (whisper stub).
-    Returns (logits [B,S,Vpad], new_caches, aux).
+    block_tables (decode only): {"global": [B,MB], "local": [B,MBw]} int32
+    block tables into a paged cache (init_paged_cache); cur_len must then be
+    a [B] vector. Returns (logits [B,S,Vpad], new_caches, aux).
     """
     h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
     h = constrain(h, env, env.dpx, None, None)
@@ -534,7 +735,7 @@ def forward(params, tokens, cfg: ModelConfig, env: Env, mode: str = "train",
 
     h, new_caches, aux = _run_stack(params["blocks"], params["tail"], h, cfg,
                                     env, mode, positions, caches, cur_len,
-                                    enc_out)
+                                    enc_out, block_tables=block_tables)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = h @ params["unembed"]
     logits = constrain(logits, env, env.dpx, None, env.plan.tp_axis)

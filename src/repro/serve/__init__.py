@@ -1,6 +1,7 @@
 """Continuous-batching serving subsystem.
 
-request -> RequestQueue -> ServingEngine (SlotPool + jitted prefill/decode)
+request -> RequestQueue -> ServingEngine (paged BlockManager KV + fused
+decode step with piggybacked prefill lanes; SlotPool kept as baseline)
 -> ServingMetrics -> registry KV -> AutoScaler policies -> cluster size.
 
 See docs/serving.md for the full loop and the one-command demo.
@@ -12,6 +13,7 @@ from repro.serve.request import (  # noqa: F401
     burst_trace,
     poisson_trace,
 )
+from repro.serve.blocks import BlockManager  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     SERVE_PLAN,
     ServingEngine,

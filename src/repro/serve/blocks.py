@@ -1,0 +1,298 @@
+"""BlockManager — a paged KV cache: global block pool + per-request tables.
+
+The slot pool (serve/slots.py) reserves prompt_len + max_gen KV per slot for
+a request's whole lifetime, so one long-tail gen length pins worst-case
+memory for everyone. The BlockManager instead owns a global pool of
+fixed-size KV blocks (Mo.init_paged_cache) and a host-side [num_slots, MB]
+block table per request; blocks are allocated on demand as a request's
+cur_len crosses block boundaries and returned to an O(1) free list at
+retirement, so resident KV tracks what requests actually wrote — at a fixed
+HBM budget the pool admits 2-4x the concurrent requests of slot reservation.
+
+Admission is gated by *reservation*: a request reserves (but does not yet
+allocate) the blocks its declared gen_len can ever need, so on-demand
+allocation can never deadlock mid-decode and block exhaustion surfaces as
+clean queue backpressure at admit time.
+
+Physical block 0 is the null block: never allocated, it absorbs the writes
+of masked rows (free slots / idle prefill lanes) in the fused decode step.
+
+Sliding-window ('local') layers get their own window-sized tables: a ring
+of ceil(w/bs) blocks written at pos % w — softmax over keys is permutation-
+invariant and RoPE is applied at write time, so the ring never needs
+unscrambling (this is what lets recurrentgemma-style archs serve here while
+the slot pool still rejects them).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as Mo
+from repro.models.env import Env
+
+Pytree = Any
+
+FREE = -1
+
+RECURRENT_KINDS = ("rglru", "rwkv")
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass
+class PagedSlot:
+    rid: int
+    cur_len: int  # next decode write position
+    tokens_done: int
+    gen_len: int
+    prefilling: bool = False  # still consuming prompt chunks (lane rows)
+    alloc_g: int = 0  # global-table blocks allocated so far
+    alloc_l: int = 0  # local-table blocks allocated so far
+    reserved: int = 0  # blocks reserved but not yet allocated
+
+
+class BlockManager:
+    def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
+                 prompt_len: int, max_gen: int, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
+        if cfg.family == "vlm" or cfg.is_encdec:
+            raise ValueError(
+                f"{cfg.name}: continuous batching supports decoder-only "
+                "archs (vlm/enc-dec prefill carries extra modalities)")
+        kinds = set(cfg.block_pattern) | set(cfg.pattern_tail)
+        if not kinds <= set(Mo.PAGEABLE_KINDS) | set(RECURRENT_KINDS):
+            raise ValueError(f"{cfg.name}: kinds {sorted(kinds)} have no "
+                             "paged-cache layout")
+        self.cfg = cfg
+        self.env = env
+        self.num_slots = num_slots
+        self.prompt_len = prompt_len
+        self.max_gen = max_gen
+        self.block_size = block_size
+        self.window = cfg.local_window
+        self.has_global = bool(kinds & {"attn", "moe"})
+        self.has_local = "local" in kinds
+        # recurrent state rows pin the decode batch to slot == row
+        self.has_state = bool(kinds & set(RECURRENT_KINDS))
+        max_kv = prompt_len + max_gen  # last written pos < prompt+gen-1
+        bs = block_size
+        self.mb_global = _ceil_div(max_kv, bs) if self.has_global else 0
+        self.mb_local = (_ceil_div(min(self.window, max_kv), bs)
+                         if self.has_local else 0)
+        worst = num_slots * (self.mb_global + self.mb_local)
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else worst + 1)  # +1: the null block
+        if self.num_blocks < 1 + self.mb_global + self.mb_local:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} cannot hold even one request "
+                f"({self.mb_global}+{self.mb_local} blocks + null)")
+        self.caches: Pytree = Mo.init_paged_cache(
+            cfg, env, num_slots, self.num_blocks, bs)
+        # host-side tables: row per slot, 0 = unallocated (null block)
+        self.table = np.zeros((num_slots, max(self.mb_global, 1)), np.int32)
+        self.table_local = np.zeros((num_slots, max(self.mb_local, 1)),
+                                    np.int32)
+        self._slots: List[Optional[PagedSlot]] = [None] * num_slots
+        self._free_slots: Deque[int] = deque(range(num_slots))
+        self._free_blocks: Deque[int] = deque(range(1, self.num_blocks))
+        self._reserved_total = 0  # blocks promised to admitted requests
+        self._insert = jax.jit(Mo.make_paged_insert(cfg, bs),
+                               donate_argnums=(0,))
+        self._evict = jax.jit(Mo.make_paged_evict(cfg), donate_argnums=(0,))
+        self._read = jax.jit(Mo.make_paged_read(cfg))
+
+    # -- sizing / admission math -------------------------------------------
+    def blocks_for(self, gen_len: int) -> int:
+        """Physical blocks a request with this gen_len can ever touch (its
+        KV spans positions [0, prompt_len + gen_len - 1))."""
+        kv = max(self.prompt_len + gen_len - 1, 1)
+        n = _ceil_div(kv, self.block_size) if self.has_global else 0
+        if self.has_local:
+            n += _ceil_div(min(self.window, kv), self.block_size)
+        return n
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def free_unreserved(self) -> int:
+        return len(self._free_blocks) - self._reserved_total
+
+    def can_admit(self, gen_len: int) -> bool:
+        return (bool(self._free_slots)
+                and self.blocks_for(gen_len) <= self.free_unreserved)
+
+    # -- occupancy ----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        """Slots in the decode batch (prefilling slots ride lane rows)."""
+        return [i for i, s in enumerate(self._slots)
+                if s is not None and not s.prefilling]
+
+    def occupied_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free_slots) / max(self.num_slots, 1)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.usable_blocks - len(self._free_blocks)
+
+    @property
+    def block_occupancy(self) -> float:
+        """Fraction of the pool committed (allocated + reserved) — the
+        admission-honest load signal published to the autoscaler."""
+        committed = self.blocks_in_use + self._reserved_total
+        return committed / max(self.usable_blocks, 1)
+
+    def info(self, slot: int) -> Optional[PagedSlot]:
+        return self._slots[slot]
+
+    def rid_of(self, slot: int) -> int:
+        s = self._slots[slot]
+        return FREE if s is None else s.rid
+
+    # -- admission / allocation --------------------------------------------
+    def admit(self, rid: int, gen_len: int, *,
+              prefilling: bool = False) -> int:
+        """Reserve a slot + the request's worst-case blocks; allocation
+        itself happens on demand via ensure(). Returns the slot."""
+        assert self.can_admit(gen_len)
+        slot = self._free_slots.popleft()
+        need = self.blocks_for(gen_len)
+        self._slots[slot] = PagedSlot(rid=rid, cur_len=0, tokens_done=0,
+                                      gen_len=gen_len, prefilling=prefilling,
+                                      reserved=need)
+        self._reserved_total += need
+        return slot
+
+    def _alloc(self, slot: int, local: bool) -> None:
+        s = self._slots[slot]
+        bid = self._free_blocks.popleft()
+        tbl = self.table_local if local else self.table
+        if local:
+            tbl[slot, s.alloc_l] = bid
+            s.alloc_l += 1
+        else:
+            tbl[slot, s.alloc_g] = bid
+            s.alloc_g += 1
+        s.reserved -= 1
+        self._reserved_total -= 1
+        assert s.reserved >= 0, "request outgrew its reservation"
+
+    def ensure(self, slot: int, pos: int) -> None:
+        """Allocate blocks so `slot` can write KV at logical position `pos`
+        (and the matching window-ring position). On-demand growth: called
+        right before every decode/prefill-chunk step."""
+        s = self._slots[slot]
+        assert s is not None
+        bs = self.block_size
+        if self.has_global:
+            while s.alloc_g < pos // bs + 1:
+                self._alloc(slot, local=False)
+        if self.has_local:
+            ring_hi = min(pos, self.window - 1)
+            while s.alloc_l < ring_hi // bs + 1:
+                self._alloc(slot, local=True)
+
+    def _tables_of(self, slot: int):
+        return (jnp.asarray(self.table[slot]),
+                jnp.asarray(self.table_local[slot]))
+
+    def insert(self, slot: int, rid: int, prefill_caches: Pytree,
+               gen_len: int) -> None:
+        """Classic admission (SlotPool-compatible): bind `rid` to `slot`
+        (pre-acquired via admit) or acquire one, then scatter the batch-1
+        prefill cache into the slot's blocks. Used for recurrent-state
+        archs and as the non-chunked fallback."""
+        if self._slots[slot] is None:
+            # direct pool use (tests): take this specific slot
+            assert self.can_admit(gen_len), "block pool exhausted"
+            self._free_slots.remove(slot)
+            need = self.blocks_for(gen_len)
+            self._slots[slot] = PagedSlot(rid=rid, cur_len=0, tokens_done=0,
+                                          gen_len=gen_len, reserved=need)
+            self._reserved_total += need
+        s = self._slots[slot]
+        s.rid = rid
+        self.ensure(slot, self.prompt_len - 1)
+        tg, tl = self._tables_of(slot)
+        self.caches = self._insert(self.caches, prefill_caches,
+                                   jnp.asarray(slot, jnp.int32), tg, tl)
+        s.cur_len = self.prompt_len
+        s.tokens_done = 1
+        s.prefilling = False
+
+    def finish_prefill(self, slot: int) -> PagedSlot:
+        """Chunked prefill consumed the whole prompt: the slot joins the
+        decode batch (its first token was emitted by the last lane row)."""
+        s = self._slots[slot]
+        assert s is not None and s.prefilling
+        s.prefilling = False
+        s.cur_len = self.prompt_len
+        s.tokens_done = 1
+        return s
+
+    # -- decode-batch views -------------------------------------------------
+    def advance(self, slot: int) -> PagedSlot:
+        s = self._slots[slot]
+        assert s is not None and not s.prefilling
+        s.cur_len += 1
+        s.tokens_done += 1
+        return s
+
+    def finished(self, slot: int) -> bool:
+        s = self._slots[slot]
+        return (s is not None and not s.prefilling
+                and s.tokens_done >= s.gen_len)
+
+    # -- retirement ---------------------------------------------------------
+    def evict(self, slot: int, *, zero: bool = False) -> None:
+        """Free `slot`: return its blocks to the free list and drop any
+        unspent reservation. Zeroing is hygiene only (tests)."""
+        s = self._slots[slot]
+        assert s is not None
+        if zero:
+            tg, tl = self._tables_of(slot)
+            self.caches = self._evict(self.caches,
+                                      jnp.asarray(slot, jnp.int32), tg, tl)
+        for j in range(s.alloc_g):
+            self._free_blocks.append(int(self.table[slot, j]))
+        for j in range(s.alloc_l):
+            self._free_blocks.append(int(self.table_local[slot, j]))
+        self.table[slot, :] = 0
+        self.table_local[slot, :] = 0
+        self._reserved_total -= s.reserved
+        self._slots[slot] = None
+        self._free_slots.append(slot)
+
+    # -- introspection (tests) ----------------------------------------------
+    def read_slot(self, slot: int) -> Pytree:
+        """Gather `slot` back as a batch-1 cache pytree; unallocated table
+        entries read as zeros (the null block may hold masked-row junk)."""
+        s = self._slots[slot]
+        tg, tl = self._tables_of(slot)
+        ag = 0 if s is None else s.alloc_g
+        al = 0 if s is None else s.alloc_l
+        valid = (np.arange(max(self.mb_global, 1)) < ag)
+        valid_l = (np.arange(max(self.mb_local, 1)) < al)
+        return self._read(self.caches, jnp.asarray(slot, jnp.int32), tg, tl,
+                          jnp.asarray(valid), jnp.asarray(valid_l))

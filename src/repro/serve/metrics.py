@@ -9,6 +9,7 @@ flat metric names AutoScaler.read_metrics() aggregates:
     latency_p95_ms    (arrival -> last token, trailing window)
     ttft_p95_ms       time to first token percentile
     slot_occupancy    fraction of KV slots in use
+    kv_block_occupancy  paged KV only: fraction of the block pool committed
     deadline_misses   completed requests that blew their deadline (cumulative)
 
 NodeAgent.report_serving(snapshot()) writes each as metrics/<node>/<name> —
@@ -65,7 +66,9 @@ class ServingMetrics:
 
     # -- snapshot -----------------------------------------------------------
     def snapshot(self, now: float, *, queue_depth: int,
-                 slot_occupancy: float) -> Dict[str, float]:
+                 slot_occupancy: float,
+                 kv_block_occupancy: Optional[float] = None
+                 ) -> Dict[str, float]:
         """Latency keys are OMITTED until a request completes (resp. emits a
         first token) inside the window — publishing 0ms for "no data" would
         read as excellent latency and make LatencyPolicy scale down
@@ -85,6 +88,10 @@ class ServingMetrics:
             "slot_occupancy": slot_occupancy,
             "deadline_misses": float(self.deadline_misses),
         }
+        if kv_block_occupancy is not None:
+            # paged KV: fraction of the block pool committed (allocated +
+            # reserved) — the signal that actually gates admission
+            out["kv_block_occupancy"] = kv_block_occupancy
         lats = [s for _, s in self._latency]
         ttfts = [s for _, s in self._ttft]
         if lats:

@@ -65,6 +65,13 @@ class RequestQueue:
         else:
             self._pending.append(req)
 
+    def peek_ready(self, now: float) -> Optional[Request]:
+        """Next admissible request without popping it — admission control
+        must see gen_len (block reservation) before committing."""
+        if self._pending and self._pending[0].arrival_t <= now:
+            return self._pending[0]
+        return None
+
     def pop_ready(self, now: float) -> Optional[Request]:
         if self._pending and self._pending[0].arrival_t <= now:
             return self._pending.popleft()

@@ -1,26 +1,36 @@
-"""ServingEngine — continuous batching over a slot-pooled KV cache.
+"""ServingEngine — continuous batching over a paged (block-table) KV cache.
 
 One scheduler iteration (step()):
 
-  1. admit: while a KV slot is free and a request has arrived, run the
-     batch-1 prefill, write its cache into the slot (jitted, traced slot
-     index — no re-compile), and emit the request's first token;
-  2. decode: one jitted step over the *whole* pool — a [num_slots] cur_len
-     vector lets every slot attend and write at its own depth, so requests
-     join and leave the running batch freely;
-  3. retire: slots whose request hit gen_len free up and their latency is
-     recorded.
+  1. admit: pop arrivals while a slot is free AND the block pool can
+     reserve the request's worst-case blocks (block exhaustion = queue
+     backpressure, not an OOM mid-decode). On attention-only archs the
+     prompt is *not* prefilled in a separate batch-1 call: it streams
+     through `prefill_chunk` piggybacked lane rows of the regular decode
+     step (chunked prefill), so admission never stalls the pool and there
+     is no grow_caches/full-cache copy. Recurrent-state archs (rglru/rwkv
+     blocks) keep the classic batch-1 prefill + paged insert.
+  2. decode: one fused jitted step over decode rows (+ lane rows): every
+     row writes K/V into the physical block its table names and attends at
+     its own depth; argmax happens on device and the [T] int32 token
+     vector is the only per-step host transfer (logits and last-token
+     state never round-trip).
+  3. retire: finished slots return their blocks to the O(1) free list.
 
-The engine never re-jits after construction: prefill is pinned to
-(1, prompt_len), decode to (num_slots, 1). Greedy (argmax) decoding keeps
-continuous-batched output token-for-token equal to the one-shot
-serve_batch baseline — the correctness bar tests/test_serving.py holds it to.
+The engine never re-jits per admission; step shapes are pinned to
+(num_slots,) and (num_slots + prefill_chunk,) rows. Greedy decoding keeps
+output token-for-token equal to the one-shot serve_batch baseline and to
+the PR-1 slot pool — tests/test_serving.py holds it to both.
+
+kv="slot" keeps the PR-1 slot-reserved pool (worst-case prompt_len+max_gen
+KV per slot) as the measured baseline for benchmarks and as a fallback.
 
 The clock is injected: tests and the simulated cluster drive a ManualClock
 (deterministic arrival replay); nothing here sleeps.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -31,37 +41,101 @@ from repro.configs.base import ModelConfig, ParallelPlan
 from repro.core.clock import Clock, ManualClock
 from repro.launch import steps as St
 from repro.models.env import Env
+from repro.serve.blocks import RECURRENT_KINDS, BlockManager
 from repro.serve.metrics import ServingMetrics
 from repro.serve.request import Request, RequestQueue
 from repro.serve.slots import SlotPool
 
 Pytree = Any
 
-SERVE_PLAN = ParallelPlan(fsdp=False, remat="full", attn_impl="naive",
+
+def _default_attn_impl() -> str:
+    """Pallas paged flash-decode on TPU; vectorized XLA gather elsewhere
+    (same math — the greedy equivalence tests hold on every backend)."""
+    try:
+        return "pallas" if jax.default_backend() == "tpu" else "naive"
+    except Exception:  # pragma: no cover - backend probe failure
+        return "naive"
+
+
+SERVE_PLAN = ParallelPlan(fsdp=False, remat="full",
+                          attn_impl=_default_attn_impl(),
                           kv_cache="replicated")
+
+
+@dataclass
+class _Lane:
+    """An in-flight chunked prefill riding the decode batch's lane rows.
+
+    prefill_chunk is a *token budget* shared by every admitting request
+    (Sarathi-style): each step the budget rows are packed FIFO across the
+    open lanes, so several short prompts can prefill in one step while a
+    long prompt streams through in chunks."""
+    slot: int
+    req: Request
+    pos: int = 0  # prompt tokens consumed so far
+    take: int = 0  # rows granted this step
+    last_row: int = 0  # row of the chunk's final token (first-token source)
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, *,
                  num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
+                 kv: str = "paged", block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
                  metrics_window_s: float = 10.0):
+        assert kv in ("paged", "slot"), kv
         self.cfg = cfg
         self.params = params
+        self.kv = kv
         self.prompt_len = prompt_len
         self.max_gen = max_gen
         self.clock = clock or ManualClock()
         env = Env(mesh=mesh, plan=plan or SERVE_PLAN)
         self.env = env
-        self.pool = SlotPool(cfg, env, num_slots=num_slots,
-                             prompt_len=prompt_len, max_gen=max_gen)
+        if kv == "paged":
+            self.pool = BlockManager(cfg, env, num_slots=num_slots,
+                                     prompt_len=prompt_len, max_gen=max_gen,
+                                     block_size=block_size,
+                                     num_blocks=kv_blocks)
+            kinds = set(cfg.block_pattern) | set(cfg.pattern_tail)
+            # recurrent state rows can't parallelize a prompt chunk inside
+            # one step, and window-ring writes would wrap onto each other
+            # within a chunk (rows p and p+w share ring slot p%w); both
+            # admit via batch-1 prefill + paged insert instead
+            chunk_ok = not (kinds & set(RECURRENT_KINDS)) \
+                and "local" not in kinds
+            if prefill_chunk is None:
+                prefill_chunk = prompt_len if chunk_ok else 0
+            if prefill_chunk and not chunk_ok:
+                raise ValueError(
+                    f"{cfg.name}: chunked prefill needs attention-only "
+                    "blocks without sliding windows (recurrent state is "
+                    "sequential over the prompt; ring writes wrap within "
+                    "a chunk)")
+            self._decode = jax.jit(St.make_paged_decode_step(cfg, env),
+                                   donate_argnums=(1,))
+        else:
+            self.pool = SlotPool(cfg, env, num_slots=num_slots,
+                                 prompt_len=prompt_len, max_gen=max_gen)
+            prefill_chunk = 0
+            self._decode = jax.jit(St.make_fused_decode_step(cfg, env),
+                                   donate_argnums=(1,))
+        self.prefill_chunk = int(prefill_chunk)
         self.queue = RequestQueue()
         self.metrics = ServingMetrics(window_s=metrics_window_s)
         self._prefill = jax.jit(St.make_prefill_step(cfg, env))
-        self._decode = jax.jit(St.make_slot_decode_step(cfg, env),
-                               donate_argnums=(1,))
-        self._last_tok = np.zeros((num_slots, 1), np.int32)
+        self._lanes: List[_Lane] = []
+        # device [T] int32: last step's fused argmax. Seeded at num_slots so
+        # the step's (rows, prev-rows) shape pair cycles through its <= 4
+        # combinations deterministically — a two-request warm trace compiles
+        # them all (benchmarks warm exactly that way).
+        self._tok_prev = jnp.zeros((num_slots,), jnp.int32)
+        self._row_src: Dict[int, int] = {}  # slot -> row in _tok_prev
+        self._fresh: Dict[int, int] = {}  # slot -> host-known next token
         self._inflight: Dict[int, Request] = {}  # rid -> request
         self.completed: List[Request] = []
         self.decode_steps = 0
@@ -90,39 +164,136 @@ class ServingEngine:
 
     # -- scheduler iteration ------------------------------------------------------
     def step(self) -> Dict[str, float]:
-        """Admit arrivals, step the mixed decode batch once, retire finished
-        requests. Returns the metrics snapshot (what a node would publish)."""
+        """Admit arrivals, run one fused decode step over the mixed batch
+        (+ prefill lanes), retire finished requests. Returns the metrics
+        snapshot (what a node would publish)."""
         now = self.clock.now()
-        while True:
-            free = self.pool.free_slots()
-            if not free:
-                break
-            req = self.queue.pop_ready(now)
-            if req is None:
-                break
-            self._admit(free[0], req, now)
+        self._admit_ready(now)
 
         active = self.pool.active_slots()
-        if active:
-            logits, self.pool.caches = self._decode(
-                self.params, self.pool.caches, jnp.asarray(self._last_tok),
-                jnp.asarray(self.pool.cur_lens()))
-            nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab_size], -1)
-                             ).astype(np.int32)
-            self.decode_steps += 1
-            emitted = 0
-            for slot in active:
-                info = self.pool.advance(slot)
-                req = self._inflight[info.rid]
-                req.tokens.append(int(nxt[slot]))
-                self._last_tok[slot, 0] = nxt[slot]
-                emitted += 1
-                if self.pool.finished(slot):
-                    self._retire(slot, now)
+        lanes = self._lanes
+        if not active and not lanes:
+            return self.snapshot()
+
+        # pack the prefill token budget FIFO across open lanes
+        N = self.pool.num_slots
+        budget = self.prefill_chunk
+        for lane in lanes:
+            lane.take = min(budget, self.prompt_len - lane.pos)
+            budget -= lane.take
+        lane_rows = self.prefill_chunk if lanes else 0
+        T = N + lane_rows
+        meta = np.zeros((3, T), np.int32)  # tok_src / fresh / cur_len
+        meta[0, :] = -1
+        paged = self.kv == "paged"
+        if paged:
+            tbl_g = np.zeros((T, self.pool.table.shape[1]), np.int32)
+            tbl_l = np.zeros((T, self.pool.table_local.shape[1]), np.int32)
+        for slot in active:
+            info = self.pool.info(slot)
+            meta[2, slot] = info.cur_len
+            if paged:
+                self.pool.ensure(slot, info.cur_len)
+                tbl_g[slot] = self.pool.table[slot]
+                tbl_l[slot] = self.pool.table_local[slot]
+            if slot in self._fresh:
+                meta[0, slot] = -1
+                meta[1, slot] = self._fresh.pop(slot)
+            else:
+                meta[0, slot] = self._row_src.pop(slot, slot)
+        row = N
+        for lane in lanes:
+            if lane.take <= 0:
+                continue
+            self.pool.ensure(lane.slot, lane.pos + lane.take - 1)
+            sl = slice(row, row + lane.take)
+            meta[1, sl] = lane.req.prompt[lane.pos:lane.pos + lane.take]
+            meta[2, sl] = np.arange(lane.pos, lane.pos + lane.take)
+            tbl_g[sl] = self.pool.table[lane.slot]
+            tbl_l[sl] = self.pool.table_local[lane.slot]
+            row += lane.take
+            lane.last_row = row - 1
+
+        tables = {"global": jnp.asarray(tbl_g)} if paged else None
+        if paged and self.pool.has_local:
+            tables["local"] = jnp.asarray(tbl_l)
+        prev = self._tok_prev
+        if paged:
+            nxt_dev, self.pool.caches = self._decode(
+                self.params, self.pool.caches, prev, jnp.asarray(meta),
+                tables)
+        else:
+            nxt_dev, self.pool.caches = self._decode(
+                self.params, self.pool.caches, prev, jnp.asarray(meta))
+        self._tok_prev = nxt_dev
+        nxt = np.asarray(nxt_dev)  # the one host transfer per step
+        self.decode_steps += 1
+
+        emitted = 0
+        for slot in active:
+            info = self.pool.advance(slot)
+            req = self._inflight[info.rid]
+            req.tokens.append(int(nxt[slot]))
+            emitted += 1
+            if self.pool.finished(slot):
+                self._retire(slot, now)
+        still_open: List[_Lane] = []
+        for lane in lanes:
+            lane.pos += lane.take
+            if lane.pos < self.prompt_len:
+                still_open.append(lane)
+                continue
+            slot = lane.slot
+            self.pool.finish_prefill(slot)
+            req = lane.req
+            req.t_first_token = now
+            req.tokens.append(int(nxt[lane.last_row]))
+            self.metrics.record_first_token(req, now)
+            # next step, this slot's input token comes from the lane row
+            self._row_src[slot] = lane.last_row
+            emitted += 1
+            if self.pool.finished(slot):
+                self._retire(slot, now)
+        self._lanes = still_open
+        if emitted:
             self.metrics.record_tokens(now, emitted)
         return self.snapshot()
 
-    def _admit(self, slot: int, req: Request, now: float) -> None:
+    # -- admission ----------------------------------------------------------------
+    def _admit_ready(self, now: float) -> None:
+        if self.kv == "slot":
+            while self.pool.free_slot_count:
+                req = self.queue.pop_ready(now)
+                if req is None:
+                    break
+                self._admit_classic(self.pool.acquire_slot(), req, now)
+            return
+        if self.prefill_chunk:
+            # open lanes while the step's token budget can still reach a
+            # new prompt (bounds admitted-but-starved lanes to ~1)
+            while (sum(self.prompt_len - l.pos for l in self._lanes)
+                   < self.prefill_chunk):
+                req = self.queue.peek_ready(now)
+                if req is None or not self.pool.can_admit(req.gen_len):
+                    return  # block/slot exhaustion -> queue backpressure
+                self.queue.pop_ready(now)
+                slot = self.pool.admit(req.rid, req.gen_len, prefilling=True)
+                req.t_admit = now
+                self._inflight[req.rid] = req
+                self._lanes.append(_Lane(slot=slot, req=req))
+            return
+        while True:
+            req = self.queue.peek_ready(now)
+            if req is None or not self.pool.can_admit(req.gen_len):
+                break
+            self.queue.pop_ready(now)
+            self._admit_classic(self.pool.admit(req.rid, req.gen_len), req,
+                                now)
+
+    def _admit_classic(self, slot: int, req: Request, now: float) -> None:
+        """Batch-1 prefill + cache insert (slot pool, and paged archs with
+        recurrent state). The first token is argmax'd from the prefill
+        logits and fed to the same step's decode via the fresh-token path."""
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None]})
         self.pool.insert(slot, req.rid, caches, req.gen_len)
@@ -130,7 +301,7 @@ class ServingEngine:
         req.t_admit = now
         req.t_first_token = now
         req.tokens.append(first)
-        self._last_tok[slot, 0] = first
+        self._fresh[slot] = first
         self._inflight[req.rid] = req
         self.metrics.record_first_token(req, now)
         self.metrics.record_tokens(now, 1)
@@ -144,12 +315,18 @@ class ServingEngine:
         self.completed.append(req)
         self.metrics.record_done(req, now)
         self.pool.evict(slot)
+        self._row_src.pop(slot, None)
+        self._fresh.pop(slot, None)
 
     # -- reporting ----------------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
         now = self.clock.now()
+        kwargs = {}
+        if self.kv == "paged":
+            kwargs["kv_block_occupancy"] = self.pool.block_occupancy
         return self.metrics.snapshot(now, queue_depth=self.queue.depth(now),
-                                     slot_occupancy=self.pool.occupancy)
+                                     slot_occupancy=self.pool.occupancy,
+                                     **kwargs)
 
     def results(self) -> Dict[int, List[int]]:
         """rid -> generated tokens, for every completed request."""

@@ -12,12 +12,12 @@ through the jitted ops, so a pool slot update does not copy the pool).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as Mo
@@ -59,6 +59,7 @@ class SlotPool:
         self.caches: Pytree = Mo.init_cache(cfg, env, num_slots,
                                             prompt_len + max_gen)
         self._slots: List[Optional[SlotInfo]] = [None] * num_slots
+        self._free: Deque[int] = deque(range(num_slots))  # O(1) admission
         # grow the batch-1 prefill cache to pool seq length, then write it
         # into the slot — one jitted op, slot index traced (no re-jit per slot)
         self._insert = jax.jit(
@@ -70,6 +71,15 @@ class SlotPool:
     # -- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free)
+
+    def acquire_slot(self) -> int:
+        """Pop a free slot in O(1) (the admission loop used to rescan
+        free_slots() per admitted request — O(n^2) under bursts)."""
+        return self._free.popleft()
 
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]
@@ -91,6 +101,8 @@ class SlotPool:
         """Bind `rid` to `slot` and write its prefilled (batch-1, length
         prompt_len) cache into the pool."""
         assert self._slots[slot] is None, f"slot {slot} occupied"
+        if slot in self._free:  # direct pool use (tests): claim this slot
+            self._free.remove(slot)
         self.caches = self._insert(self.caches, prefill_caches,
                                    jnp.asarray(slot, jnp.int32))
         self._slots[slot] = SlotInfo(rid=rid, cur_len=self.prompt_len,
@@ -99,18 +111,14 @@ class SlotPool:
     def evict(self, slot: int, *, zero: bool = False) -> None:
         """Free `slot`. Insert fully overwrites a slot, so zeroing is only
         for hygiene (tests assert evicted slots hold no stale KV)."""
+        if self._slots[slot] is not None:
+            self._free.append(slot)
         self._slots[slot] = None
         if zero:
             self.caches = self._evict(self.caches,
                                       jnp.asarray(slot, jnp.int32))
 
     # -- decode-batch views ---------------------------------------------------
-    def cur_lens(self) -> np.ndarray:
-        """[num_slots] int32 write positions (free slots pinned to 0; their
-        writes land in slots that insert fully overwrites)."""
-        return np.array([0 if s is None else s.cur_len for s in self._slots],
-                        np.int32)
-
     def advance(self, slot: int) -> SlotInfo:
         """Record one decoded token for `slot`; returns the updated info."""
         s = self._slots[slot]

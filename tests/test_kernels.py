@@ -13,6 +13,9 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.paged_decode.ops import (paged_flash_decode,
+                                            paged_gather_decode)
+from repro.kernels.paged_decode.ref import paged_decode_ref
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_ref_loop
 from repro.kernels.rwkv6.ops import wkv6
@@ -104,6 +107,75 @@ def test_flash_decode_merge_identity(rng):
     merged = (o1 * w1 + o2 * w2) / (w1 + w2)
     ref = decode_ref(q, k, v, 255)
     assert float(jnp.max(jnp.abs(merged - ref))) < 1e-3
+
+
+def _paged_setup(rng, B, Hq, Hkv, hd, bs, MB, dtype, extra_blocks=3):
+    """Random pool + per-row tables drawing *disjoint, shuffled* physical
+    blocks (block 0 reserved as the null block, like serve/blocks.py)."""
+    NB = 1 + B * MB + extra_blocks
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, Hq, hd), dtype)
+    kp = _mk(ks[1], (NB, Hkv, bs, hd), dtype)
+    vp = _mk(ks[2], (NB, Hkv, bs, hd), dtype)
+    ids = np.random.default_rng(int(jax.random.randint(rng, (), 0, 1 << 30))
+                                ).permutation(np.arange(1, NB))
+    tables = jnp.asarray(ids[:B * MB].reshape(B, MB), jnp.int32)
+    return q, kp, vp, tables
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,hd,bs,MB", [
+    (2, 4, 2, 32, 16, 4),
+    (3, 8, 8, 64, 8, 3),   # MHA
+    (1, 4, 1, 128, 32, 2),  # MQA, wide blocks
+])
+def test_paged_decode_kernel_sweep(B, Hq, Hkv, hd, bs, MB, dtype, rng):
+    q, kp, vp, tables = _paged_setup(rng, B, Hq, Hkv, hd, bs, MB, dtype)
+    lengths = jnp.asarray([(i * 7) % (MB * bs) for i in range(B)], jnp.int32)
+    o = paged_flash_decode(q, kp, vp, tables, lengths, interpret=True)
+    r = paged_decode_ref(q, kp, vp, tables, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    assert float(jnp.max(jnp.abs(o - r))) < tol
+    # the XLA gather fallback agrees too (it's what CPU serving runs)
+    g = paged_gather_decode(q, kp, vp, tables, lengths)
+    assert float(jnp.max(jnp.abs(g - r))) < tol
+
+
+def test_paged_decode_masks_fully_and_partially(rng):
+    B, Hq, Hkv, hd, bs, MB = 3, 4, 2, 32, 16, 3
+    q, kp, vp, tables = _paged_setup(rng, B, Hq, Hkv, hd, bs, MB,
+                                     jnp.float32)
+    lengths = jnp.asarray([-1, 0, MB * bs - 1], jnp.int32)
+    o = paged_flash_decode(q, kp, vp, tables, lengths, interpret=True)
+    r = paged_decode_ref(q, kp, vp, tables, lengths)
+    assert float(jnp.max(jnp.abs(o[0]))) == 0.0, "masked row must be zero"
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-3
+
+
+def test_paged_decode_matches_contiguous_cache(rng):
+    """Paging a contiguous cache into shuffled physical blocks must not
+    change the attention output (table order == logical order)."""
+    B, Hq, Hkv, hd, bs, MB = 2, 8, 2, 64, 16, 4
+    S = MB * bs
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, Hq, hd), jnp.float32)
+    k = _mk(ks[1], (B, Hkv, S, hd), jnp.float32)
+    v = _mk(ks[2], (B, Hkv, S, hd), jnp.float32)
+    NB = 1 + B * MB
+    perm = np.random.default_rng(0).permutation(np.arange(1, NB))
+    tables = jnp.asarray(perm.reshape(B, MB), jnp.int32)
+    kp = jnp.zeros((NB, Hkv, bs, hd), jnp.float32)
+    vp = jnp.zeros((NB, Hkv, bs, hd), jnp.float32)
+    for b in range(B):
+        for j in range(MB):
+            blk = slice(j * bs, (j + 1) * bs)
+            kp = kp.at[tables[b, j]].set(k[b, :, blk])
+            vp = vp.at[tables[b, j]].set(v[b, :, blk])
+    cur = 37
+    o = paged_flash_decode(q, kp, vp, tables,
+                           jnp.full((B,), cur, jnp.int32), interpret=True)
+    r = decode_ref(q, k, v, cur)
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-3
 
 
 @pytest.mark.parametrize("B,S,W,bt,bw", [

@@ -1,7 +1,14 @@
-"""Continuous-batching serving layer: slot pool, scheduler, metrics, and the
-closed serving -> metrics -> autoscaler loop. Everything runs on a
-ManualClock — arrival replay, latency percentiles, and scaling decisions are
-fully deterministic."""
+"""Continuous-batching serving layer: paged KV (BlockManager), slot pool,
+scheduler, chunked prefill, metrics, and the closed serving -> metrics ->
+autoscaler loop. Everything runs on a ManualClock — arrival replay, latency
+percentiles, and scaling decisions are fully deterministic.
+
+Correctness bar: greedy output token-for-token equal to a one-shot uniform
+batch. Engines that prefill in one full-sequence call (kv="slot", and paged
+with prefill_chunk=0) are held to the batched-prefill serve_batch baseline;
+chunked prefill is held to the streamed-prefill one-shot baseline (same
+math, same fp association — a full prefill reduces attention in GEMM order,
+which can flip near-tie argmaxes; see docs/serving.md)."""
 import math
 
 import jax
@@ -15,9 +22,9 @@ from repro.core.clock import ManualClock
 from repro.launch.serve import serve_batch
 from repro.models import model as Mo
 from repro.models.env import Env
-from repro.serve import (SERVE_PLAN, Request, RequestQueue, ServingEngine,
-                         burst_trace, percentile, poisson_trace,
-                         run_to_completion)
+from repro.serve import (SERVE_PLAN, BlockManager, Request, RequestQueue,
+                         ServingEngine, SlotPool, burst_trace, percentile,
+                         poisson_trace, run_to_completion)
 
 CFG = get_smoke("paper-demo")
 ENV0 = Env(mesh=None, plan=SERVE_PLAN)
@@ -25,9 +32,9 @@ PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
 P = 16  # prompt length used throughout
 
 
-def _engine(num_slots=2, max_gen=8, clock=None):
+def _engine(num_slots=2, max_gen=8, clock=None, **kw):
     return ServingEngine(CFG, PARAMS, num_slots=num_slots, prompt_len=P,
-                         max_gen=max_gen, clock=clock or ManualClock())
+                         max_gen=max_gen, clock=clock or ManualClock(), **kw)
 
 
 def _trace(n, gen_len=4, arrival_t=0.0, seed=0):
@@ -36,6 +43,12 @@ def _trace(n, gen_len=4, arrival_t=0.0, seed=0):
                     prompt=rng.integers(0, CFG.vocab_size, (P,),
                                         dtype=np.int32),
                     gen_len=gen_len, arrival_t=arrival_t) for i in range(n)]
+
+
+def _baseline(trace, gen, streamed=False):
+    prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+    return np.asarray(serve_batch(None, CFG, PARAMS, prompts, gen,
+                                  SERVE_PLAN, streamed_prefill=streamed))
 
 
 # ---------------------------------------------------------------------------
@@ -49,6 +62,13 @@ def test_queue_gates_on_arrival_time():
     assert len(q) == 2
     r = q.pop_ready(1.0)
     assert r is not None and q.depth(1.0) == 1
+
+
+def test_queue_peek_does_not_pop():
+    q = RequestQueue(_trace(2))
+    r = q.peek_ready(0.0)
+    assert r is not None and r.rid == 0 and len(q) == 2
+    assert q.pop_ready(0.0).rid == 0
 
 
 def test_poisson_trace_is_deterministic_and_sorted():
@@ -83,37 +103,103 @@ def test_snapshot_omits_latency_keys_until_data_exists():
 
 
 # ---------------------------------------------------------------------------
-# slot admission / eviction
+# BlockManager: allocation, free list, reservations
 # ---------------------------------------------------------------------------
 
 
-def test_slot_admission_and_eviction_lifecycle():
+def test_block_manager_reserves_and_allocates_on_demand():
+    bm = BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                      block_size=8)
+    need = bm.blocks_for(8)  # kv span = 16+8-1 = 23 -> 3 blocks of 8
+    assert need == 3
+    assert bm.can_admit(8)
+    slot = bm.admit(7, 8)
+    assert bm.blocks_in_use == 0, "admit reserves, ensure allocates"
+    assert bm.free_unreserved == bm.usable_blocks - need
+    bm.ensure(slot, P - 1)  # prompt blocks
+    assert bm.blocks_in_use == 2
+    assert 0 not in bm.table[slot, :2], "null block must never be allocated"
+    bm.ensure(slot, P)  # first decode token crosses into block 3
+    assert bm.blocks_in_use == 3
+    info = bm.info(slot)
+    assert info.reserved == 0
+    bm.evict(slot)
+    assert bm.blocks_in_use == 0 and bm.free_unreserved == bm.usable_blocks
+    assert np.all(bm.table[slot] == 0)
+
+
+def test_block_manager_exhaustion_gates_admission():
+    # pool sized for exactly one request (+null)
+    bm = BlockManager(CFG, ENV0, num_slots=4, prompt_len=P, max_gen=8,
+                      block_size=8, num_blocks=1 + 3)
+    s0 = bm.admit(0, 8)
+    assert bm.free_slot_count == 3
+    assert not bm.can_admit(8), "blocks exhausted though slots are free"
+    bm.evict(s0)
+    assert bm.can_admit(8)
+
+
+def test_block_manager_recycles_blocks_across_requests():
+    bm = BlockManager(CFG, ENV0, num_slots=1, prompt_len=P, max_gen=8,
+                      block_size=8, num_blocks=4)
+    s = bm.admit(0, 8)
+    bm.ensure(s, P + 6)
+    first = set(bm.table[s][bm.table[s] > 0])
+    bm.evict(s)
+    s2 = bm.admit(1, 8)
+    bm.ensure(s2, P + 6)
+    second = set(bm.table[s2][bm.table[s2] > 0])
+    assert first == second, "freed blocks must be reused (O(1) free list)"
+
+
+def test_slot_pool_acquire_is_free_list_backed():
+    pool = SlotPool(CFG, ENV0, num_slots=3, prompt_len=P, max_gen=4)
+    a, b = pool.acquire_slot(), pool.acquire_slot()
+    assert {a, b} == {0, 1} and pool.free_slot_count == 1
+    lg, caches = jax.jit(lambda p, t: Mo.forward(
+        p, t, CFG, ENV0, mode="prefill")[:2])(
+            PARAMS, jnp.zeros((1, P), jnp.int32))
+    pool.insert(a, 0, caches, 2)
+    pool.evict(a)
+    assert pool.free_slot_count == 2
+    assert pool.acquire_slot() == 2, "FIFO free list"
+
+
+# ---------------------------------------------------------------------------
+# slot admission / eviction lifecycle (paged default: chunked prefill lanes
+# admit one request per step; classic paths admit every free slot at once)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_and_eviction_lifecycle():
     clock = ManualClock()
     eng = _engine(num_slots=2, clock=clock)
     eng.submit(_trace(3, gen_len=3))
-    eng.step()
-    # 2 slots -> 2 admitted, third waits in queue
-    assert len(eng.pool.free_slots()) == 0
+    eng.step()  # request 0 rides the prefill lanes
+    eng.step()  # request 0 decodes, request 1 prefills
+    assert eng.pool.free_slot_count == 0
     assert eng.pool.occupancy == 1.0
     assert eng.queue.depth(clock.now()) == 1
-    rids = {eng.pool.rid_of(s) for s in eng.pool.active_slots()}
+    rids = {eng.pool.rid_of(s) for s in eng.pool.occupied_slots()}
     assert rids == {0, 1}
     # drive to completion: finished slots free up and request 2 is admitted
-    for _ in range(10):
+    for _ in range(16):
         clock.advance(0.05)
         eng.step()
         if eng.drained():
             break
     assert eng.drained()
     assert sorted(eng.results()) == [0, 1, 2]
-    assert eng.pool.free_slots() == [0, 1]
+    assert sorted(eng.pool.free_slots()) == [0, 1]
+    assert eng.pool.blocks_in_use == 0
     # every request produced exactly gen_len tokens
     assert all(len(t) == 3 for t in eng.results().values())
 
 
 def test_admitting_mid_decode_does_not_disturb_running_requests():
-    """The continuous-batching property: a request joining the batch leaves
-    already-running slots' tokens unchanged (same as a solo run)."""
+    """The continuous-batching property: a request joining the batch (its
+    prompt chunks riding the lane rows) leaves already-running slots'
+    tokens unchanged (same as a solo run)."""
     tr = _trace(2, gen_len=6, seed=7)
     tr[1].arrival_t = 0.12  # joins while request 0 is mid-decode
     solo = _engine(num_slots=1, clock=ManualClock())
@@ -128,7 +214,7 @@ def test_evicted_slot_is_zeroed_when_requested():
     eng = _engine(num_slots=2)
     eng.submit(_trace(1, gen_len=2))
     run_to_completion(eng, dt=0.05)
-    # re-point: evict with zeroing and check the KV slot is actually zeroed
+    # re-point: evict with zeroing and check the KV blocks actually zero
     lg, caches = eng._prefill(PARAMS, {"tokens": jnp.asarray(
         _trace(1)[0].prompt)[None]})
     eng.pool.insert(0, 99, caches, 4)
@@ -147,12 +233,15 @@ def test_gen_len_one_request_completes_at_admission():
     assert eng.pool.free_slots() == [0]
 
 
-def test_engine_rejects_sliding_window_archs():
-    """'local' ring-buffer caches can't be grown after prefill; the pool
-    must refuse them up front instead of crashing inside XLA at admit."""
+def test_slot_pool_still_rejects_sliding_window_archs():
+    """The slot pool cannot grow a prompt-sized ring cache to the pool ring
+    without breaking slot=pos%w alignment; it must refuse up front. The
+    paged engine allocates window-sized block tables instead — see
+    test_paged_serves_sliding_window_arch."""
     cfg = get_smoke("recurrentgemma-9b")
     with pytest.raises(ValueError, match="local"):
-        ServingEngine(cfg, {}, num_slots=1, prompt_len=8, max_gen=4)
+        ServingEngine(cfg, {}, num_slots=1, prompt_len=8, max_gen=4,
+                      kv="slot")
 
 
 def test_engine_rejects_mis_sized_requests():
@@ -166,24 +255,51 @@ def test_engine_rejects_mis_sized_requests():
 
 
 # ---------------------------------------------------------------------------
-# correctness: continuous batching == one-shot
+# correctness: continuous batching == one-shot (every KV layout)
 # ---------------------------------------------------------------------------
 
 
-def test_continuous_batched_tokens_match_one_shot():
-    """Requests flowing through a 2-slot pool (staggered admissions, mixed
-    depths) must emit token-for-token what the one-shot uniform batch
-    emits."""
+def test_paged_chunked_tokens_match_streamed_one_shot():
+    """The default engine (paged KV + chunked prefill) under staggered
+    admissions and mixed depths must emit token-for-token what the
+    streamed-prefill one-shot uniform batch emits."""
     gen = 8
     trace = poisson_trace(6, 12.0, prompt_len=P, vocab_size=CFG.vocab_size,
                           gen_len=gen, seed=11)
     eng = _engine(num_slots=2, max_gen=gen)
+    assert eng.kv == "paged" and eng.prefill_chunk == P
     out = run_to_completion(eng, trace, dt=0.05)
-    prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
-    base = np.asarray(serve_batch(None, CFG, PARAMS, prompts, gen,
-                                  SERVE_PLAN))
+    base = _baseline(trace, gen, streamed=True)
     for r in trace:
         assert np.array_equal(base[r.rid], np.array(out[r.rid])), r.rid
+
+
+def test_paged_classic_tokens_match_one_shot():
+    """Paged KV with classic (batch-1 prefill + block insert) admission is
+    bitwise the same computation as the slot pool: it must match the
+    batched-prefill baseline exactly."""
+    gen = 8
+    trace = poisson_trace(6, 12.0, prompt_len=P, vocab_size=CFG.vocab_size,
+                          gen_len=gen, seed=11)
+    eng = _engine(num_slots=2, max_gen=gen, prefill_chunk=0)
+    out = run_to_completion(eng, trace, dt=0.05)
+    base = _baseline(trace, gen)
+    for r in trace:
+        assert np.array_equal(base[r.rid], np.array(out[r.rid])), r.rid
+
+
+def test_paged_matches_slot_pool_token_for_token():
+    """The paged block-table data plane must reproduce the PR-1 slot pool's
+    output exactly on the same trace (mid-serve admissions + evictions)."""
+    gen = 8
+    mk = lambda: poisson_trace(5, 10.0, prompt_len=P,
+                               vocab_size=CFG.vocab_size, gen_len=2,
+                               gen_len_max=gen, seed=5)
+    out_slot = run_to_completion(_engine(num_slots=2, max_gen=gen, kv="slot"),
+                                 mk(), dt=0.05)
+    out_paged = run_to_completion(
+        _engine(num_slots=2, max_gen=gen, prefill_chunk=0), mk(), dt=0.05)
+    assert out_slot == out_paged
 
 
 def test_mixed_gen_lengths_match_one_shot_prefix():
@@ -192,11 +308,81 @@ def test_mixed_gen_lengths_match_one_shot_prefix():
                           gen_len=2, gen_len_max=gen_max, seed=5)
     eng = _engine(num_slots=3, max_gen=gen_max)
     out = run_to_completion(eng, trace, dt=0.05)
-    prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
-    base = np.asarray(serve_batch(None, CFG, PARAMS, prompts, gen_max,
-                                  SERVE_PLAN))
+    base = _baseline(trace, gen_max, streamed=True)
     for r in trace:
         assert np.array_equal(base[r.rid][:r.gen_len], np.array(out[r.rid]))
+
+
+def test_chunk_size_does_not_change_tokens():
+    """Prompt chunk boundaries (including ones that straddle KV blocks) are
+    a scheduling detail — every chunk size must emit identical tokens."""
+    gen = 6
+    trace = lambda: poisson_trace(3, 10.0, prompt_len=P,
+                                  vocab_size=CFG.vocab_size, gen_len=gen,
+                                  seed=2)
+    outs = [run_to_completion(
+        _engine(num_slots=2, max_gen=gen, prefill_chunk=c, block_size=8),
+        trace(), dt=0.05) for c in (P, 8, 5)]
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_paged_serves_sliding_window_arch():
+    """recurrentgemma-style archs (rglru state + 'local' window blocks):
+    the BlockManager allocates window-sized ring tables at admission, so
+    they serve token-exact — both ring regimes (prompt >= window and
+    prompt < window)."""
+    cfg = get_smoke("recurrentgemma-9b")  # local_window = 16
+    params = Mo.init_params(jax.random.PRNGKey(1), cfg, ENV0)
+    for prompt_len, gen in ((24, 6), (8, 10)):
+        rng = np.random.default_rng(4)
+        trace = [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, (prompt_len,), dtype=np.int32), gen_len=gen)
+            for i in range(3)]
+        eng = ServingEngine(cfg, params, num_slots=2, prompt_len=prompt_len,
+                            max_gen=gen, block_size=8, clock=ManualClock())
+        assert eng.prefill_chunk == 0, "recurrent state => classic admission"
+        assert not eng.pool.has_global and eng.pool.has_local
+        out = run_to_completion(eng, trace, dt=0.05)
+        prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+        base = np.asarray(serve_batch(None, cfg, params, prompts, gen,
+                                      SERVE_PLAN))
+        for r in trace:
+            assert np.array_equal(base[r.rid], np.array(out[r.rid])), \
+                (prompt_len, r.rid)
+
+
+def test_block_exhaustion_applies_queue_backpressure():
+    """A pool with blocks for only ~2 requests but 4 slots must defer
+    admissions (queue backpressure) instead of overcommitting — and still
+    drain with token-exact output once blocks recycle."""
+    gen = 8
+    need = 3  # blocks_for(8) at block_size=8: ceil(23/8)
+    eng = _engine(num_slots=4, max_gen=gen, block_size=8,
+                  kv_blocks=1 + 2 * need)
+    trace = burst_trace(4, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=gen, seed=9)
+    starved, peak = [], []
+
+    def on_step(i, snap):
+        starved.append(eng.pool.free_slot_count > 0
+                       and eng.queue.depth(eng.clock.now()) > 0
+                       and not eng.pool.can_admit(gen))
+        peak.append(len(eng.pool.occupied_slots()))
+
+    out = run_to_completion(eng, trace, dt=0.05, on_step=on_step)
+    assert any(starved), "block exhaustion never gated admission"
+    assert max(peak) <= 2, "reservation must cap concurrency at the pool"
+    base = _baseline(trace, gen, streamed=True)
+    for r in trace:
+        assert np.array_equal(base[r.rid], np.array(out[r.rid])), r.rid
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_chunked_prefill_rejected_for_recurrent_archs():
+    cfg = get_smoke("recurrentgemma-9b")
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ServingEngine(cfg, {}, num_slots=1, prompt_len=8, max_gen=4,
+                      prefill_chunk=4)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +403,19 @@ def test_metrics_snapshot_and_deadlines():
     assert eng.metrics.total_tokens == 6
     lat = [r.latency_s for r in eng.completed]
     assert all(l is not None and l > 0 for l in lat)
+
+
+def test_paged_engine_publishes_block_occupancy():
+    clock = ManualClock()
+    eng = _engine(num_slots=2, clock=clock, block_size=8)
+    eng.submit(_trace(1, gen_len=4))
+    snap = eng.step()
+    assert 0.0 < snap["kv_block_occupancy"] <= 1.0
+    run_to_completion(eng, dt=0.05)
+    assert eng.snapshot()["kv_block_occupancy"] == 0.0
+    # slot engines don't fake the signal
+    slot_eng = _engine(num_slots=1, kv="slot")
+    assert "kv_block_occupancy" not in slot_eng.snapshot()
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +473,8 @@ def test_latency_policy_decisions():
     # no latency data but work queued or slots busy -> hold, don't shrink
     assert pol.decide(V, {"queue_depth": 3.0}).target == 2
     assert pol.decide(V, {"slot_occupancy": 0.5}).target == 2
+    # paged engines report committed blocks — also a hold signal
+    assert pol.decide(V, {"kv_block_occupancy": 0.5}).target == 2
     assert pol.decide(V, {"latency_p95_ms": 500.0}).target == 3
     assert pol.decide(V, {"latency_p95_ms": 10.0,
                           "queue_depth": 0.0}).target == 1
@@ -286,15 +487,17 @@ def test_serving_metrics_flow_into_scaler_aggregation():
     c = VirtualCluster(n_compute=1)
     agent = c.sim.nodes[c.head_id].agent
     agent.report_serving({"latency_p95_ms": 120.0, "tokens_per_s": 50.0,
-                          "queue_depth": 3.0, "slot_occupancy": 0.5})
+                          "queue_depth": 3.0, "slot_occupancy": 0.5,
+                          "kv_block_occupancy": 0.8})
     c.sim.nodes[c.compute_nodes()[0]].agent.report_serving(
         {"latency_p95_ms": 80.0, "tokens_per_s": 30.0, "queue_depth": 1.0,
-         "slot_occupancy": 1.0})
+         "slot_occupancy": 1.0, "kv_block_occupancy": 0.4})
     m = c.scaler.read_metrics(c.registry)
     assert m["latency_p95_ms"] == 120.0  # worst node
     assert m["tokens_per_s"] == 80.0  # summed
     assert m["queue_depth"] == 4.0  # summed
     assert m["slot_occupancy"] == pytest.approx(0.75)  # averaged
+    assert m["kv_block_occupancy"] == pytest.approx(0.6)  # averaged
     c.shutdown()
 
 

@@ -13,5 +13,18 @@ python -m pytest -x -q
 echo "== benchmark smoke =="
 python benchmarks/run.py --smoke
 
-echo "== serving demo (continuous batching + autoscale + verify) =="
+echo "== serving perf record (BENCH_serve.json: paged vs slot KV) =="
+python - <<'PY'
+import json
+r = json.load(open("BENCH_serve.json"))
+print(json.dumps(r, indent=2))
+assert r["token_exact"], "paged serving lost greedy token-exactness"
+assert r["kv_bytes_ratio"] <= 1.01, "paged ran with a bigger KV budget"
+# perf trajectory floors — the ISSUE-2 acceptance bar (CPU smoke,
+# best-of-N timed; TPU runs the Pallas paged kernel)
+assert r["speedup_tokens_per_s"] >= 1.5, r["speedup_tokens_per_s"]
+assert r["concurrency_ratio"] >= 2.0, r["concurrency_ratio"]
+PY
+
+echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
 python -m repro.launch.serve --trace poisson --smoke --verify
