@@ -224,9 +224,7 @@ def _serve_engine_bench(eng, mk_trace, *, baseline_streamed: bool,
         run = run_to_completion(
             eng, mk_trace(), dt=1e-4,
             on_step=lambda i, s: peak.__setitem__(
-                0, max(peak[0], len(eng.pool.occupied_slots())
-                       if hasattr(eng.pool, "occupied_slots")
-                       else len(eng.pool.active_slots()))))
+                0, max(peak[0], len(eng.pool.occupied_slots()))))
         w = time.perf_counter() - t0
         if w < wall:
             wall, out, snap = w, run, eng.snapshot()
@@ -321,6 +319,128 @@ def bench_serve_paged(smoke: bool = True):
 
 def bench_serve_paged_full():
     return bench_serve_paged(smoke=False)
+
+
+# -- serving API v2: sampled decoding + scheduler policies ----------------------
+#
+# Two claims recorded per commit (merged into BENCH_serve.json):
+#   scheduling: EDF admission beats FIFO on deadline-miss rate on a trace
+#     where the urgent requests arrive behind loose ones (same engine, same
+#     KV, only the SchedulerPolicy differs).
+#   sampling: seeded temperature/top-k/top-p decoding through the fused
+#     sample step stays reproducible (two runs, bit-identical output) at a
+#     recorded tokens/s alongside the greedy rate on the same trace.
+
+
+def bench_serve_sampling(smoke: bool = True):
+    from repro.models import model as Mo
+    from repro.models.env import Env
+    from repro.serve import (EDFPolicy, FIFOPolicy, SERVE_PLAN,
+                             SamplingParams, ServingEngine, ServingMetrics,
+                             burst_trace, run_to_completion)
+
+    cfg = get_smoke("paper-demo")
+    params = Mo.init_params(jax.random.PRNGKey(0), cfg,
+                            Env(mesh=None, plan=SERVE_PLAN))
+    prompt_len, gen = 16, 8
+
+    def mk_engine(policy=None, num_slots=1):
+        return ServingEngine(cfg, params, num_slots=num_slots,
+                             prompt_len=prompt_len, max_gen=gen,
+                             policy=policy)
+
+    # -- scheduling: FIFO vs EDF on a deadline trace (sim time) -----------
+    # one slot serves ~gen steps x 0.05s per request: prioritized, the
+    # tight requests all fit their deadline; behind the loose ones, none do
+    n_loose, n_tight = (6, 4) if smoke else (12, 8)
+    tight_deadline = 0.05 * gen * (n_tight + 1.5)
+
+    def deadline_trace():
+        loose = burst_trace(n_loose, prompt_len=prompt_len,
+                            vocab_size=cfg.vocab_size, gen_len=gen,
+                            deadline_s=60.0, seed=0)
+        tight = burst_trace(n_tight, prompt_len=prompt_len,
+                            vocab_size=cfg.vocab_size, gen_len=gen,
+                            deadline_s=tight_deadline, seed=1)
+        for i, r in enumerate(tight):
+            r.rid = n_loose + i
+        return loose + tight
+
+    sched = {}
+    for name, policy in (("fifo", FIFOPolicy()), ("edf", EDFPolicy())):
+        eng = mk_engine(policy=policy)
+        run_to_completion(eng, deadline_trace(), dt=0.05)
+        n = n_loose + n_tight
+        sched[name] = {
+            "requests": n,
+            "deadline_misses": eng.metrics.deadline_misses,
+            "miss_rate": round(eng.metrics.deadline_misses / n, 3),
+        }
+
+    # -- sampling: seeded top-k/top-p throughput + reproducibility --------
+    n_req = 32 if smoke else 96
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=11)
+
+    def run_timed(sampling):
+        eng = mk_engine(num_slots=4)
+        # warm every step shape outside the timed window
+        run_to_completion(eng, burst_trace(2, prompt_len=prompt_len,
+                                           vocab_size=cfg.vocab_size,
+                                           gen_len=2, sampling=sampling,
+                                           seed=9), dt=1e-4)
+        eng.metrics = ServingMetrics(window_s=1e9)
+        eng.completed.clear()
+        trace = burst_trace(n_req, prompt_len=prompt_len,
+                            vocab_size=cfg.vocab_size, gen_len=gen,
+                            sampling=sampling, seed=3)
+        t0 = time.perf_counter()
+        out = run_to_completion(eng, trace, dt=1e-4)
+        wall = time.perf_counter() - t0
+        toks = sum(len(t) for t in out.values())
+        return out, round(toks / wall, 1)
+
+    out_a, tps_sampled = run_timed(sp)
+    out_b, _ = run_timed(sp)
+    _, tps_greedy = run_timed(None)
+
+    report = {
+        "scheduling": {**sched,
+                       "tight_deadline_s": round(tight_deadline, 3),
+                       "edf_beats_fifo": sched["edf"]["miss_rate"]
+                       < sched["fifo"]["miss_rate"]},
+        "sampling": {"params": {"temperature": sp.temperature,
+                                "top_k": sp.top_k, "top_p": sp.top_p},
+                     "requests": n_req,
+                     "tokens_per_s_wall": tps_sampled,
+                     "greedy_tokens_per_s_wall": tps_greedy,
+                     # the CI floor is this ratio (machine-speed-proof):
+                     # the fused mask+Gumbel must not tank decode rate
+                     "sampled_vs_greedy": round(tps_sampled
+                                                / max(tps_greedy, 1e-9), 3),
+                     "reproducible": out_a == out_b},
+    }
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "BENCH_serve.json"))
+    merged = {}
+    if os.path.exists(path):  # bench_serve_paged writes the base report
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(report)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    return [
+        ("serve_sched_miss_rate_edf", sched["edf"]["miss_rate"],
+         f"fifo={sched['fifo']['miss_rate']} "
+         f"(deadline {tight_deadline:.2f}s)"),
+        ("serve_sampled_tokens_per_s", tps_sampled,
+         f"greedy={tps_greedy} reproducible="
+         f"{report['sampling']['reproducible']}"),
+    ]
+
+
+def bench_serve_sampling_full():
+    return bench_serve_sampling(smoke=False)
 
 
 def dataclasses_replace(r):

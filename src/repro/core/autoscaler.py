@@ -81,13 +81,21 @@ class StepTimePolicy:
 @dataclass
 class LatencyPolicy:
     """Serve-driven scaling: grow while p95 request latency exceeds the
-    target; shrink only once latency is comfortably inside the target AND
-    the arrival queue is empty (draining a backlog at low latency still
-    needs the capacity)."""
+    target OR completed requests are blowing their deadlines; shrink only
+    once latency is comfortably inside the target AND the arrival queue is
+    empty (draining a backlog at low latency still needs the capacity).
+
+    deadline_misses is the cumulative counter an EDF scheduler feeds back
+    through ServingMetrics: EDF reorders admissions within a node, but once
+    requests miss anyway the node is simply oversubscribed — each *new*
+    miss since the last decision is a scale-up vote that outranks a
+    healthy-looking p95 (misses lead completions, p95 trails them)."""
     target_p95_ms: float
     min_nodes: int = 1
     max_nodes: int = 64
     headroom: float = 0.5  # scale down below headroom*target
+    scale_on_misses: bool = True
+    _seen_misses: float = field(default=0.0, init=False)
 
     def decide(self, view, metrics):
         n = len(view.compute)
@@ -97,6 +105,13 @@ class LatencyPolicy:
         # gates admission); fall back to slot occupancy
         occ = max(metrics.get("slot_occupancy", 0.0),
                   metrics.get("kv_block_occupancy", 0.0))
+        misses = metrics.get("deadline_misses", 0.0)
+        new_misses = misses - self._seen_misses
+        self._seen_misses = max(self._seen_misses, misses)
+        if (self.scale_on_misses and new_misses > 0 and n < self.max_nodes):
+            return ScalePlan(n + 1, reason=f"deadline misses +"
+                                           f"{new_misses:.0f} ({misses:.0f}"
+                                           " total)")
         if p95 is None:
             # no completions in the metrics window: hold while anything is
             # queued or in flight (mid-burst warmup), shrink once truly idle
@@ -168,7 +183,7 @@ class AutoScaler:
         # take the worst node, throughput sums, occupancy averages
         for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
                           ("ttft_p95_ms", max), ("tokens_per_s", sum),
-                          ("deadline_misses", sum)):
+                          ("deadline_misses", sum), ("preemptions", sum)):
             vals = [v for k, v in out.items()
                     if k.startswith(f"node_{name}/")]
             if vals:

@@ -111,9 +111,11 @@ class VirtualCluster:
         through the head node's agent into the registry KV, then pump the
         control plane with autoscaling — so the installed policy
         (QueueDepthPolicy, LatencyPolicy, ...) resizes the cluster
-        *mid-serve* from live load. With a paged KV engine the snapshot
-        carries kv_block_occupancy — blocks in use, the signal that
-        actually gates admission — alongside slot_occupancy.
+        *mid-serve* from live load. The snapshot carries whatever load
+        signals the engine's KVBackend reports (the paged BlockManager
+        adds kv_block_occupancy — committed blocks, the signal that
+        actually gates admission) plus deadline_misses, which an EDF
+        scheduler feeds back into LatencyPolicy scale-up votes.
 
         `dt` is the simulated wall time of one decode step: a float, or a
         callable (n_compute -> seconds) to model data-parallel speedup —

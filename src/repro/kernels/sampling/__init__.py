@@ -1,0 +1,10 @@
+"""Fused top-k / top-p (nucleus) logit masking for the serving sample step.
+
+The decode step keeps logits on device: after the forward pass each row's
+logits are masked to its request's top-k count and top-p mass, then
+Gumbel-max sampled (launch/steps.py). On TPU the mask is a Pallas kernel
+(one VMEM-resident pass per row, thresholds found by bisection — no sort);
+elsewhere the same semantics run as the sort-based XLA reference.
+"""
+from repro.kernels.sampling.ops import topk_topp_mask  # noqa: F401
+from repro.kernels.sampling.ref import topk_topp_mask_ref  # noqa: F401

@@ -1,0 +1,42 @@
+"""Sort-based oracle for the fused top-k/top-p mask.
+
+Semantics (per row, over the valid vocab):
+  top_k > 0:  keep logits >= the k-th largest logit (value ties all kept)
+  top_p < 1:  keep probs >= the prob of the last token in the minimal
+              descending-prob prefix whose mass reaches top_p (ties kept)
+Dropped entries become NEG_INF so a downstream argmax / Gumbel-max can
+never pick them. The row's argmax always survives both filters.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def topk_topp_mask_ref(logits, top_k, top_p):
+    """logits [T,V] f32; top_k [T] int32 (<=0 off); top_p [T] f32 (>=1 off).
+
+    Returns [T,V] f32: kept logits unchanged, dropped entries NEG_INF.
+    """
+    logits = logits.astype(jnp.float32)
+    T, V = logits.shape
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    k = jnp.clip(top_k, 1, V)
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)  # [T,1]
+    keep_k = jnp.where(top_k[:, None] > 0, logits >= kth, True)
+
+    lmax = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - lmax)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / denom
+    # softmax is monotone, so the descending probs are the softmax of the
+    # already-sorted logits — no second sort of the [T,V] matrix
+    p_desc = jnp.exp(desc - lmax) / denom
+    csum = jnp.cumsum(p_desc, axis=-1)
+    # first index where the running mass reaches top_p = the minimal prefix
+    idx = jnp.argmax(csum >= top_p[:, None], axis=-1)
+    cutoff = jnp.take_along_axis(p_desc, idx[:, None], axis=-1)  # [T,1]
+    keep_p = jnp.where(top_p[:, None] < 1.0, probs >= cutoff, True)
+
+    return jnp.where(keep_k & keep_p, logits, NEG_INF)

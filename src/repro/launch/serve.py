@@ -26,11 +26,13 @@ from repro.configs import get_config, get_smoke
 from repro.configs.base import ParallelPlan
 from repro.core import ClusterImage, LatencyPolicy, QueueDepthPolicy, \
     VirtualCluster
+from repro.core.clock import ManualClock
 from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
-from repro.serve import (SERVE_PLAN, ServingEngine, burst_trace,
-                         poisson_trace)
+from repro.serve import (SERVE_PLAN, SamplingParams, ServingEngine,
+                         burst_trace, make_scheduler_policy, poisson_trace,
+                         run_to_completion)
 
 
 def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan,
@@ -89,6 +91,39 @@ def _build_policy(args):
                             min_nodes=args.nodes, max_nodes=args.max_nodes)
 
 
+def _sampling_of(args) -> SamplingParams:
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.sample_seed)
+
+
+def _trace_of(args, cfg):
+    """Build the arrival trace (deterministic for the args — the sampled
+    verify path regenerates it for a second engine)."""
+    sampling = _sampling_of(args)
+    if args.trace == "burst":
+        return burst_trace(args.requests, prompt_len=args.prompt_len,
+                           vocab_size=cfg.vocab_size, gen_len=args.gen,
+                           deadline_s=args.deadline, sampling=sampling,
+                           seed=args.seed)
+    return poisson_trace(args.requests, args.rate,
+                         prompt_len=args.prompt_len,
+                         vocab_size=cfg.vocab_size, gen_len=args.gen,
+                         gen_len_max=args.gen_max, deadline_s=args.deadline,
+                         sampling=sampling, seed=args.seed)
+
+
+def _make_engine(args, cfg, params, *, num_slots=None, clock=None):
+    sched = {"preemptive": True} if (args.sched == "edf"
+                                     and args.edf_preempt) else {}
+    return ServingEngine(cfg, params, num_slots=num_slots or args.slots,
+                         prompt_len=args.prompt_len, max_gen=args.gen_max,
+                         kv=args.kv, block_size=args.block_size,
+                         kv_blocks=args.kv_blocks,
+                         prefill_chunk=args.prefill_chunk,
+                         policy=make_scheduler_policy(args.sched, **sched),
+                         clock=clock)
+
+
 def run_trace(args, cfg, params) -> int:
     policy = _build_policy(args)
     image = ClusterImage.build(f"{cfg.name}-serve", cfg, SERVE_PLAN, "serve")
@@ -96,26 +131,11 @@ def run_trace(args, cfg, params) -> int:
                              cooldown_s=args.cooldown)
     print("serving replicas register to the catalog:\n" + cluster.hostfile)
 
-    engine = ServingEngine(cfg, params, num_slots=args.slots,
-                           prompt_len=args.prompt_len, max_gen=args.gen_max,
-                           kv=args.kv, block_size=args.block_size,
-                           kv_blocks=args.kv_blocks,
-                           prefill_chunk=args.prefill_chunk,
-                           clock=cluster.clock)
-    if args.kv == "paged":
-        print(f"paged KV: {engine.pool.num_blocks} blocks x "
-              f"{engine.pool.block_size} tokens, chunked prefill="
-              f"{engine.prefill_chunk or 'off'}")
-    make = burst_trace if args.trace == "burst" else None
-    if make is not None:
-        trace = make(args.requests, prompt_len=args.prompt_len,
-                     vocab_size=cfg.vocab_size, gen_len=args.gen,
-                     seed=args.seed)
-    else:
-        trace = poisson_trace(args.requests, args.rate,
-                              prompt_len=args.prompt_len,
-                              vocab_size=cfg.vocab_size, gen_len=args.gen,
-                              gen_len_max=args.gen_max, seed=args.seed)
+    engine = _make_engine(args, cfg, params, clock=cluster.clock)
+    print(f"{engine.pool.describe()}, chunked prefill="
+          f"{engine.prefill_chunk or 'off'}, scheduler={engine.policy.name}, "
+          f"sampling={'greedy' if args.temperature <= 0 else _sampling_of(args)}")
+    trace = _trace_of(args, cfg)
 
     sizes = []  # scaling timeline: (sim_t, n_compute)
 
@@ -149,18 +169,33 @@ def run_trace(args, cfg, params) -> int:
 
     rc = 0
     if args.verify:
-        prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
-        # chunked prefill's fp path matches the streamed-prefill one-shot
-        # (full-prefill GEMM reassociates reductions; docs/serving.md)
-        streamed = bool(engine.prefill_chunk)
-        base = np.asarray(serve_batch(None, cfg, params, prompts,
-                                      args.gen_max, SERVE_PLAN,
-                                      streamed_prefill=streamed))
-        ok = all(np.array_equal(base[r.rid][:r.gen_len], np.array(out[r.rid]))
-                 for r in trace)
-        tag = "streamed-prefill one-shot" if streamed else "one-shot"
-        print(f"verify vs {tag} baseline: "
-              f"{'token-for-token MATCH' if ok else 'MISMATCH'}")
+        if args.temperature > 0:
+            # seeded sampling has no one-shot oracle; verify the v2
+            # contract instead: the same trace on a fresh engine with a
+            # different slot count (different lane placements, different
+            # batch compositions) must emit bit-identical tokens
+            alt = args.slots // 2 if args.slots > 1 else args.slots + 1
+            eng2 = _make_engine(args, cfg, params, num_slots=alt,
+                                clock=ManualClock())
+            out2 = run_to_completion(eng2, _trace_of(args, cfg),
+                                     dt=args.step_time)
+            ok = out == out2
+            print(f"verify seeded sampling ({args.slots} vs {alt} slots): "
+                  f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
+        else:
+            prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
+            # chunked prefill's fp path matches the streamed-prefill
+            # one-shot (full-prefill GEMM reassociates; docs/serving.md)
+            streamed = bool(engine.prefill_chunk)
+            base = np.asarray(serve_batch(None, cfg, params, prompts,
+                                          args.gen_max, SERVE_PLAN,
+                                          streamed_prefill=streamed))
+            ok = all(np.array_equal(base[r.rid][:r.gen_len],
+                                    np.array(out[r.rid]))
+                     for r in trace)
+            tag = "streamed-prefill one-shot" if streamed else "one-shot"
+            print(f"verify vs {tag} baseline: "
+                  f"{'token-for-token MATCH' if ok else 'MISMATCH'}")
         rc = 0 if ok else 1
     cluster.shutdown()
     return rc
@@ -209,6 +244,23 @@ def main() -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill lane width (0 disables; default: "
                     "prompt_len on attention-only archs)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k logit cutoff (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="sampling PRNG root (per-request seeds derive "
+                    "from it; output is reproducible and lane-invariant)")
+    ap.add_argument("--sched", default="fifo", choices=("fifo", "edf"),
+                    help="admission-order scheduler policy")
+    ap.add_argument("--edf-preempt", action="store_true",
+                    help="EDF only: allow restart-preemption of the "
+                    "slackest running request for an urgent arrival")
+    ap.add_argument("--deadline", type=float, default=float("inf"),
+                    help="per-request completion deadline, seconds (EDF "
+                    "orders by it; misses feed the autoscaler)")
     ap.add_argument("--nodes", type=int, default=1,
                     help="initial / minimum compute nodes")
     ap.add_argument("--max-nodes", type=int, default=6)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelPlan, ShapeConfig
+from repro.kernels.sampling import topk_topp_mask
 from repro.models import model as Mo
 from repro.models.env import Env
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -65,39 +66,105 @@ def make_decode_step(cfg: ModelConfig, env: Env):
     return decode_step
 
 
-def _select_tokens(prev_tok, meta):
-    """Device-side input-token select from the packed [3,T] step metadata
-    (rows: tok_src, fresh_tok, cur_len — one upload per step). Row i
-    decodes prev_tok[tok_src[i]] (last step's argmax, still on device)
-    unless tok_src[i] < 0, in which case it takes the freshly uploaded
-    fresh token (prompt-chunk token or a prefill-emitted first token).
-    This is what keeps the serving loop's per-step host traffic down to
-    one small upload and one [T] token-vector download."""
-    tok_src, fresh_tok = meta[0], meta[1]
+# Packed per-row step metadata: one [META_I_ROWS,T] int32 + one
+# [META_F_ROWS,T] float32 upload per decode step (ServingEngine.step fills
+# them; the fused steps below index through these names). This is what
+# keeps the serving loop's per-step host traffic down to two small uploads
+# and one [T] token-vector download.
+ROW_TOK_SRC = 0  # row in prev_tok holding this row's input token (-1: fresh)
+ROW_FRESH = 1    # freshly uploaded input token (prompt chunk / first token)
+ROW_CUR_LEN = 2  # KV write position == attention depth for the row
+ROW_SEED = 3     # SamplingParams.seed (per-request PRNG root)
+ROW_TOP_K = 4    # top-k cutoff (<=0 disables)
+META_I_ROWS = 5
+ROW_TEMPERATURE = 0  # <=0 lowers the row to greedy argmax
+ROW_TOP_P = 1        # nucleus mass (>=1 disables)
+META_F_ROWS = 2
+
+
+def _select_tokens(prev_tok, meta_i):
+    """Device-side input-token select from the packed step metadata. Row i
+    decodes prev_tok[tok_src[i]] (last step's fused sample/argmax, still on
+    device) unless tok_src[i] < 0, in which case it takes the freshly
+    uploaded token (prompt-chunk token or a prefill-emitted first token)."""
+    tok_src, fresh_tok = meta_i[ROW_TOK_SRC], meta_i[ROW_FRESH]
     safe = jnp.clip(tok_src, 0, prev_tok.shape[0] - 1)
     return jnp.where(tok_src >= 0, prev_tok[safe], fresh_tok)
 
 
-def make_fused_decode_step(cfg: ModelConfig, env: Env):
-    """Slot-pool decode with the argmax fused on device.
+def make_sample_fn(cfg: ModelConfig, prompt_len: int):
+    """Fused on-device sample step: [T,Vpad] logits -> [T] int32 tokens.
 
-    meta is the packed [3,T] int32 (tok_src, fresh_tok, cur_len). Returns
-    (next_tokens [T] int32, new_caches) — logits never leave the device;
-    the engine transfers only the token vector each step."""
+    Each row's PRNG key is jax.random.fold_in(PRNGKey(seed), position)
+    where position = cur_len - (prompt_len - 1) is the request-logical
+    token index (0 for the first generated token). The key depends only on
+    the request's seed and its own progress — never on the batch row or
+    composition — so a seeded request emits bit-identical tokens whether it
+    decodes alone, inside a busy mixed-depth batch, or after a preemption
+    restart (the lane-placement-invariance tests hold exactly this).
+
+    Rows with temperature <= 0 take the plain argmax, bit-identical to the
+    pre-sampling fused step, which keeps the greedy token-exactness
+    baselines meaningful. top-k/top-p masking runs through
+    kernels/sampling (Pallas on TPU, same-semantics XLA elsewhere);
+    sampling itself is Gumbel-max over the masked, temperature-scaled
+    logits — logits never leave the device either way.
+    """
     V = cfg.vocab_size
 
-    def step(params, caches, prev_tok, meta):
-        tok = _select_tokens(prev_tok, meta)
+    def sample(logits, meta_i, meta_f):
+        lf = logits[:, :V].astype(jnp.float32)
+        greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        temp = meta_f[ROW_TEMPERATURE]
+        pos = jnp.maximum(meta_i[ROW_CUR_LEN] - (prompt_len - 1), 0)
+        # temperature first, nucleus second (the vLLM/HF ordering): top_p
+        # must see the distribution actually being sampled — a 0.8-scaled
+        # softmax is sharper, so fewer tokens make the nucleus. top_k is
+        # order-invariant (monotone in the logit), the mask handles both.
+        scaled = lf / jnp.maximum(temp, 1e-6)[:, None]
+        masked = topk_topp_mask(scaled, meta_i[ROW_TOP_K], meta_f[ROW_TOP_P])
+
+        def row_gumbel(seed, p):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), p)
+            return jax.random.gumbel(key, (V,), jnp.float32)
+
+        g = jax.vmap(row_gumbel)(meta_i[ROW_SEED], pos)
+        sampled = jnp.argmax(masked + g, axis=-1).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy)
+
+    return sample
+
+
+def make_fused_decode_step(cfg: ModelConfig, env: Env, *, prompt_len: int = 0,
+                           sample: bool = False):
+    """Contiguous-cache (slot pool) decode with the sample step fused on
+    device: (next_tokens [T] int32, new_caches); logits never round-trip.
+
+    sample=False is the pure-argmax variant — identical math to the
+    pre-v2 step, and what an all-greedy batch runs (no mask/Gumbel work on
+    the hot path). sample=True routes through make_sample_fn; greedy rows
+    inside a sampling batch still lower to argmax exactly.
+    """
+    V = cfg.vocab_size
+    sampler = make_sample_fn(cfg, prompt_len) if sample else None
+
+    def step(params, caches, prev_tok, meta_i, meta_f):
+        tok = _select_tokens(prev_tok, meta_i)
         logits, new_caches, _ = Mo.forward(
             params, tok[:, None], cfg, env, mode="decode", caches=caches,
-            cur_len=meta[2])
-        nxt = jnp.argmax(logits[:, 0, :V], axis=-1).astype(jnp.int32)
+            cur_len=meta_i[ROW_CUR_LEN])
+        lg = logits[:, 0, :]
+        if sampler is None:
+            nxt = jnp.argmax(lg[:, :V], axis=-1).astype(jnp.int32)
+        else:
+            nxt = sampler(lg, meta_i, meta_f)
         return nxt, new_caches
 
     return step
 
 
-def make_paged_decode_step(cfg: ModelConfig, env: Env):
+def make_paged_decode_step(cfg: ModelConfig, env: Env, *, prompt_len: int = 0,
+                           sample: bool = False):
     """Fused decode step over a paged (block-table) KV cache.
 
     Rows are decode slots plus optional piggybacked prefill lanes: every
@@ -105,17 +172,22 @@ def make_paged_decode_step(cfg: ModelConfig, env: Env):
     cur_len and attends at its own depth, so a prompt chunk (consecutive
     cur_len values sharing one table) prefills *inside* the running decode
     batch — each chunk row sees exactly the keys at positions <= its own.
-    meta is the packed [3,T] int32 (tok_src, fresh_tok, cur_len). Argmax
-    is fused; the [T] token vector is the only per-step download.
+    The sample/argmax step is fused (see make_fused_decode_step); the [T]
+    token vector is the only per-step download.
     """
     V = cfg.vocab_size
+    sampler = make_sample_fn(cfg, prompt_len) if sample else None
 
-    def step(params, caches, prev_tok, meta, tables):
-        tok = _select_tokens(prev_tok, meta)
+    def step(params, caches, prev_tok, meta_i, meta_f, tables):
+        tok = _select_tokens(prev_tok, meta_i)
         logits, new_caches, _ = Mo.forward(
             params, tok[:, None], cfg, env, mode="decode", caches=caches,
-            cur_len=meta[2], block_tables=tables)
-        nxt = jnp.argmax(logits[:, 0, :V], axis=-1).astype(jnp.int32)
+            cur_len=meta_i[ROW_CUR_LEN], block_tables=tables)
+        lg = logits[:, 0, :]
+        if sampler is None:
+            nxt = jnp.argmax(lg[:, :V], axis=-1).astype(jnp.int32)
+        else:
+            nxt = sampler(lg, meta_i, meta_f)
         return nxt, new_caches
 
     return step

@@ -1,19 +1,30 @@
-"""Continuous-batching serving subsystem.
+"""Continuous-batching serving subsystem (API v2).
 
-request -> RequestQueue -> ServingEngine (paged BlockManager KV + fused
-decode step with piggybacked prefill lanes; SlotPool kept as baseline)
--> ServingMetrics -> registry KV -> AutoScaler policies -> cluster size.
+Request (with a SamplingParams contract) -> RequestQueue -> ServingEngine
+(SchedulerPolicy picks admission order + preemption verdicts; a KVBackend
+— paged BlockManager by default, SlotPool baseline — owns the cache and
+the fused decode/sample step) -> ServingMetrics -> registry KV ->
+AutoScaler policies -> cluster size.
 
-See docs/serving.md for the full loop and the one-command demo.
+See docs/serving.md for the full loop, the one-command demo, and the
+migration table from the PR-2 surface.
 """
+from repro.serve.blocks import BlockManager  # noqa: F401
+from repro.serve.kv import KVBackend, make_kv_backend  # noqa: F401
 from repro.serve.metrics import ServingMetrics, percentile  # noqa: F401
+from repro.serve.policy import (  # noqa: F401
+    EDFPolicy,
+    FIFOPolicy,
+    SchedulerPolicy,
+    make_scheduler_policy,
+)
 from repro.serve.request import (  # noqa: F401
     Request,
     RequestQueue,
     burst_trace,
     poisson_trace,
 )
-from repro.serve.blocks import BlockManager  # noqa: F401
+from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     SERVE_PLAN,
     ServingEngine,

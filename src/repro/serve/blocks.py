@@ -27,13 +27,14 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
 
@@ -61,6 +62,8 @@ class PagedSlot:
 
 
 class BlockManager:
+    kind = "paged"
+
     def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
                  prompt_len: int, max_gen: int, block_size: int = 16,
                  num_blocks: Optional[int] = None):
@@ -83,6 +86,11 @@ class BlockManager:
         self.has_local = "local" in kinds
         # recurrent state rows pin the decode batch to slot == row
         self.has_state = bool(kinds & set(RECURRENT_KINDS))
+        # recurrent state can't parallelize a prompt chunk inside one step,
+        # and window-ring writes would wrap onto each other within a chunk
+        # (rows p and p+w share ring slot p%w); both admit via batch-1
+        # prefill + paged insert instead
+        self.chunk_prefill_ok = not self.has_state and not self.has_local
         max_kv = prompt_len + max_gen  # last written pos < prompt+gen-1
         bs = block_size
         self.mb_global = _ceil_div(max_kv, bs) if self.has_global else 0
@@ -104,11 +112,23 @@ class BlockManager:
         self._slots: List[Optional[PagedSlot]] = [None] * num_slots
         self._free_slots: Deque[int] = deque(range(num_slots))
         self._free_blocks: Deque[int] = deque(range(1, self.num_blocks))
+        # mirror of _free_blocks for the O(1) double-free guard: a block id
+        # returned twice would sit in the free list twice and get handed to
+        # two requests, silently cross-writing their KV
+        self._free_block_set: Set[int] = set(self._free_blocks)
         self._reserved_total = 0  # blocks promised to admitted requests
         self._insert = jax.jit(Mo.make_paged_insert(cfg, bs),
                                donate_argnums=(0,))
         self._evict = jax.jit(Mo.make_paged_evict(cfg), donate_argnums=(0,))
         self._read = jax.jit(Mo.make_paged_read(cfg))
+        # two fused-step variants: an all-greedy batch runs the pure-argmax
+        # step (no mask/Gumbel work); any sampling row selects the sampler
+        self._decode = {
+            s: jax.jit(St.make_paged_decode_step(cfg, env,
+                                                 prompt_len=prompt_len,
+                                                 sample=s),
+                       donate_argnums=(1,))
+            for s in (False, True)}
 
     # -- sizing / admission math -------------------------------------------
     def blocks_for(self, gen_len: int) -> int:
@@ -131,6 +151,16 @@ class BlockManager:
     def can_admit(self, gen_len: int) -> bool:
         return (bool(self._free_slots)
                 and self.blocks_for(gen_len) <= self.free_unreserved)
+
+    def preempt_frees(self, slot: int, gen_len: int) -> bool:
+        """Evicting `slot` frees its full worst-case commitment (allocated
+        + unspent reservation stay equal to blocks_for(its gen_len) by
+        construction) plus the slot itself — admit iff that covers the
+        candidate's reservation."""
+        s = self._slots[slot]
+        assert s is not None
+        freed = s.alloc_g + s.alloc_l + s.reserved
+        return self.blocks_for(gen_len) <= self.free_unreserved + freed
 
     # -- occupancy ----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -187,6 +217,7 @@ class BlockManager:
     def _alloc(self, slot: int, local: bool) -> None:
         s = self._slots[slot]
         bid = self._free_blocks.popleft()
+        self._free_block_set.discard(bid)
         tbl = self.table_local if local else self.table
         if local:
             tbl[slot, s.alloc_l] = bid
@@ -251,6 +282,24 @@ class BlockManager:
         s.tokens_done = 1
         return s
 
+    # -- the fused step -------------------------------------------------------
+    def decode(self, params, prev_tok, meta_i, meta_f, row_slots, *,
+               sample: bool):
+        """One fused step over the block pool. row_slots[t] names the slot
+        whose tables row t addresses (decode rows: the slot itself; prefill
+        lane rows: the admitting slot; -1: masked row -> null tables)."""
+        rs = np.asarray(row_slots)
+        safe = np.clip(rs, 0, self.num_slots - 1)
+        live = (rs >= 0)[:, None]
+        tables = {"global": jnp.asarray(np.where(live, self.table[safe], 0))}
+        if self.has_local:
+            tables["local"] = jnp.asarray(
+                np.where(live, self.table_local[safe], 0))
+        nxt, self.caches = self._decode[sample](
+            params, self.caches, prev_tok, jnp.asarray(meta_i),
+            jnp.asarray(meta_f), tables)
+        return nxt
+
     # -- decode-batch views -------------------------------------------------
     def advance(self, slot: int) -> PagedSlot:
         s = self._slots[slot]
@@ -267,22 +316,48 @@ class BlockManager:
     # -- retirement ---------------------------------------------------------
     def evict(self, slot: int, *, zero: bool = False) -> None:
         """Free `slot`: return its blocks to the free list and drop any
-        unspent reservation. Zeroing is hygiene only (tests)."""
+        unspent reservation. Zeroing is hygiene only (tests).
+
+        Double frees are hard errors, not silent corruption: evicting an
+        already-free slot raises, and a block id that is somehow already in
+        the free list (an aliased table — the failure mode prefix-sharing
+        refcounts must never hit) raises before the list is poisoned."""
         s = self._slots[slot]
-        assert s is not None
+        if s is None:
+            raise RuntimeError(
+                f"double free: slot {slot} is already free (its block "
+                "table was returned to the pool once)")
         if zero:
             tg, tl = self._tables_of(slot)
             self.caches = self._evict(self.caches,
                                       jnp.asarray(slot, jnp.int32), tg, tl)
-        for j in range(s.alloc_g):
-            self._free_blocks.append(int(self.table[slot, j]))
-        for j in range(s.alloc_l):
-            self._free_blocks.append(int(self.table_local[slot, j]))
+        freeing = [int(self.table[slot, j]) for j in range(s.alloc_g)]
+        freeing += [int(self.table_local[slot, j]) for j in range(s.alloc_l)]
+        dup = [b for b in freeing if b in self._free_block_set]
+        if len(set(freeing)) != len(freeing):  # within-table alias
+            dup += [b for b in set(freeing) if freeing.count(b) > 1]
+        if dup:
+            raise RuntimeError(
+                f"double free: slot {slot} block table names free block(s) "
+                f"{sorted(set(dup))} — the free list would hand them to "
+                "two requests")
+        self._free_blocks.extend(freeing)
+        self._free_block_set.update(freeing)
         self.table[slot, :] = 0
         self.table_local[slot, :] = 0
         self._reserved_total -= s.reserved
         self._slots[slot] = None
         self._free_slots.append(slot)
+
+    # -- reporting ----------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        """Backend load signals merged into the engine snapshot: committed
+        blocks are the signal that actually gates admission."""
+        return {"kv_block_occupancy": self.block_occupancy}
+
+    def describe(self) -> str:
+        return (f"paged KV: {self.num_blocks} blocks x "
+                f"{self.block_size} tokens")
 
     # -- introspection (tests) ----------------------------------------------
     def read_slot(self, slot: int) -> Pytree:

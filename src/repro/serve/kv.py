@@ -1,0 +1,107 @@
+"""KVBackend — the one KV-cache contract the serving plane talks to.
+
+PR-2 left the engine, the CLI, and the metrics path branching on
+`kv == "slot" | "paged"` in a dozen places; every planned feature (prefix
+sharing, swap-out preemption, multi-replica pools) would have multiplied
+those branches. v2 collapses them behind this protocol: a backend owns its
+device cache pytree, its bookkeeping, *and its fused decode step* —
+`ServingEngine` schedules rows and never learns what a block table is.
+
+Lifecycle of one request through a backend:
+
+    can_admit(gen_len)      reservation check (admission-time backpressure)
+    admit(rid, gen_len)     bind a slot + reserve worst-case capacity
+    insert(slot, …)         classic path: scatter a batch-1 prefill cache
+      — or —
+    ensure(slot, pos)       chunked path: grow capacity to cover position
+    finish_prefill(slot)    chunked path: the slot joins the decode batch
+    decode(params, …)       one fused step over the whole row set
+    advance(slot)           host bookkeeping per emitted token
+    finished(slot)          declared gen budget consumed?
+    evict(slot)             return capacity (double-free is an error)
+
+`metrics()` returns the backend-specific load signals to merge into the
+engine snapshot (e.g. kv_block_occupancy) — the metrics path stops caring
+which cache kind produced them, and `describe()` is the one-line banner
+the CLI prints. SlotPool (serve/slots.py) and BlockManager
+(serve/blocks.py) are the two implementations; make_kv_backend is the
+only place a cache-kind string is interpreted.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.env import Env
+
+Pytree = Any
+
+
+@runtime_checkable
+class KVBackend(Protocol):
+    kind: str                 # registry name ("slot", "paged", ...)
+    num_slots: int
+    caches: Pytree            # the device cache pytree the backend owns
+    chunk_prefill_ok: bool    # can prompts stream through decode lane rows?
+
+    # -- admission / reservation -------------------------------------------
+    def can_admit(self, gen_len: int) -> bool: ...
+    def preempt_frees(self, slot: int, gen_len: int) -> bool:
+        """Would evicting `slot` make can_admit(gen_len) true? The engine
+        asks before acting on a preemption verdict — an eviction that
+        cannot make room would cost the victim its progress for nothing."""
+        ...
+    def admit(self, rid: int, gen_len: int, *,
+              prefilling: bool = False) -> int: ...
+    def insert(self, slot: int, rid: int, prefill_caches: Pytree,
+               gen_len: int) -> None: ...
+    def ensure(self, slot: int, pos: int) -> None: ...
+    def finish_prefill(self, slot: int) -> Any: ...
+
+    # -- the fused step ----------------------------------------------------
+    def decode(self, params: Pytree, prev_tok, meta_i: np.ndarray,
+               meta_f: np.ndarray, row_slots: np.ndarray, *,
+               sample: bool):
+        """Run one fused decode step over T rows. meta_i/meta_f are the
+        packed [META_I_ROWS,T] / [META_F_ROWS,T] arrays (launch/steps.py);
+        row_slots[t] names the slot whose KV row t addresses (-1: masked).
+        Returns the [T] int32 device token vector; the backend swaps its
+        own (donated) cache pytree."""
+        ...
+
+    # -- per-token bookkeeping / retirement --------------------------------
+    def advance(self, slot: int) -> Any: ...
+    def finished(self, slot: int) -> bool: ...
+    def evict(self, slot: int, *, zero: bool = False) -> None: ...
+
+    # -- introspection ------------------------------------------------------
+    def info(self, slot: int) -> Any: ...
+    def rid_of(self, slot: int) -> int: ...
+    def active_slots(self) -> List[int]: ...
+    def occupied_slots(self) -> List[int]: ...
+    @property
+    def free_slot_count(self) -> int: ...
+    @property
+    def occupancy(self) -> float: ...
+    def metrics(self) -> Dict[str, float]: ...
+    def describe(self) -> str: ...
+
+
+def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
+                    prompt_len: int, max_gen: int, block_size: int = 16,
+                    kv_blocks: Optional[int] = None) -> KVBackend:
+    """The one cache-kind dispatch in the serving plane."""
+    from repro.serve.blocks import BlockManager
+    from repro.serve.slots import SlotPool
+
+    if kind == "paged":
+        return BlockManager(cfg, env, num_slots=num_slots,
+                            prompt_len=prompt_len, max_gen=max_gen,
+                            block_size=block_size, num_blocks=kv_blocks)
+    if kind == "slot":
+        return SlotPool(cfg, env, num_slots=num_slots, prompt_len=prompt_len,
+                        max_gen=max_gen)
+    raise ValueError(f"unknown KV backend {kind!r} "
+                     "(expected 'paged' or 'slot')")

@@ -9,8 +9,13 @@ flat metric names AutoScaler.read_metrics() aggregates:
     latency_p95_ms    (arrival -> last token, trailing window)
     ttft_p95_ms       time to first token percentile
     slot_occupancy    fraction of KV slots in use
-    kv_block_occupancy  paged KV only: fraction of the block pool committed
     deadline_misses   completed requests that blew their deadline (cumulative)
+    preemptions       restart-preemptions issued by the scheduler policy
+
+plus whatever extra load signals the KVBackend reports (the paged
+BlockManager adds kv_block_occupancy — committed blocks, the signal that
+actually gates admission; the metrics path itself never branches on the
+cache kind).
 
 NodeAgent.report_serving(snapshot()) writes each as metrics/<node>/<name> —
 the same KV path the straggler policy's step-time metrics use, so serving
@@ -19,7 +24,7 @@ load is just another signal the reconcile loop reads.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, Optional, Tuple
+from typing import Deque, Dict, Tuple
 
 import numpy as np
 
@@ -42,6 +47,7 @@ class ServingMetrics:
         self.total_tokens = 0
         self.completed = 0
         self.deadline_misses = 0
+        self.preemptions = 0
 
     # -- recording ----------------------------------------------------------
     def record_tokens(self, now: float, n: int) -> None:
@@ -58,6 +64,9 @@ class ServingMetrics:
         if req.missed_deadline:
             self.deadline_misses += 1
 
+    def record_preempt(self, now: float) -> None:
+        self.preemptions += 1
+
     def _trim(self, now: float) -> None:
         horizon = now - self.window_s
         for dq in (self._tokens, self._latency, self._ttft):
@@ -67,12 +76,14 @@ class ServingMetrics:
     # -- snapshot -----------------------------------------------------------
     def snapshot(self, now: float, *, queue_depth: int,
                  slot_occupancy: float,
-                 kv_block_occupancy: Optional[float] = None
-                 ) -> Dict[str, float]:
+                 **backend_metrics: float) -> Dict[str, float]:
         """Latency keys are OMITTED until a request completes (resp. emits a
         first token) inside the window — publishing 0ms for "no data" would
         read as excellent latency and make LatencyPolicy scale down
-        mid-flight (its no-data branch keys off the absence)."""
+        mid-flight (its no-data branch keys off the absence).
+
+        **backend_metrics passes the KVBackend's own load signals through
+        verbatim (ServingEngine.snapshot feeds pool.metrics() here)."""
         self._trim(now)
         toks = sum(n for _, n in self._tokens)
         span = self.window_s
@@ -87,11 +98,10 @@ class ServingMetrics:
             "tokens_per_s": toks / span if toks else 0.0,
             "slot_occupancy": slot_occupancy,
             "deadline_misses": float(self.deadline_misses),
+            "preemptions": float(self.preemptions),
         }
-        if kv_block_occupancy is not None:
-            # paged KV: fraction of the block pool committed (allocated +
-            # reserved) — the signal that actually gates admission
-            out["kv_block_occupancy"] = kv_block_occupancy
+        for name, val in backend_metrics.items():
+            out[name] = float(val)
         lats = [s for _, s in self._latency]
         ttfts = [s for _, s in self._ttft]
         if lats:

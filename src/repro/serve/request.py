@@ -2,19 +2,24 @@
 
 A Request is one generation job: a fixed-length prompt (the engine jits one
 prefill shape — variable prompts are padded by the trace generator), a
-per-request generation length, an arrival time on the serving clock, and an
-optional latency deadline. The RequestQueue gates admission on arrival time
-so a whole trace can be loaded up front and replayed deterministically under
-a ManualClock.
+per-request generation length, an arrival time on the serving clock, an
+optional latency deadline, and a SamplingParams contract (serve/sampling.py)
+that shapes its token distribution. The RequestQueue gates admission on
+arrival time so a whole trace can be loaded up front and replayed
+deterministically under a ManualClock; a SchedulerPolicy (serve/policy.py)
+decides *which* arrived request admits next.
 """
 from __future__ import annotations
 
 import math
 from collections import deque
 from dataclasses import dataclass, field
+from itertools import takewhile
 from typing import Deque, List, Optional, Sequence
 
 import numpy as np
+
+from repro.serve.sampling import SamplingParams
 
 
 @dataclass
@@ -24,6 +29,7 @@ class Request:
     gen_len: int
     arrival_t: float = 0.0
     deadline_s: float = math.inf  # budget from arrival to completion
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     # -- filled in by the engine ------------------------------------------
     t_admit: Optional[float] = None
     t_first_token: Optional[float] = None
@@ -33,6 +39,11 @@ class Request:
     @property
     def done(self) -> bool:
         return self.t_done is not None
+
+    @property
+    def abs_deadline(self) -> float:
+        """Completion deadline on the serving clock (EDF sorts by this)."""
+        return self.arrival_t + self.deadline_s
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -47,11 +58,15 @@ class Request:
 
 
 class RequestQueue:
-    """Arrival-ordered queue with time-gated admission.
+    """Arrival-sorted queue with time-gated admission.
 
-    push() keeps the pending deque sorted by arrival time (traces are
-    generated sorted; online pushes append). pop_ready(now) releases the
-    next request whose arrival time has passed.
+    push() keeps the deque sorted by arrival time: the common case (traces
+    and re-pushes arriving in order) is an O(1) append; an out-of-order
+    online push — a late injector, a preempted request re-queued with its
+    original arrival time — inserts at its sorted position (ties keep push
+    order), so it can never hide an already-due request behind a future
+    one. pop_ready(now)/ready(now) release only requests whose arrival
+    time has passed, from the front in O(1).
     """
 
     def __init__(self, requests: Optional[Sequence[Request]] = None):
@@ -59,15 +74,30 @@ class RequestQueue:
             sorted(requests or [], key=lambda r: r.arrival_t))
 
     def push(self, req: Request) -> None:
-        if self._pending and req.arrival_t < self._pending[-1].arrival_t:
-            items = sorted([*self._pending, req], key=lambda r: r.arrival_t)
-            self._pending = deque(items)
-        else:
-            self._pending.append(req)
+        dq = self._pending
+        if not dq or req.arrival_t >= dq[-1].arrival_t:
+            dq.append(req)
+            return
+        # out-of-order: scan from the tail (the insertion point is near it
+        # for slightly-late arrivals; preempted re-pushes pay O(depth))
+        idx = len(dq) - 1
+        while idx > 0 and dq[idx - 1].arrival_t > req.arrival_t:
+            idx -= 1
+        dq.insert(idx, req)
+
+    def ready(self, now: float) -> List[Request]:
+        """All arrived-but-unadmitted requests, in arrival order — the
+        candidate set a SchedulerPolicy picks from."""
+        return list(takewhile(lambda r: r.arrival_t <= now, self._pending))
+
+    def remove(self, req: Request) -> None:
+        """Commit an admission the policy selected out of ready()."""
+        self._pending.remove(req)
 
     def peek_ready(self, now: float) -> Optional[Request]:
-        """Next admissible request without popping it — admission control
-        must see gen_len (block reservation) before committing."""
+        """Next admissible request in arrival order without popping it —
+        admission control must see gen_len (block reservation) before
+        committing."""
         if self._pending and self._pending[0].arrival_t <= now:
             return self._pending[0]
         return None
@@ -79,7 +109,8 @@ class RequestQueue:
 
     def depth(self, now: float) -> int:
         """Requests that have arrived but not been admitted."""
-        return sum(1 for r in self._pending if r.arrival_t <= now)
+        return sum(1 for _ in takewhile(lambda r: r.arrival_t <= now,
+                                        self._pending))
 
     def __len__(self) -> int:  # total pending, arrived or not
         return len(self._pending)
@@ -89,16 +120,19 @@ def poisson_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
                   vocab_size: int, gen_len: int = 16,
                   gen_len_max: Optional[int] = None,
                   deadline_s: float = math.inf,
+                  sampling: Optional[SamplingParams] = None,
                   seed: int = 0) -> List[Request]:
     """Poisson arrivals (exponential inter-arrival at `rate_rps`) with random
     prompts and uniform gen lengths in [gen_len, gen_len_max]. Deterministic
-    for a given seed."""
+    for a given seed. `sampling` applies to every request (per-request PRNG
+    seeds are derived as sampling.seed + rid so requests don't correlate)."""
     rng = np.random.default_rng(seed)
     gmax = gen_len if gen_len_max is None else gen_len_max
     t = 0.0
     out = []
     for rid in range(n_requests):
         t += float(rng.exponential(1.0 / rate_rps))
+        sp = SamplingParams() if sampling is None else sampling.derive(rid)
         out.append(Request(
             rid=rid,
             prompt=rng.integers(0, vocab_size, size=(prompt_len,),
@@ -106,18 +140,24 @@ def poisson_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
             gen_len=int(rng.integers(gen_len, gmax + 1)),
             arrival_t=t,
             deadline_s=deadline_s,
+            sampling=sp,
         ))
     return out
 
 
 def burst_trace(n_requests: int, *, prompt_len: int, vocab_size: int,
                 gen_len: int = 16, at: float = 0.0,
-                deadline_s: float = math.inf, seed: int = 0) -> List[Request]:
+                deadline_s: float = math.inf,
+                sampling: Optional[SamplingParams] = None,
+                seed: int = 0) -> List[Request]:
     """All requests arrive at once — the worst-case queue spike the
     autoscaler must absorb."""
     rng = np.random.default_rng(seed)
+    sp = lambda rid: (SamplingParams() if sampling is None
+                      else sampling.derive(rid))
     return [Request(rid=rid,
                     prompt=rng.integers(0, vocab_size, size=(prompt_len,),
                                         dtype=np.int32),
-                    gen_len=gen_len, arrival_t=at, deadline_s=deadline_s)
+                    gen_len=gen_len, arrival_t=at, deadline_s=deadline_s,
+                    sampling=sp(rid))
             for rid in range(n_requests)]

@@ -1,29 +1,38 @@
-"""ServingEngine — continuous batching over a paged (block-table) KV cache.
+"""ServingEngine — continuous batching over a pluggable KVBackend.
 
 One scheduler iteration (step()):
 
-  1. admit: pop arrivals while a slot is free AND the block pool can
-     reserve the request's worst-case blocks (block exhaustion = queue
-     backpressure, not an OOM mid-decode). On attention-only archs the
-     prompt is *not* prefilled in a separate batch-1 call: it streams
-     through `prefill_chunk` piggybacked lane rows of the regular decode
-     step (chunked prefill), so admission never stalls the pool and there
-     is no grow_caches/full-cache copy. Recurrent-state archs (rglru/rwkv
-     blocks) keep the classic batch-1 prefill + paged insert.
-  2. decode: one fused jitted step over decode rows (+ lane rows): every
-     row writes K/V into the physical block its table names and attends at
-     its own depth; argmax happens on device and the [T] int32 token
-     vector is the only per-step host transfer (logits and last-token
-     state never round-trip).
-  3. retire: finished slots return their blocks to the O(1) free list.
+  1. admit: the SchedulerPolicy (serve/policy.py) picks which arrived
+     request admits next (FIFO, EDF, ...) while the KVBackend can reserve
+     its worst case (exhaustion = queue backpressure, not an OOM
+     mid-decode). If the backend is full, the policy may issue a
+     preemption verdict: the engine evicts the victim, clears its
+     progress, and re-queues it at its original arrival time —
+     restart-preemption is safe because sampling is position-keyed
+     (serve/sampling.py), so the victim regenerates identical tokens.
+     On chunk-capable backends the prompt is *not* prefilled in a separate
+     batch-1 call: it streams through `prefill_chunk` piggybacked lane
+     rows of the regular decode step (chunked prefill). Other admissions
+     take classic batch-1 prefill + insert.
+  2. decode: one fused jitted step over decode rows (+ lane rows), run by
+     the backend (it owns the cache layout and the step function): every
+     row writes K/V where its backend says and attends at its own depth;
+     the sample step (per-request temperature / top-k / top-p, seeded
+     per-position PRNG; temperature=0 = argmax) happens on device and the
+     [T] int32 token vector is the only per-step host download.
+  3. retire: finished slots (gen budget spent, or a stop token emitted)
+     return their capacity to the backend.
 
 The engine never re-jits per admission; step shapes are pinned to
 (num_slots,) and (num_slots + prefill_chunk,) rows. Greedy decoding keeps
-output token-for-token equal to the one-shot serve_batch baseline and to
-the PR-1 slot pool — tests/test_serving.py holds it to both.
+output token-for-token equal to the one-shot serve_batch baseline on every
+backend; seeded sampling is reproducible and lane-placement-invariant —
+tests/test_serving.py holds all of it.
 
-kv="slot" keeps the PR-1 slot-reserved pool (worst-case prompt_len+max_gen
-KV per slot) as the measured baseline for benchmarks and as a fallback.
+The engine talks to the cache exclusively through the KVBackend protocol
+(serve/kv.py) — it does not know whether KV lives in reserved slots or
+paged blocks. kv="slot" keeps the PR-1 slot-reserved pool as the measured
+baseline; kv="paged" (default) is the BlockManager.
 
 The clock is injected: tests and the simulated cluster drive a ManualClock
 (deterministic arrival replay); nothing here sleeps.
@@ -41,10 +50,11 @@ from repro.configs.base import ModelConfig, ParallelPlan
 from repro.core.clock import Clock, ManualClock
 from repro.launch import steps as St
 from repro.models.env import Env
-from repro.serve.blocks import RECURRENT_KINDS, BlockManager
+from repro.serve.kv import KVBackend, make_kv_backend
 from repro.serve.metrics import ServingMetrics
+from repro.serve.policy import FIFOPolicy, SchedulerPolicy
 from repro.serve.request import Request, RequestQueue
-from repro.serve.slots import SlotPool
+from repro.serve.sampling import effective_gen_len
 
 Pytree = Any
 
@@ -81,58 +91,49 @@ class _Lane:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, *,
                  num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
-                 kv: str = "paged", block_size: int = 16,
+                 kv="paged", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 policy: Optional[SchedulerPolicy] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
                  metrics_window_s: float = 10.0):
-        assert kv in ("paged", "slot"), kv
         self.cfg = cfg
         self.params = params
-        self.kv = kv
         self.prompt_len = prompt_len
         self.max_gen = max_gen
         self.clock = clock or ManualClock()
+        self.policy: SchedulerPolicy = policy or FIFOPolicy()
         env = Env(mesh=mesh, plan=plan or SERVE_PLAN)
         self.env = env
-        if kv == "paged":
-            self.pool = BlockManager(cfg, env, num_slots=num_slots,
-                                     prompt_len=prompt_len, max_gen=max_gen,
-                                     block_size=block_size,
-                                     num_blocks=kv_blocks)
-            kinds = set(cfg.block_pattern) | set(cfg.pattern_tail)
-            # recurrent state rows can't parallelize a prompt chunk inside
-            # one step, and window-ring writes would wrap onto each other
-            # within a chunk (rows p and p+w share ring slot p%w); both
-            # admit via batch-1 prefill + paged insert instead
-            chunk_ok = not (kinds & set(RECURRENT_KINDS)) \
-                and "local" not in kinds
-            if prefill_chunk is None:
-                prefill_chunk = prompt_len if chunk_ok else 0
-            if prefill_chunk and not chunk_ok:
-                raise ValueError(
-                    f"{cfg.name}: chunked prefill needs attention-only "
-                    "blocks without sliding windows (recurrent state is "
-                    "sequential over the prompt; ring writes wrap within "
-                    "a chunk)")
-            self._decode = jax.jit(St.make_paged_decode_step(cfg, env),
-                                   donate_argnums=(1,))
-        else:
-            self.pool = SlotPool(cfg, env, num_slots=num_slots,
-                                 prompt_len=prompt_len, max_gen=max_gen)
-            prefill_chunk = 0
-            self._decode = jax.jit(St.make_fused_decode_step(cfg, env),
-                                   donate_argnums=(1,))
+        if isinstance(kv, str):
+            self.pool: KVBackend = make_kv_backend(
+                kv, cfg, env, num_slots=num_slots, prompt_len=prompt_len,
+                max_gen=max_gen, block_size=block_size, kv_blocks=kv_blocks)
+        else:  # a pre-built backend (custom implementations plug in here)
+            self.pool = kv
+            num_slots = self.pool.num_slots
+        self.kv = self.pool.kind
+        if prefill_chunk is None:
+            prefill_chunk = prompt_len if self.pool.chunk_prefill_ok else 0
+        if prefill_chunk and not self.pool.chunk_prefill_ok:
+            raise ValueError(
+                f"{cfg.name}: chunked prefill is not supported by the "
+                f"'{self.pool.kind}' backend for this arch (recurrent "
+                "state is sequential over the prompt; ring writes wrap "
+                "within a chunk; the slot pool has no per-row tables)")
         self.prefill_chunk = int(prefill_chunk)
         self.queue = RequestQueue()
         self.metrics = ServingMetrics(window_s=metrics_window_s)
         self._prefill = jax.jit(St.make_prefill_step(cfg, env))
+        # classic admissions sample their first token from the prefill
+        # logits with the same fused sample math (position 0)
+        self._sample_first = jax.jit(St.make_sample_fn(cfg, prompt_len))
         self._lanes: List[_Lane] = []
-        # device [T] int32: last step's fused argmax. Seeded at num_slots so
-        # the step's (rows, prev-rows) shape pair cycles through its <= 4
-        # combinations deterministically — a two-request warm trace compiles
-        # them all (benchmarks warm exactly that way).
+        # device [T] int32: last step's fused sample/argmax. Seeded at
+        # num_slots so the step's (rows, prev-rows) shape pair cycles
+        # through its <= 4 combinations deterministically — a two-request
+        # warm trace compiles them all (benchmarks warm exactly that way).
         self._tok_prev = jnp.zeros((num_slots,), jnp.int32)
         self._row_src: Dict[int, int] = {}  # slot -> row in _tok_prev
         self._fresh: Dict[int, int] = {}  # slot -> host-known next token
@@ -157,6 +158,7 @@ class ServingEngine:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} != "
                     f"engine prompt_len {self.prompt_len} (pad the trace)")
+            r.gen_len = effective_gen_len(r.gen_len, r.sampling)
             if r.gen_len > self.max_gen:
                 raise ValueError(f"request {r.rid}: gen_len {r.gen_len} > "
                                  f"engine max_gen {self.max_gen}")
@@ -164,9 +166,9 @@ class ServingEngine:
 
     # -- scheduler iteration ------------------------------------------------------
     def step(self) -> Dict[str, float]:
-        """Admit arrivals, run one fused decode step over the mixed batch
-        (+ prefill lanes), retire finished requests. Returns the metrics
-        snapshot (what a node would publish)."""
+        """Admit arrivals (policy order), run one fused decode step over
+        the mixed batch (+ prefill lanes), retire finished requests.
+        Returns the metrics snapshot (what a node would publish)."""
         now = self.clock.now()
         self._admit_ready(now)
 
@@ -183,48 +185,40 @@ class ServingEngine:
             budget -= lane.take
         lane_rows = self.prefill_chunk if lanes else 0
         T = N + lane_rows
-        meta = np.zeros((3, T), np.int32)  # tok_src / fresh / cur_len
-        meta[0, :] = -1
-        paged = self.kv == "paged"
-        if paged:
-            tbl_g = np.zeros((T, self.pool.table.shape[1]), np.int32)
-            tbl_l = np.zeros((T, self.pool.table_local.shape[1]), np.int32)
+        meta_i = np.zeros((St.META_I_ROWS, T), np.int32)
+        meta_f = np.zeros((St.META_F_ROWS, T), np.float32)
+        meta_i[St.ROW_TOK_SRC, :] = -1
+        row_slots = np.full((T,), -1, np.int32)
+        sample = False
         for slot in active:
             info = self.pool.info(slot)
-            meta[2, slot] = info.cur_len
-            if paged:
-                self.pool.ensure(slot, info.cur_len)
-                tbl_g[slot] = self.pool.table[slot]
-                tbl_l[slot] = self.pool.table_local[slot]
+            req = self._inflight[info.rid]
+            self.pool.ensure(slot, info.cur_len)
+            row_slots[slot] = slot
+            meta_i[St.ROW_CUR_LEN, slot] = info.cur_len
+            sample |= self._fill_sampling(meta_i, meta_f, slot, req)
             if slot in self._fresh:
-                meta[0, slot] = -1
-                meta[1, slot] = self._fresh.pop(slot)
+                meta_i[St.ROW_TOK_SRC, slot] = -1
+                meta_i[St.ROW_FRESH, slot] = self._fresh.pop(slot)
             else:
-                meta[0, slot] = self._row_src.pop(slot, slot)
+                meta_i[St.ROW_TOK_SRC, slot] = self._row_src.pop(slot, slot)
         row = N
         for lane in lanes:
             if lane.take <= 0:
                 continue
             self.pool.ensure(lane.slot, lane.pos + lane.take - 1)
             sl = slice(row, row + lane.take)
-            meta[1, sl] = lane.req.prompt[lane.pos:lane.pos + lane.take]
-            meta[2, sl] = np.arange(lane.pos, lane.pos + lane.take)
-            tbl_g[sl] = self.pool.table[lane.slot]
-            tbl_l[sl] = self.pool.table_local[lane.slot]
+            meta_i[St.ROW_FRESH, sl] = \
+                lane.req.prompt[lane.pos:lane.pos + lane.take]
+            meta_i[St.ROW_CUR_LEN, sl] = \
+                np.arange(lane.pos, lane.pos + lane.take)
+            row_slots[sl] = lane.slot
+            sample |= self._fill_sampling(meta_i, meta_f, sl, lane.req)
             row += lane.take
             lane.last_row = row - 1
 
-        tables = {"global": jnp.asarray(tbl_g)} if paged else None
-        if paged and self.pool.has_local:
-            tables["local"] = jnp.asarray(tbl_l)
-        prev = self._tok_prev
-        if paged:
-            nxt_dev, self.pool.caches = self._decode(
-                self.params, self.pool.caches, prev, jnp.asarray(meta),
-                tables)
-        else:
-            nxt_dev, self.pool.caches = self._decode(
-                self.params, self.pool.caches, prev, jnp.asarray(meta))
+        nxt_dev = self.pool.decode(self.params, self._tok_prev, meta_i,
+                                   meta_f, row_slots, sample=sample)
         self._tok_prev = nxt_dev
         nxt = np.asarray(nxt_dev)  # the one host transfer per step
         self.decode_steps += 1
@@ -233,9 +227,10 @@ class ServingEngine:
         for slot in active:
             info = self.pool.advance(slot)
             req = self._inflight[info.rid]
-            req.tokens.append(int(nxt[slot]))
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
             emitted += 1
-            if self.pool.finished(slot):
+            if self.pool.finished(slot) or tok in req.sampling.stop_set:
                 self._retire(slot, now)
         still_open: List[_Lane] = []
         for lane in lanes:
@@ -247,66 +242,133 @@ class ServingEngine:
             self.pool.finish_prefill(slot)
             req = lane.req
             req.t_first_token = now
-            req.tokens.append(int(nxt[lane.last_row]))
+            tok = int(nxt[lane.last_row])
+            req.tokens.append(tok)
             self.metrics.record_first_token(req, now)
             # next step, this slot's input token comes from the lane row
             self._row_src[slot] = lane.last_row
             emitted += 1
-            if self.pool.finished(slot):
+            if self.pool.finished(slot) or tok in req.sampling.stop_set:
                 self._retire(slot, now)
         self._lanes = still_open
         if emitted:
             self.metrics.record_tokens(now, emitted)
         return self.snapshot()
 
+    @staticmethod
+    def _fill_sampling(meta_i, meta_f, rows, req: Request) -> bool:
+        """Write one request's SamplingParams into its row(s); returns
+        whether the row actually samples (so an all-greedy batch can take
+        the pure-argmax step variant)."""
+        sp = req.sampling
+        meta_i[St.ROW_SEED, rows] = sp.seed
+        meta_i[St.ROW_TOP_K, rows] = sp.top_k
+        meta_f[St.ROW_TEMPERATURE, rows] = sp.temperature
+        meta_f[St.ROW_TOP_P, rows] = sp.top_p
+        return not sp.greedy
+
     # -- admission ----------------------------------------------------------------
+    def _running(self) -> List[Request]:
+        """Decoding (preemptible) requests, for the policy's verdict."""
+        return [self._inflight[self.pool.info(s).rid]
+                for s in self.pool.active_slots()]
+
     def _admit_ready(self, now: float) -> None:
-        if self.kv == "slot":
-            while self.pool.free_slot_count:
-                req = self.queue.pop_ready(now)
-                if req is None:
-                    break
-                self._admit_classic(self.pool.acquire_slot(), req, now)
-            return
-        if self.prefill_chunk:
-            # open lanes while the step's token budget can still reach a
-            # new prompt (bounds admitted-but-starved lanes to ~1)
-            while (sum(self.prompt_len - l.pos for l in self._lanes)
-                   < self.prefill_chunk):
-                req = self.queue.peek_ready(now)
-                if req is None or not self.pool.can_admit(req.gen_len):
-                    return  # block/slot exhaustion -> queue backpressure
-                self.queue.pop_ready(now)
-                slot = self.pool.admit(req.rid, req.gen_len, prefilling=True)
-                req.t_admit = now
-                self._inflight[req.rid] = req
-                self._lanes.append(_Lane(slot=slot, req=req))
-            return
+        preempted = False  # at most one restart per iteration (no thrash)
+        ready = None  # built lazily, reused across the loop (O(arrived)
+        # once per step, not per admission; invalidated when the queue
+        # changes underneath it — i.e. a preemption re-push)
         while True:
-            req = self.queue.peek_ready(now)
-            if req is None or not self.pool.can_admit(req.gen_len):
-                break
-            self.queue.pop_ready(now)
-            self._admit_classic(self.pool.admit(req.rid, req.gen_len), req,
-                                now)
+            if self.prefill_chunk:
+                # open lanes only while the step's token budget can still
+                # reach a new prompt (bounds admitted-but-starved lanes ~1)
+                if (sum(self.prompt_len - l.pos for l in self._lanes)
+                        >= self.prefill_chunk):
+                    return
+            if self.queue.peek_ready(now) is None:
+                return  # O(1) hot-path exit: nothing has arrived
+            if ready is None:
+                ready = self.queue.ready(now)
+            req = self.policy.select(ready, now)
+            if req is None:
+                return
+            if not self.pool.can_admit(req.gen_len):
+                victim = None if preempted else \
+                    self.policy.victim(self._running(), req, now)
+                if victim is None:
+                    return  # backend exhaustion -> queue backpressure
+                vslot = self._slot_of(victim)
+                if not self.pool.preempt_frees(vslot, req.gen_len):
+                    # eviction could not make room — don't cost the victim
+                    # its progress for nothing (and don't re-try a doomed
+                    # candidate against every runner, one per step)
+                    return
+                self._preempt(victim, vslot, now)
+                preempted = True
+                ready = None  # the victim re-joined the arrived set
+                if not self.pool.can_admit(req.gen_len):
+                    return  # preempt_frees promised room; belt and braces
+            self.queue.remove(req)
+            if ready is not None:
+                ready.remove(req)
+            req.t_admit = now
+            self._inflight[req.rid] = req
+            if self.prefill_chunk:
+                slot = self.pool.admit(req.rid, req.gen_len, prefilling=True)
+                self._lanes.append(_Lane(slot=slot, req=req))
+            else:
+                self._admit_classic(self.pool.admit(req.rid, req.gen_len),
+                                    req, now)
 
     def _admit_classic(self, slot: int, req: Request, now: float) -> None:
-        """Batch-1 prefill + cache insert (slot pool, and paged archs with
-        recurrent state). The first token is argmax'd from the prefill
-        logits and fed to the same step's decode via the fresh-token path."""
+        """Batch-1 prefill + cache insert (the non-chunked path). The first
+        token is sampled from the prefill logits at position 0 — greedy
+        requests take the plain argmax, bit-identical to the pre-v2 engine
+        — and fed to the same step's decode via the fresh-token path."""
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None]})
         self.pool.insert(slot, req.rid, caches, req.gen_len)
-        first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
-        req.t_admit = now
+        if req.sampling.greedy:
+            first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        else:
+            mi = np.zeros((St.META_I_ROWS, 1), np.int32)
+            mf = np.zeros((St.META_F_ROWS, 1), np.float32)
+            mi[St.ROW_CUR_LEN, 0] = self.prompt_len - 1  # -> position 0
+            self._fill_sampling(mi, mf, 0, req)
+            first = int(self._sample_first(logits, mi, mf)[0])
         req.t_first_token = now
         req.tokens.append(first)
         self._fresh[slot] = first
-        self._inflight[req.rid] = req
         self.metrics.record_first_token(req, now)
         self.metrics.record_tokens(now, 1)
-        if self.pool.finished(slot):  # gen_len == 1: prefill was the job
-            self._retire(slot, now)
+        if self.pool.finished(slot) or first in req.sampling.stop_set:
+            self._retire(slot, now)  # gen_len == 1 / instant stop token
+
+    def _slot_of(self, req: Request) -> int:
+        return next(s for s in self.pool.occupied_slots()
+                    if self.pool.rid_of(s) == req.rid)
+
+    def _preempt(self, victim: Request, slot: int, now: float) -> None:
+        """Restart-preemption: return the victim's KV capacity, clear its
+        progress, and re-queue it at its original arrival time. Safe
+        because sampling is position-keyed — on re-admission the victim
+        regenerates bit-identical tokens (greedy or seeded).
+
+        Metrics semantics: the victim's pre-preemption tokens stay in
+        tokens_per_s (the device really decoded them — that is the decode
+        throughput the autoscaler budgets), and the restart records a
+        second, longer TTFT sample alongside the first. Both read as load,
+        i.e. they bias the policies toward scaling up while preemptions
+        are happening — the conservative direction."""
+        self.pool.evict(slot)
+        self._row_src.pop(slot, None)
+        self._fresh.pop(slot, None)
+        del self._inflight[victim.rid]
+        victim.tokens.clear()
+        victim.t_admit = None
+        victim.t_first_token = None
+        self.queue.push(victim)
+        self.metrics.record_preempt(now)
 
     def _retire(self, slot: int, now: float) -> None:
         rid = self.pool.rid_of(slot)
@@ -321,12 +383,9 @@ class ServingEngine:
     # -- reporting ----------------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
         now = self.clock.now()
-        kwargs = {}
-        if self.kv == "paged":
-            kwargs["kv_block_occupancy"] = self.pool.block_occupancy
         return self.metrics.snapshot(now, queue_depth=self.queue.depth(now),
                                      slot_occupancy=self.pool.occupancy,
-                                     **kwargs)
+                                     **self.pool.metrics())
 
     def results(self) -> Dict[int, List[int]]:
         """rid -> generated tokens, for every completed request."""

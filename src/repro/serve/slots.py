@@ -1,4 +1,4 @@
-"""SlotPool — a fixed-capacity, slot-addressed KV-cache pool.
+"""SlotPool — a fixed-capacity, slot-addressed KV-cache backend.
 
 The pool owns one init_cache() pytree whose batch dim is the slot dim, plus
 host-side bookkeeping (which request occupies which slot, each slot's write
@@ -6,9 +6,17 @@ position). Inserting a prefilled request and stepping the mixed decode batch
 are both jitted once at pool shape — admission never re-compiles, which is
 what lets new requests join a running decode batch (continuous batching).
 
-All device work is functional: insert/evict return nothing but swap the
-pool's cache pytree; the engine owns the only reference (buffers are donated
-through the jitted ops, so a pool slot update does not copy the pool).
+This is the `kind="slot"` KVBackend (serve/kv.py): worst-case
+prompt_len+max_gen reservation per slot, kept as the measured baseline for
+the paged BlockManager and as a fallback. It cannot stream prompts through
+decode lane rows (chunk_prefill_ok=False — a contiguous cache has no
+per-row tables to alias a chunk onto), so admission is always classic
+batch-1 prefill + insert.
+
+All device work is functional: insert/evict/decode return nothing but swap
+the pool's cache pytree; the engine owns the only reference (buffers are
+donated through the jitted ops, so a pool slot update does not copy the
+pool).
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
 
@@ -37,6 +46,9 @@ class SlotInfo:
 
 
 class SlotPool:
+    kind = "slot"
+    chunk_prefill_ok = False
+
     def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
                  prompt_len: int, max_gen: int):
         if cfg.family == "vlm" or cfg.is_encdec:
@@ -67,6 +79,14 @@ class SlotPool:
                 pool, Mo.grow_caches(c, max_gen), slot),
             donate_argnums=(0,))
         self._evict = jax.jit(Mo.cache_evict_slot, donate_argnums=(0,))
+        # two fused-step variants: an all-greedy batch runs the pure-argmax
+        # step (no mask/Gumbel work); any sampling row selects the sampler
+        self._decode = {
+            s: jax.jit(St.make_fused_decode_step(cfg, env,
+                                                 prompt_len=prompt_len,
+                                                 sample=s),
+                       donate_argnums=(1,))
+            for s in (False, True)}
 
     # -- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -84,6 +104,9 @@ class SlotPool:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]
 
+    def occupied_slots(self) -> List[int]:
+        return self.active_slots()
+
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self.free_slots()) / max(self.num_slots, 1)
@@ -96,6 +119,21 @@ class SlotPool:
         return FREE if s is None else s.rid
 
     # -- admission / retirement --------------------------------------------
+    def can_admit(self, gen_len: int) -> bool:
+        return bool(self._free)
+
+    def preempt_frees(self, slot: int, gen_len: int) -> bool:
+        """A slot is worst-case reserved, so evicting any slot admits any
+        request the engine already validated against max_gen."""
+        return True
+
+    def admit(self, rid: int, gen_len: int, *, prefilling: bool = False) -> int:
+        """Bind a free slot for `rid`. The slot stays empty (info=None)
+        until insert() writes the prefilled cache — the slot pool has no
+        chunked-prefill path, so `prefilling` must be False."""
+        assert not prefilling, "slot pool has no chunked-prefill lanes"
+        return self.acquire_slot()
+
     def insert(self, slot: int, rid: int, prefill_caches: Pytree,
                gen_len: int) -> None:
         """Bind `rid` to `slot` and write its prefilled (batch-1, length
@@ -108,6 +146,12 @@ class SlotPool:
         self._slots[slot] = SlotInfo(rid=rid, cur_len=self.prompt_len,
                                      tokens_done=1, gen_len=gen_len)
 
+    def ensure(self, slot: int, pos: int) -> None:
+        """Capacity is reserved wholesale at admission — nothing to grow."""
+
+    def finish_prefill(self, slot: int) -> SlotInfo:
+        raise NotImplementedError("slot pool has no chunked-prefill lanes")
+
     def evict(self, slot: int, *, zero: bool = False) -> None:
         """Free `slot`. Insert fully overwrites a slot, so zeroing is only
         for hygiene (tests assert evicted slots hold no stale KV)."""
@@ -117,6 +161,17 @@ class SlotPool:
         if zero:
             self.caches = self._evict(self.caches,
                                       jnp.asarray(slot, jnp.int32))
+
+    # -- the fused step -------------------------------------------------------
+    def decode(self, params, prev_tok, meta_i, meta_f, row_slots, *,
+               sample: bool):
+        """One fused step over the contiguous pool; rows address slots
+        directly (row == slot), so row_slots is ignored."""
+        del row_slots
+        nxt, self.caches = self._decode[sample](
+            params, self.caches, prev_tok, jnp.asarray(meta_i),
+            jnp.asarray(meta_f))
+        return nxt
 
     # -- decode-batch views ---------------------------------------------------
     def advance(self, slot: int) -> SlotInfo:
@@ -130,6 +185,14 @@ class SlotPool:
     def finished(self, slot: int) -> bool:
         s = self._slots[slot]
         return s is not None and s.tokens_done >= s.gen_len
+
+    # -- reporting ----------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        return {}
+
+    def describe(self) -> str:
+        return (f"slot KV: {self.num_slots} slots x "
+                f"{self.prompt_len + self.max_gen} reserved tokens")
 
     # -- introspection (tests) ----------------------------------------------
     def read_slot(self, slot: int) -> Pytree:

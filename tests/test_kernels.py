@@ -218,3 +218,62 @@ def test_wkv6_kernel_sweep(B, S, H, hd, chunk, rng):
                        u)
     assert float(jnp.max(jnp.abs(o - orf.transpose(0, 2, 1, 3)))) < 2e-3
     assert float(jnp.max(jnp.abs(sf - sr))) < 2e-3
+
+
+# ---------------------------------------------------------------------------
+# sampling: fused top-k/top-p mask (bisection kernel vs sort-based oracle)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.sampling.ops import topk_topp_mask  # noqa: E402
+from repro.kernels.sampling.ref import NEG_INF, topk_topp_mask_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("T,V", [(4, 128), (3, 200), (1, 512)])
+def test_sampling_mask_kernel_matches_oracle(T, V, rng):
+    """The bisection kernel (interpret mode) must produce the oracle's
+    keep-set: same survivors, same NEG_INF drops — including a non-128
+    vocab that exercises the lane padding."""
+    ks = jax.random.split(rng, 2)
+    logits = jax.random.normal(ks[0], (T, V), jnp.float32) * 3.0
+    top_k = jnp.asarray([0, 5, 1, 40][:T], jnp.int32)
+    top_p = jnp.asarray([1.0, 0.9, 0.5, 0.25][:T], jnp.float32)
+    got = topk_topp_mask(logits, top_k, top_p, impl="interpret")
+    want = topk_topp_mask_ref(logits, top_k, top_p)
+    keep_g, keep_w = got > NEG_INF / 2, want > NEG_INF / 2
+    assert bool(jnp.all(keep_g == keep_w)), "keep-sets differ"
+    assert bool(jnp.all(jnp.where(keep_w, got == want, True))), \
+        "kept logits must pass through unchanged"
+
+
+def test_sampling_mask_semantics(rng):
+    """Unit semantics on a hand-checkable distribution."""
+    logits = jnp.log(jnp.asarray([[0.4, 0.3, 0.2, 0.05, 0.05]],
+                                 jnp.float32))
+    # top_k=2 keeps exactly the two largest
+    out = topk_topp_mask_ref(logits, jnp.asarray([2]), jnp.asarray([1.0]))
+    assert [bool(b) for b in (out[0] > NEG_INF / 2)] == \
+        [True, True, False, False, False]
+    # top_p=0.65 needs {0.4, 0.3} (cumsum crosses at the second token;
+    # 0.65 sits safely between 0.4 and 0.7 so fp roundoff can't flip it)
+    out = topk_topp_mask_ref(logits, jnp.asarray([0]), jnp.asarray([0.65]))
+    assert [bool(b) for b in (out[0] > NEG_INF / 2)] == \
+        [True, True, False, False, False]
+    # disabled filters keep everything
+    out = topk_topp_mask_ref(logits, jnp.asarray([0]), jnp.asarray([1.0]))
+    assert bool(jnp.all(out[0] > NEG_INF / 2))
+    # the argmax always survives even the harshest settings
+    out = topk_topp_mask_ref(logits, jnp.asarray([1]), jnp.asarray([1e-3]))
+    assert [bool(b) for b in (out[0] > NEG_INF / 2)] == \
+        [True, False, False, False, False]
+
+
+def test_sampling_mask_kernel_tie_values(rng):
+    """Value ties at the top-k boundary are all kept (both impls)."""
+    logits = jnp.asarray([[1.0, 2.0, 2.0, 0.0, -1.0] + [-9.0] * 123],
+                         jnp.float32)
+    for impl in ("xla", "interpret"):
+        out = topk_topp_mask(logits, jnp.asarray([2]), jnp.asarray([1.0]),
+                             impl=impl)
+        keep = out[0] > NEG_INF / 2
+        assert [bool(b) for b in keep[:5]] == [False, True, True, False,
+                                               False], impl

@@ -7,6 +7,13 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff, if installed) =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks tools examples
+else
+  echo "ruff not installed; skipping (the GitHub workflow runs it)"
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
@@ -24,7 +31,20 @@ assert r["kv_bytes_ratio"] <= 1.01, "paged ran with a bigger KV budget"
 # best-of-N timed; TPU runs the Pallas paged kernel)
 assert r["speedup_tokens_per_s"] >= 1.5, r["speedup_tokens_per_s"]
 assert r["concurrency_ratio"] >= 2.0, r["concurrency_ratio"]
+# serving API v2 floors (ISSUE-3): EDF must beat FIFO on deadline-miss
+# rate, and seeded sampling must stay reproducible at a sane rate
+# (ratio floor, like speedup/concurrency above — machine-speed-proof)
+s = r["scheduling"]
+assert s["edf"]["miss_rate"] < s["fifo"]["miss_rate"], s
+assert s["edf"]["miss_rate"] == 0.0, s
+sam = r["sampling"]
+assert sam["reproducible"], "seeded sampling output drifted between runs"
+assert sam["sampled_vs_greedy"] >= 0.25, sam
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
 python -m repro.launch.serve --trace poisson --smoke --verify
+
+echo "== serving demo (seeded sampling + EDF + deadlines + verify) =="
+python -m repro.launch.serve --trace poisson --smoke --verify \
+  --temperature 0.8 --top-k 40 --top-p 0.95 --sched edf --deadline 2.0
