@@ -89,12 +89,26 @@ class LatencyPolicy:
     through ServingMetrics: EDF reorders admissions within a node, but once
     requests miss anyway the node is simply oversubscribed — each *new*
     miss since the last decision is a scale-up vote that outranks a
-    healthy-looking p95 (misses lead completions, p95 trails them)."""
+    healthy-looking p95 (misses lead completions, p95 trails them).
+
+    kv_shared_occupancy (the paged backend's fraction of blocks currently
+    referenced by >= 2 live requests) is a *scale-hold* signal: a replica
+    actively deduplicating shared prefixes would make every one of those
+    in-flight tenants pay cold prefill again if it were drained — so the
+    latency-headroom shrink is held while shared occupancy is at/above
+    hold_shared_above. The signal decays to zero as sharing traffic
+    drains, so idle clusters still shrink."""
     target_p95_ms: float
     min_nodes: int = 1
     max_nodes: int = 64
     headroom: float = 0.5  # scale down below headroom*target
     scale_on_misses: bool = True
+    # hold shrink while >= this fraction of the pool is actively shared.
+    # The signal's ceiling is (shared prefix blocks)/(pool size) — a pool
+    # sized for many requests holds a handful of shared template blocks —
+    # so the threshold must sit well below 1.0 to be reachable (the smoke
+    # bench peaks at ~0.13 with one template on a 32-block pool)
+    hold_shared_above: float = 0.05
     _seen_misses: float = field(default=0.0, init=False)
 
     def decide(self, view, metrics):
@@ -123,6 +137,10 @@ class LatencyPolicy:
                                            f"{self.target_p95_ms:.0f}ms")
         if (p95 < self.headroom * self.target_p95_ms and depth == 0
                 and n > self.min_nodes):
+            shared = metrics.get("kv_shared_occupancy", 0.0)
+            if shared >= self.hold_shared_above:
+                return ScalePlan(n, reason=f"prefix cache hot "
+                                           f"({shared:.2f} shared)")
             return ScalePlan(n - 1, reason=f"p95 {p95:.0f}ms in headroom")
         return ScalePlan(n, reason="in-band")
 
@@ -183,12 +201,14 @@ class AutoScaler:
         # take the worst node, throughput sums, occupancy averages
         for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
                           ("ttft_p95_ms", max), ("tokens_per_s", sum),
-                          ("deadline_misses", sum), ("preemptions", sum)):
+                          ("deadline_misses", sum), ("preemptions", sum),
+                          ("prefill_tokens", sum)):
             vals = [v for k, v in out.items()
                     if k.startswith(f"node_{name}/")]
             if vals:
                 out[name] = agg(vals)
-        for name in ("slot_occupancy", "kv_block_occupancy"):
+        for name in ("slot_occupancy", "kv_block_occupancy",
+                     "prefix_hit_rate", "kv_shared_occupancy"):
             occ = [v for k, v in out.items()
                    if k.startswith(f"node_{name}/")]
             if occ:

@@ -32,7 +32,7 @@ from repro.models import model as Mo
 from repro.models.env import Env
 from repro.serve import (SERVE_PLAN, SamplingParams, ServingEngine,
                          burst_trace, make_scheduler_policy, poisson_trace,
-                         run_to_completion)
+                         run_to_completion, sysprompt_trace)
 
 
 def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan,
@@ -105,6 +105,14 @@ def _trace_of(args, cfg):
                            vocab_size=cfg.vocab_size, gen_len=args.gen,
                            deadline_s=args.deadline, sampling=sampling,
                            seed=args.seed)
+    if args.trace == "sysprompt":
+        return sysprompt_trace(args.requests, args.rate,
+                               prompt_len=args.prompt_len,
+                               vocab_size=cfg.vocab_size,
+                               prefix_len=args.prefix_len, gen_len=args.gen,
+                               gen_len_max=args.gen_max,
+                               deadline_s=args.deadline, sampling=sampling,
+                               seed=args.seed)
     return poisson_trace(args.requests, args.rate,
                          prompt_len=args.prompt_len,
                          vocab_size=cfg.vocab_size, gen_len=args.gen,
@@ -119,6 +127,7 @@ def _make_engine(args, cfg, params, *, num_slots=None, clock=None):
                          prompt_len=args.prompt_len, max_gen=args.gen_max,
                          kv=args.kv, block_size=args.block_size,
                          kv_blocks=args.kv_blocks,
+                         prefix_cache=args.prefix_cache == "on",
                          prefill_chunk=args.prefill_chunk,
                          policy=make_scheduler_policy(args.sched, **sched),
                          clock=clock)
@@ -166,6 +175,11 @@ def run_trace(args, cfg, params) -> int:
     print(f"p50={snap.get('latency_p50_ms', 0.0):.0f}ms "
           f"p95={snap.get('latency_p95_ms', 0.0):.0f}ms "
           f"tokens/s(sim)={snap['tokens_per_s']:.1f}")
+    if snap.get("prefix_hit_rate", 0.0) > 0.0:
+        print(f"prefix cache: hit rate "
+              f"{snap['prefix_hit_rate']:.2f}, prefill tokens computed "
+              f"{snap['prefill_tokens']:.0f}, shared occupancy "
+              f"{snap['kv_shared_occupancy']:.2f}")
 
     rc = 0
     if args.verify:
@@ -190,7 +204,9 @@ def run_trace(args, cfg, params) -> int:
             base = np.asarray(serve_batch(None, cfg, params, prompts,
                                           args.gen_max, SERVE_PLAN,
                                           streamed_prefill=streamed))
-            ok = all(np.array_equal(base[r.rid][:r.gen_len],
+            # slice by the *admitted* budget (gen_len capped by
+            # max_tokens) — submit() no longer rewrites r.gen_len
+            ok = all(np.array_equal(base[r.rid][:r.eff_gen_len],
                                     np.array(out[r.rid]))
                      for r in trace)
             tag = "streamed-prefill one-shot" if streamed else "one-shot"
@@ -225,7 +241,7 @@ def main() -> int:
     ap.add_argument("--arch", default="paper-demo")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--trace", default="poisson",
-                    choices=("poisson", "burst", "oneshot"))
+                    choices=("poisson", "burst", "sysprompt", "oneshot"))
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
@@ -244,6 +260,12 @@ def main() -> int:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill lane width (0 disables; default: "
                     "prompt_len on attention-only archs)")
+    ap.add_argument("--prefix-cache", default="on", choices=("on", "off"),
+                    help="paged KV: share full prompt-prefix blocks across "
+                    "requests (copy-on-write; exact, greedy and seeded)")
+    ap.add_argument("--prefix-len", type=int, default=None,
+                    help="sysprompt trace: shared system-prompt length "
+                    "(default: 3/4 of --prompt-len)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -277,6 +299,13 @@ def main() -> int:
     args = ap.parse_args()
     if args.gen_max is None:
         args.gen_max = args.gen
+    if args.prefix_len is None:
+        args.prefix_len = (3 * args.prompt_len) // 4
+    if (args.trace == "sysprompt" and args.prefix_cache == "on"
+            and args.prefix_len < args.block_size):
+        print(f"warning: --prefix-len {args.prefix_len} < --block-size "
+              f"{args.block_size}: the shared prefix spans no full block, "
+              "so the prefix cache cannot hit (try --block-size 4)")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     rng = jax.random.PRNGKey(0)

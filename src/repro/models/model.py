@@ -334,6 +334,28 @@ def make_paged_insert(cfg: ModelConfig, block_size: int):
     return insert
 
 
+def make_paged_copy(cfg: ModelConfig):
+    """Copy one physical block's K/V (every layer, global and local tables
+    alike) from block `src` to block `dst` — the copy-on-write step behind
+    prefix sharing (serve/blocks.py): the first divergent write into a
+    shared block lands in a fresh copy instead. Row-addressed recurrent
+    state has no block dim and is untouched."""
+    def kv(dst_pool, is_local, axis, src, dst):
+        if axis == 1:
+            return dst_pool.at[:, dst].set(dst_pool[:, src])
+        return dst_pool.at[dst].set(dst_pool[src])
+
+    def state(dst_pool, axis, src, dst):
+        return dst_pool
+
+    def copy(pool, src, dst):
+        f = _paged_kv_op(pool, cfg, kv, state)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, d: f(p, d, src, dst), pool)
+
+    return copy
+
+
 def make_paged_evict(cfg: ModelConfig):
     """Zero a slot's blocks (and state row) in a paged pool — hygiene only;
     allocation hygiene lives in the BlockManager free list."""

@@ -23,6 +23,7 @@ from repro.serve.request import (  # noqa: F401
     RequestQueue,
     burst_trace,
     poisson_trace,
+    sysprompt_trace,
 )
 from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401

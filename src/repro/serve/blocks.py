@@ -22,12 +22,30 @@ of ceil(w/bs) blocks written at pos % w — softmax over keys is permutation-
 invariant and RoPE is applied at write time, so the ring never needs
 unscrambling (this is what lets recurrentgemma-style archs serve here while
 the slot pool still rejects them).
+
+Prefix caching (copy-on-write sharing): real multi-user traffic is
+dominated by shared prompt prefixes (system prompts, few-shot templates).
+Full prompt blocks are content-addressed by a per-block hash *chain*
+(h_j = H(h_{j-1} || tokens_j), vLLM-style, so a block hash commits to its
+whole prefix); a request whose prompt chain hits the index admits with its
+table pointing at the shared physical blocks — those prefill positions are
+never recomputed (the engine starts its lanes at `cached_len`). Sharing is
+refcounted: a block returns to the pool only when its last reference drops,
+and registered blocks whose refcount hits zero are *retained* in an LRU
+reclaim list (still KV-valid, still admission capacity) until the free list
+runs dry. The first write into a still-shared block — only ever the
+boundary block of a fully-cached prompt — triggers copy-on-write into a
+fresh block (Mo.make_paged_copy), so two requests sharing a prefix can
+never observe each other's writes. The double-free guard extends to
+refcounts: freeing through a table whose entry is already at refcount zero
+raises before the free list is poisoned.
 """
 from __future__ import annotations
 
+import hashlib
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional, Set
+from typing import Any, Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,9 +74,12 @@ class PagedSlot:
     tokens_done: int
     gen_len: int
     prefilling: bool = False  # still consuming prompt chunks (lane rows)
-    alloc_g: int = 0  # global-table blocks allocated so far
+    alloc_g: int = 0  # global-table entries bound so far (shared + private)
     alloc_l: int = 0  # local-table blocks allocated so far
     reserved: int = 0  # blocks reserved but not yet allocated
+    cached_len: int = 0  # prompt tokens served from the prefix cache
+    shared_g: int = 0  # leading table entries referencing shared blocks
+    hashes: Tuple[bytes, ...] = ()  # prompt block hash chain (full blocks)
 
 
 class BlockManager:
@@ -66,7 +87,8 @@ class BlockManager:
 
     def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
                  prompt_len: int, max_gen: int, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         if cfg.family == "vlm" or cfg.is_encdec:
             raise ValueError(
                 f"{cfg.name}: continuous batching supports decoder-only "
@@ -117,8 +139,28 @@ class BlockManager:
         # two requests, silently cross-writing their KV
         self._free_block_set: Set[int] = set(self._free_blocks)
         self._reserved_total = 0  # blocks promised to admitted requests
+        # -- prefix cache state (sharing only applies to global tables; a
+        # window ring rewrites positions in place and recurrent state is
+        # not content-addressable, so those archs keep prefix_cache off)
+        self.prefix_cache = (bool(prefix_cache) and self.has_global
+                             and self.chunk_prefill_ok)
+        self._ref = np.zeros(self.num_blocks, np.int64)  # table references
+        self._cached: Dict[bytes, int] = {}   # prefix-chain hash -> block id
+        self._hash_of: Dict[int, bytes] = {}  # registered block -> its hash
+        # registered blocks whose last reference dropped: still KV-valid,
+        # still admission capacity, reclaimed LRU when the free list is dry
+        self._reclaim: Dict[int, None] = {}
+        self._hit_tokens = 0     # prompt tokens served from the cache
+        self._lookup_tokens = 0  # prompt tokens probed at admission
+        self._cow_copies = 0
+        # one-entry probe memo: a backpressured queue head re-probes every
+        # scheduler step, and one admission probes up to three times
+        # (can_admit, admit's assert, admit) — don't re-hash the prompt
+        # each time. Invalidated whenever the index changes.
+        self._probe_memo: Optional[Tuple[bytes, tuple]] = None
         self._insert = jax.jit(Mo.make_paged_insert(cfg, bs),
                                donate_argnums=(0,))
+        self._copy = jax.jit(Mo.make_paged_copy(cfg), donate_argnums=(0,))
         self._evict = jax.jit(Mo.make_paged_evict(cfg), donate_argnums=(0,))
         self._read = jax.jit(Mo.make_paged_read(cfg))
         # two fused-step variants: an all-greedy batch runs the pure-argmax
@@ -146,21 +188,90 @@ class BlockManager:
 
     @property
     def free_unreserved(self) -> int:
-        return len(self._free_blocks) - self._reserved_total
+        """Free + reclaimable (cache-retained, refcount 0) minus promised
+        reservations — the capacity admission may still hand out."""
+        return (len(self._free_blocks) + len(self._reclaim)
+                - self._reserved_total)
 
-    def can_admit(self, gen_len: int) -> bool:
-        return (bool(self._free_slots)
-                and self.blocks_for(gen_len) <= self.free_unreserved)
+    def _prompt_hashes(self, prompt) -> Tuple[bytes, ...]:
+        """Content-hash chain over the prompt's *full* blocks. Each link
+        commits to the whole prefix up to and including its block, so a
+        single dict lookup per block matches vLLM's prefix trie. blake2b,
+        not Python hash(): a collision here would silently serve one
+        request another's KV."""
+        bs = self.block_size
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        h = b"paged-prefix-root"
+        out = []
+        for j in range(len(toks) // bs):
+            m = hashlib.blake2b(h, digest_size=16)
+            m.update(toks[j * bs:(j + 1) * bs].tobytes())
+            h = m.digest()
+            out.append(h)
+        return tuple(out)
 
-    def preempt_frees(self, slot: int, gen_len: int) -> bool:
-        """Evicting `slot` frees its full worst-case commitment (allocated
-        + unspent reservation stay equal to blocks_for(its gen_len) by
-        construction) plus the slot itself — admit iff that covers the
-        candidate's reservation."""
+    def _probe(self, prompt) -> Tuple[Tuple[bytes, ...], int, int, int]:
+        """(hashes, shared, cached_len, cow): how much of `prompt` the
+        cache already holds. cached_len is capped at prompt_len - 1 — the
+        last prompt token always runs (its logits emit the first generated
+        token), so a fully-cached prompt keeps exactly one lane row and its
+        write into the shared boundary block is the copy-on-write case
+        (cow=1 reserves the fresh block that copy will need)."""
+        if prompt is None or not self.prefix_cache:
+            return (), 0, 0, 0
+        key = np.ascontiguousarray(np.asarray(prompt, np.int32)).tobytes()
+        if self._probe_memo is not None and self._probe_memo[0] == key:
+            return self._probe_memo[1]
+        hashes = self._prompt_hashes(prompt)
+        shared = 0
+        for h in hashes:
+            if h not in self._cached:
+                break
+            shared += 1
+        cached_len = min(shared * self.block_size, self.prompt_len - 1)
+        cow = 1 if shared * self.block_size > cached_len else 0
+        self._probe_memo = (key, (hashes, shared, cached_len, cow))
+        return hashes, shared, cached_len, cow
+
+    def can_admit(self, gen_len: int, *, prompt=None) -> bool:
+        """With `prompt`, admission is prefix-aware: shared blocks cost no
+        fresh capacity, except that resurrecting a reclaimable block (and
+        the one copy-on-write block of a fully-cached prompt) re-commits
+        physical capacity the reservation math must still cover."""
+        if not self._free_slots:
+            return False
+        hashes, shared, _, cow = self._probe(prompt)
+        resurrect = sum(1 for h in hashes[:shared]
+                        if self._ref[self._cached[h]] == 0)
+        need = self.blocks_for(gen_len) - shared + cow + resurrect
+        return need <= self.free_unreserved
+
+    def preempt_frees(self, slot: int, gen_len: int, *,
+                      prompt=None) -> bool:
+        """Evicting `slot` frees its unspent reservation plus every block
+        it holds the *last* reference to (shared blocks merely decref —
+        registered ones land in the reclaim list, which still counts as
+        capacity) — admit iff that covers the candidate's need. With
+        `prompt`, the need is prefix-discounted exactly like can_admit's,
+        so a hot-prefix candidate is not stalled behind worst-case math;
+        hit blocks whose only holder is the victim count as resurrections
+        (the eviction parks them in reclaim, the candidate pulls them
+        right back out)."""
         s = self._slots[slot]
         assert s is not None
-        freed = s.alloc_g + s.alloc_l + s.reserved
-        return self.blocks_for(gen_len) <= self.free_unreserved + freed
+        vblocks = {int(self.table[slot, j]) for j in range(s.alloc_g)}
+        vblocks |= {int(self.table_local[slot, j])
+                    for j in range(s.alloc_l)}
+        freed = s.reserved + sum(1 for b in vblocks if self._ref[b] == 1)
+        hashes, shared, _, cow = self._probe(prompt)
+        resurrect = 0
+        for h in hashes[:shared]:
+            bid = self._cached[h]
+            if self._ref[bid] == 0 or (self._ref[bid] == 1
+                                       and bid in vblocks):
+                resurrect += 1
+        need = self.blocks_for(gen_len) - shared + cow + resurrect
+        return need <= self.free_unreserved + freed
 
     # -- occupancy ----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -184,7 +295,10 @@ class BlockManager:
 
     @property
     def blocks_in_use(self) -> int:
-        return self.usable_blocks - len(self._free_blocks)
+        """Blocks referenced by live requests (cache-retained blocks with
+        no referents are reclaimable capacity, not use)."""
+        return (self.usable_blocks - len(self._free_blocks)
+                - len(self._reclaim))
 
     @property
     def block_occupancy(self) -> float:
@@ -201,23 +315,73 @@ class BlockManager:
         return FREE if s is None else s.rid
 
     # -- admission / allocation --------------------------------------------
-    def admit(self, rid: int, gen_len: int, *,
-              prefilling: bool = False) -> int:
+    def admit(self, rid: int, gen_len: int, *, prefilling: bool = False,
+              prompt=None) -> int:
         """Reserve a slot + the request's worst-case blocks; allocation
-        itself happens on demand via ensure(). Returns the slot."""
-        assert self.can_admit(gen_len)
+        itself happens on demand via ensure(). Returns the slot.
+
+        With `prompt` (chunked admissions only), the prefix cache is
+        probed first: hit blocks are attached (refcounted) to the slot's
+        table and `cached_len` records how many prompt positions never
+        need a prefill lane — the engine starts its lanes there."""
+        use_prefix = prefilling and prompt is not None
+        assert self.can_admit(gen_len, prompt=prompt if use_prefix else None)
         slot = self._free_slots.popleft()
         need = self.blocks_for(gen_len)
-        self._slots[slot] = PagedSlot(rid=rid, cur_len=0, tokens_done=0,
-                                      gen_len=gen_len, prefilling=prefilling,
-                                      reserved=need)
-        self._reserved_total += need
+        hashes, shared, cached_len, cow = (
+            self._probe(prompt) if use_prefix else ((), 0, 0, 0))
+        s = PagedSlot(rid=rid, cur_len=0, tokens_done=0, gen_len=gen_len,
+                      prefilling=prefilling, reserved=need - shared + cow,
+                      cached_len=cached_len, shared_g=shared, hashes=hashes)
+        self._slots[slot] = s
+        for j in range(shared):
+            self._attach(slot, j, self._cached[hashes[j]])
+        s.alloc_g = shared
+        self._reserved_total += s.reserved
+        if use_prefix and self.prefix_cache:
+            self._lookup_tokens += len(prompt)
+            self._hit_tokens += cached_len
         return slot
+
+    def _attach(self, slot: int, j: int, bid: int) -> None:
+        """Point table entry j at shared block `bid` (incref; resurrect it
+        from the reclaim list if its last holder already retired)."""
+        if self._ref[bid] == 0:
+            del self._reclaim[bid]
+        self._ref[bid] += 1
+        self.table[slot, j] = bid
+
+    def _take_block(self) -> int:
+        """A fresh physical block: the free list first, else reclaim the
+        LRU cache-retained block (unregistering its prefix entry)."""
+        if self._free_blocks:
+            bid = self._free_blocks.popleft()
+            self._free_block_set.discard(bid)
+            return bid
+        bid = next(iter(self._reclaim))  # LRU: oldest insertion
+        del self._reclaim[bid]
+        del self._cached[self._hash_of.pop(bid)]
+        self._probe_memo = None  # the index shrank; memoized hits may lie
+        return bid
+
+    def _release(self, bid: int) -> bool:
+        """Drop one reference to `bid`; returns True iff the block went
+        back to the free list (registered blocks are retained, reclaimable
+        LRU, so a later identical prompt still hits)."""
+        self._ref[bid] -= 1
+        if self._ref[bid] > 0:
+            return False
+        if bid in self._hash_of:
+            self._reclaim[bid] = None
+            return False
+        self._free_blocks.append(bid)
+        self._free_block_set.add(bid)
+        return True
 
     def _alloc(self, slot: int, local: bool) -> None:
         s = self._slots[slot]
-        bid = self._free_blocks.popleft()
-        self._free_block_set.discard(bid)
+        bid = self._take_block()
+        self._ref[bid] = 1
         tbl = self.table_local if local else self.table
         if local:
             tbl[slot, s.alloc_l] = bid
@@ -229,14 +393,39 @@ class BlockManager:
         self._reserved_total -= 1
         assert s.reserved >= 0, "request outgrew its reservation"
 
+    def _cow(self, slot: int, j: int) -> None:
+        """Copy-on-write: `slot` is about to write into shared table entry
+        j (the boundary block of a fully-cached prompt). Copy the block's
+        KV into a fresh block (reserved at admission), repoint the table,
+        drop the shared reference — the sharer(s) and the cache keep the
+        original; this request's writes land in its private copy."""
+        s = self._slots[slot]
+        old = int(self.table[slot, j])
+        new = self._take_block()
+        self._ref[new] = 1
+        self.caches = self._copy(self.caches, jnp.asarray(old, jnp.int32),
+                                 jnp.asarray(new, jnp.int32))
+        self.table[slot, j] = new
+        s.shared_g = j
+        s.reserved -= 1
+        self._reserved_total -= 1
+        assert s.reserved >= 0, "copy-on-write outgrew its reservation"
+        self._cow_copies += 1
+        self._release(old)
+
     def ensure(self, slot: int, pos: int) -> None:
         """Allocate blocks so `slot` can write KV at logical position `pos`
         (and the matching window-ring position). On-demand growth: called
-        right before every decode/prefill-chunk step."""
+        right before every decode/prefill-chunk step. Writes are strictly
+        sequential from cached_len, so the only write that can land in a
+        shared block is the first one past a partially-cached boundary —
+        that is the copy-on-write trigger."""
         s = self._slots[slot]
         assert s is not None
         bs = self.block_size
         if self.has_global:
+            if s.shared_g * bs > s.cached_len and pos >= s.cached_len:
+                self._cow(slot, s.shared_g - 1)
             while s.alloc_g < pos // bs + 1:
                 self._alloc(slot, local=False)
         if self.has_local:
@@ -263,6 +452,9 @@ class BlockManager:
                                           gen_len=gen_len, reserved=need)
             self._reserved_total += need
         s = self._slots[slot]
+        assert s.shared_g == 0, \
+            "classic insert scatters the whole prompt; it cannot target a " \
+            "slot admitted with shared prefix blocks"
         s.rid = rid
         self.ensure(slot, self.prompt_len - 1)
         tg, tl = self._tables_of(slot)
@@ -274,12 +466,23 @@ class BlockManager:
 
     def finish_prefill(self, slot: int) -> PagedSlot:
         """Chunked prefill consumed the whole prompt: the slot joins the
-        decode batch (its first token was emitted by the last lane row)."""
+        decode batch (its first token was emitted by the last lane row).
+        The slot's full prompt blocks now hold valid KV — register any not
+        yet in the prefix index so later identical prefixes hit. (Full
+        prompt blocks are never written again: generation writes start at
+        prompt_len, past the last registered block.)"""
         s = self._slots[slot]
         assert s is not None and s.prefilling
         s.prefilling = False
         s.cur_len = self.prompt_len
         s.tokens_done = 1
+        if self.prefix_cache:
+            for j, h in enumerate(s.hashes):
+                if h not in self._cached:
+                    bid = int(self.table[slot, j])
+                    self._cached[h] = bid
+                    self._hash_of[bid] = h
+                    self._probe_memo = None  # the index grew; re-probe
         return s
 
     # -- the fused step -------------------------------------------------------
@@ -315,25 +518,28 @@ class BlockManager:
 
     # -- retirement ---------------------------------------------------------
     def evict(self, slot: int, *, zero: bool = False) -> None:
-        """Free `slot`: return its blocks to the free list and drop any
-        unspent reservation. Zeroing is hygiene only (tests).
+        """Free `slot`: drop one reference per table entry — a block
+        returns to the free list only when its last reference drops AND it
+        is not cache-registered (registered blocks are retained in the
+        reclaim list so later identical prefixes still hit). Zeroing is
+        hygiene only (tests) and skips blocks that stay shared or cached.
 
         Double frees are hard errors, not silent corruption: evicting an
-        already-free slot raises, and a block id that is somehow already in
-        the free list (an aliased table — the failure mode prefix-sharing
-        refcounts must never hit) raises before the list is poisoned."""
+        already-free slot raises, and a table entry whose block is already
+        at refcount zero or sitting in the free list (an aliased table —
+        exactly the corruption refcounting must never introduce) raises
+        before the free list is poisoned."""
         s = self._slots[slot]
         if s is None:
             raise RuntimeError(
                 f"double free: slot {slot} is already free (its block "
                 "table was returned to the pool once)")
-        if zero:
-            tg, tl = self._tables_of(slot)
-            self.caches = self._evict(self.caches,
-                                      jnp.asarray(slot, jnp.int32), tg, tl)
-        freeing = [int(self.table[slot, j]) for j in range(s.alloc_g)]
-        freeing += [int(self.table_local[slot, j]) for j in range(s.alloc_l)]
-        dup = [b for b in freeing if b in self._free_block_set]
+        freeing_g = [int(self.table[slot, j]) for j in range(s.alloc_g)]
+        freeing_l = [int(self.table_local[slot, j])
+                     for j in range(s.alloc_l)]
+        freeing = freeing_g + freeing_l
+        dup = [b for b in freeing
+               if b in self._free_block_set or self._ref[b] <= 0]
         if len(set(freeing)) != len(freeing):  # within-table alias
             dup += [b for b in set(freeing) if freeing.count(b) > 1]
         if dup:
@@ -341,23 +547,67 @@ class BlockManager:
                 f"double free: slot {slot} block table names free block(s) "
                 f"{sorted(set(dup))} — the free list would hand them to "
                 "two requests")
-        self._free_blocks.extend(freeing)
-        self._free_block_set.update(freeing)
+        if zero:
+            # only blocks this eviction actually returns to the free list
+            # may be zeroed; shared or cache-retained blocks keep their KV
+            # (padding 0s land in the null block, which absorbs anything)
+            dropping = {b for b in freeing
+                        if self._ref[b] == 1 and b not in self._hash_of}
+            zg = np.zeros_like(self.table[slot])
+            gl = [b for b in freeing_g if b in dropping]
+            zg[:len(gl)] = gl
+            zl = np.zeros_like(self.table_local[slot])
+            ll = [b for b in freeing_l if b in dropping]
+            zl[:len(ll)] = ll
+            self.caches = self._evict(self.caches,
+                                      jnp.asarray(slot, jnp.int32),
+                                      jnp.asarray(zg), jnp.asarray(zl))
+        for b in freeing:
+            self._release(b)
         self.table[slot, :] = 0
         self.table_local[slot, :] = 0
         self._reserved_total -= s.reserved
         self._slots[slot] = None
         self._free_slots.append(slot)
 
+    def cached_prefix_len(self, slot: int) -> int:
+        """Prompt positions this slot serves from the prefix cache — the
+        engine starts the request's prefill lanes here."""
+        s = self._slots[slot]
+        return 0 if s is None else s.cached_len
+
     # -- reporting ----------------------------------------------------------
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Cumulative fraction of probed prompt tokens served from the
+        cache (the prefill compute the pool saved)."""
+        return self._hit_tokens / max(self._lookup_tokens, 1)
+
+    @property
+    def shared_occupancy(self) -> float:
+        """Fraction of the pool *actively* shared — blocks referenced by
+        two or more live requests right now. Deliberately not "registered
+        blocks": unique-prompt traffic registers (and retains) every full
+        prompt block without ever sharing one, and a scale-hold keyed on
+        retention would pin the cluster at peak size under 0% hit rate.
+        Only concurrent sharing can push a refcount past 1, so this signal
+        decays to 0 as sharing traffic drains and the autoscaler's shrink
+        paths reopen."""
+        return (int(np.count_nonzero(self._ref >= 2))
+                / max(self.usable_blocks, 1))
+
     def metrics(self) -> Dict[str, float]:
         """Backend load signals merged into the engine snapshot: committed
-        blocks are the signal that actually gates admission."""
-        return {"kv_block_occupancy": self.block_occupancy}
+        blocks are the signal that actually gates admission; the prefix
+        signals feed the autoscaler's scale-hold (core/autoscaler.py)."""
+        return {"kv_block_occupancy": self.block_occupancy,
+                "prefix_hit_rate": self.prefix_hit_rate,
+                "kv_shared_occupancy": self.shared_occupancy}
 
     def describe(self) -> str:
         return (f"paged KV: {self.num_blocks} blocks x "
-                f"{self.block_size} tokens")
+                f"{self.block_size} tokens, prefix cache "
+                f"{'on' if self.prefix_cache else 'off'}")
 
     # -- introspection (tests) ----------------------------------------------
     def read_slot(self, slot: int) -> Pytree:

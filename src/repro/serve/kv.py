@@ -9,16 +9,25 @@ device cache pytree, its bookkeeping, *and its fused decode step* —
 
 Lifecycle of one request through a backend:
 
-    can_admit(gen_len)      reservation check (admission-time backpressure)
-    admit(rid, gen_len)     bind a slot + reserve worst-case capacity
+    can_admit(gen_len, prompt=…)  reservation check (admission-time
+                            backpressure; prompt makes it prefix-aware)
+    admit(rid, gen_len, prompt=…) bind a slot + reserve worst-case
+                            capacity; a prompt whose prefix the backend
+                            already caches admits with shared blocks
+    cached_prefix_len(slot) prompt positions admit() served from its
+                            prefix cache — the engine starts prefill
+                            lanes there (0 on cache-less backends)
     insert(slot, …)         classic path: scatter a batch-1 prefill cache
       — or —
     ensure(slot, pos)       chunked path: grow capacity to cover position
+                            (first write into a shared block = copy-on-write)
     finish_prefill(slot)    chunked path: the slot joins the decode batch
+                            (paged: registers full prompt blocks for reuse)
     decode(params, …)       one fused step over the whole row set
     advance(slot)           host bookkeeping per emitted token
     finished(slot)          declared gen budget consumed?
-    evict(slot)             return capacity (double-free is an error)
+    evict(slot)             return capacity (double-free is an error;
+                            refcounted backends drop one reference)
 
 `metrics()` returns the backend-specific load signals to merge into the
 engine snapshot (e.g. kv_block_occupancy) — the metrics path stops caring
@@ -47,14 +56,20 @@ class KVBackend(Protocol):
     chunk_prefill_ok: bool    # can prompts stream through decode lane rows?
 
     # -- admission / reservation -------------------------------------------
-    def can_admit(self, gen_len: int) -> bool: ...
-    def preempt_frees(self, slot: int, gen_len: int) -> bool:
-        """Would evicting `slot` make can_admit(gen_len) true? The engine
-        asks before acting on a preemption verdict — an eviction that
-        cannot make room would cost the victim its progress for nothing."""
+    def can_admit(self, gen_len: int, *, prompt=None) -> bool: ...
+    def preempt_frees(self, slot: int, gen_len: int, *,
+                      prompt=None) -> bool:
+        """Would evicting `slot` make can_admit(gen_len, prompt=...) true?
+        The engine asks before acting on a preemption verdict — an
+        eviction that cannot make room would cost the victim its progress
+        for nothing."""
         ...
-    def admit(self, rid: int, gen_len: int, *,
-              prefilling: bool = False) -> int: ...
+    def admit(self, rid: int, gen_len: int, *, prefilling: bool = False,
+              prompt=None) -> int: ...
+    def cached_prefix_len(self, slot: int) -> int:
+        """Prompt positions admit() served from a prefix cache (0 when the
+        backend has none) — the engine's lanes start at this position."""
+        ...
     def insert(self, slot: int, rid: int, prefill_caches: Pytree,
                gen_len: int) -> None: ...
     def ensure(self, slot: int, pos: int) -> None: ...
@@ -91,7 +106,8 @@ class KVBackend(Protocol):
 
 def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
                     prompt_len: int, max_gen: int, block_size: int = 16,
-                    kv_blocks: Optional[int] = None) -> KVBackend:
+                    kv_blocks: Optional[int] = None,
+                    prefix_cache: bool = True) -> KVBackend:
     """The one cache-kind dispatch in the serving plane."""
     from repro.serve.blocks import BlockManager
     from repro.serve.slots import SlotPool
@@ -99,7 +115,8 @@ def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
     if kind == "paged":
         return BlockManager(cfg, env, num_slots=num_slots,
                             prompt_len=prompt_len, max_gen=max_gen,
-                            block_size=block_size, num_blocks=kv_blocks)
+                            block_size=block_size, num_blocks=kv_blocks,
+                            prefix_cache=prefix_cache)
     if kind == "slot":
         return SlotPool(cfg, env, num_slots=num_slots, prompt_len=prompt_len,
                         max_gen=max_gen)

@@ -11,11 +11,14 @@ flat metric names AutoScaler.read_metrics() aggregates:
     slot_occupancy    fraction of KV slots in use
     deadline_misses   completed requests that blew their deadline (cumulative)
     preemptions       restart-preemptions issued by the scheduler policy
+    prefill_tokens    prompt positions actually computed (cumulative;
+                      prefix-cache hits are the gap vs tokens submitted)
 
 plus whatever extra load signals the KVBackend reports (the paged
 BlockManager adds kv_block_occupancy — committed blocks, the signal that
-actually gates admission; the metrics path itself never branches on the
-cache kind).
+actually gates admission — and the prefix-cache pair prefix_hit_rate /
+kv_shared_occupancy; the metrics path itself never branches on the cache
+kind).
 
 NodeAgent.report_serving(snapshot()) writes each as metrics/<node>/<name> —
 the same KV path the straggler policy's step-time metrics use, so serving
@@ -48,6 +51,7 @@ class ServingMetrics:
         self.completed = 0
         self.deadline_misses = 0
         self.preemptions = 0
+        self.prefill_tokens = 0  # prompt positions actually computed
 
     # -- recording ----------------------------------------------------------
     def record_tokens(self, now: float, n: int) -> None:
@@ -66,6 +70,13 @@ class ServingMetrics:
 
     def record_preempt(self, now: float) -> None:
         self.preemptions += 1
+
+    def record_prefill_tokens(self, n: int) -> None:
+        """Prompt positions run through prefill (lane rows or classic
+        batch-1) — prefix-cache hits never get here, so this cumulative
+        counter is the denominator bench_serve_prefix compares."""
+        if n > 0:
+            self.prefill_tokens += n
 
     def _trim(self, now: float) -> None:
         horizon = now - self.window_s
@@ -99,6 +110,7 @@ class ServingMetrics:
             "slot_occupancy": slot_occupancy,
             "deadline_misses": float(self.deadline_misses),
             "preemptions": float(self.preemptions),
+            "prefill_tokens": float(self.prefill_tokens),
         }
         for name, val in backend_metrics.items():
             out[name] = float(val)

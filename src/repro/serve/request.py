@@ -19,7 +19,7 @@ from typing import Deque, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.sampling import SamplingParams
+from repro.serve.sampling import SamplingParams, effective_gen_len
 
 
 @dataclass
@@ -39,6 +39,15 @@ class Request:
     @property
     def done(self) -> bool:
         return self.t_done is not None
+
+    @property
+    def eff_gen_len(self) -> int:
+        """gen_len capped by the sampling contract's max_tokens — what the
+        engine admits and reserves for. Derived, never written back:
+        submit() must not mutate caller state (re-submitting the same
+        Request objects, e.g. the CLI --verify re-serve, must see the
+        declared gen_len unchanged)."""
+        return effective_gen_len(self.gen_len, self.sampling)
 
     @property
     def abs_deadline(self) -> float:
@@ -116,6 +125,32 @@ class RequestQueue:
         return len(self._pending)
 
 
+def _poisson_requests(n_requests: int, rate_rps: float, prompt_fn, rng, *,
+                      gen_len: int, gen_len_max: Optional[int],
+                      deadline_s: float,
+                      sampling: Optional[SamplingParams]) -> List[Request]:
+    """Shared Poisson-arrival loop: exponential inter-arrivals, per-rid
+    decorrelated sampling seeds, uniform gen lengths. `prompt_fn(rid)`
+    builds each prompt (it draws from `rng` between the arrival and the
+    gen-length draw, so every trace family keeps a stable stream for a
+    given seed)."""
+    gmax = gen_len if gen_len_max is None else gen_len_max
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        sp = SamplingParams() if sampling is None else sampling.derive(rid)
+        out.append(Request(
+            rid=rid,
+            prompt=prompt_fn(rid),
+            gen_len=int(rng.integers(gen_len, gmax + 1)),
+            arrival_t=t,
+            deadline_s=deadline_s,
+            sampling=sp,
+        ))
+    return out
+
+
 def poisson_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
                   vocab_size: int, gen_len: int = 16,
                   gen_len_max: Optional[int] = None,
@@ -127,22 +162,39 @@ def poisson_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
     for a given seed. `sampling` applies to every request (per-request PRNG
     seeds are derived as sampling.seed + rid so requests don't correlate)."""
     rng = np.random.default_rng(seed)
-    gmax = gen_len if gen_len_max is None else gen_len_max
-    t = 0.0
-    out = []
-    for rid in range(n_requests):
-        t += float(rng.exponential(1.0 / rate_rps))
-        sp = SamplingParams() if sampling is None else sampling.derive(rid)
-        out.append(Request(
-            rid=rid,
-            prompt=rng.integers(0, vocab_size, size=(prompt_len,),
-                                dtype=np.int32),
-            gen_len=int(rng.integers(gen_len, gmax + 1)),
-            arrival_t=t,
-            deadline_s=deadline_s,
-            sampling=sp,
-        ))
-    return out
+    prompt_fn = lambda rid: rng.integers(0, vocab_size, size=(prompt_len,),
+                                         dtype=np.int32)
+    return _poisson_requests(n_requests, rate_rps, prompt_fn, rng,
+                             gen_len=gen_len, gen_len_max=gen_len_max,
+                             deadline_s=deadline_s, sampling=sampling)
+
+
+def sysprompt_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
+                    vocab_size: int, prefix_len: int, gen_len: int = 16,
+                    gen_len_max: Optional[int] = None, n_prefixes: int = 1,
+                    deadline_s: float = math.inf,
+                    sampling: Optional[SamplingParams] = None,
+                    seed: int = 0) -> List[Request]:
+    """Poisson arrivals whose prompts share system-prompt prefixes: each
+    prompt is one of `n_prefixes` fixed templates of `prefix_len` tokens
+    followed by a random per-request suffix — the multi-tenant traffic
+    shape prefix caching dedups. Deterministic for a given seed (the CLI
+    --verify path regenerates it for a second engine)."""
+    if not 0 < prefix_len < prompt_len:
+        raise ValueError(f"prefix_len must be in (0, prompt_len), got "
+                         f"{prefix_len} vs prompt_len {prompt_len}")
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, vocab_size, size=(n_prefixes, prefix_len),
+                            dtype=np.int32)
+
+    def prompt_fn(rid):
+        suffix = rng.integers(0, vocab_size, size=(prompt_len - prefix_len,),
+                              dtype=np.int32)
+        return np.concatenate([prefixes[rid % n_prefixes], suffix])
+
+    return _poisson_requests(n_requests, rate_rps, prompt_fn, rng,
+                             gen_len=gen_len, gen_len_max=gen_len_max,
+                             deadline_s=deadline_s, sampling=sampling)
 
 
 def burst_trace(n_requests: int, *, prompt_len: int, vocab_size: int,

@@ -54,7 +54,6 @@ from repro.serve.kv import KVBackend, make_kv_backend
 from repro.serve.metrics import ServingMetrics
 from repro.serve.policy import FIFOPolicy, SchedulerPolicy
 from repro.serve.request import Request, RequestQueue
-from repro.serve.sampling import effective_gen_len
 
 Pytree = Any
 
@@ -93,6 +92,7 @@ class ServingEngine:
                  num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
                  kv="paged", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
                  policy: Optional[SchedulerPolicy] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
@@ -109,7 +109,8 @@ class ServingEngine:
         if isinstance(kv, str):
             self.pool: KVBackend = make_kv_backend(
                 kv, cfg, env, num_slots=num_slots, prompt_len=prompt_len,
-                max_gen=max_gen, block_size=block_size, kv_blocks=kv_blocks)
+                max_gen=max_gen, block_size=block_size, kv_blocks=kv_blocks,
+                prefix_cache=prefix_cache)
         else:  # a pre-built backend (custom implementations plug in here)
             self.pool = kv
             num_slots = self.pool.num_slots
@@ -153,15 +154,20 @@ class ServingEngine:
         return not self.busy and not self.pending()
 
     def submit(self, requests: Sequence[Request]) -> None:
+        """Validate and enqueue. Never mutates the caller's Requests: the
+        admitted generation budget (gen_len capped by max_tokens) is
+        derived at admission via Request.eff_gen_len, so re-submitting the
+        same objects (the CLI --verify re-serve path) sees the declared
+        gen_len unchanged."""
         for r in requests:
             if len(r.prompt) != self.prompt_len:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} != "
                     f"engine prompt_len {self.prompt_len} (pad the trace)")
-            r.gen_len = effective_gen_len(r.gen_len, r.sampling)
-            if r.gen_len > self.max_gen:
-                raise ValueError(f"request {r.rid}: gen_len {r.gen_len} > "
-                                 f"engine max_gen {self.max_gen}")
+            if r.eff_gen_len > self.max_gen:
+                raise ValueError(
+                    f"request {r.rid}: gen_len {r.eff_gen_len} > "
+                    f"engine max_gen {self.max_gen}")
             self.queue.push(r)
 
     # -- scheduler iteration ------------------------------------------------------
@@ -183,6 +189,10 @@ class ServingEngine:
         for lane in lanes:
             lane.take = min(budget, self.prompt_len - lane.pos)
             budget -= lane.take
+        # prefill compute actually spent this step (prefix-cache hits
+        # shrink it: cached positions never occupy a lane row)
+        self.metrics.record_prefill_tokens(
+            sum(lane.take for lane in lanes))
         lane_rows = self.prefill_chunk if lanes else 0
         T = N + lane_rows
         meta_i = np.zeros((St.META_I_ROWS, T), np.int32)
@@ -292,13 +302,25 @@ class ServingEngine:
             req = self.policy.select(ready, now)
             if req is None:
                 return
-            if not self.pool.can_admit(req.gen_len):
+            # chunked admissions pass the prompt so a prefix-caching
+            # backend can probe/attach shared blocks (classic batch-1
+            # prefill scatters the whole prompt and cannot share)
+            prompt = req.prompt if self.prefill_chunk else None
+            if not self.pool.can_admit(req.eff_gen_len, prompt=prompt):
                 victim = None if preempted else \
                     self.policy.victim(self._running(), req, now)
                 if victim is None:
                     return  # backend exhaustion -> queue backpressure
                 vslot = self._slot_of(victim)
-                if not self.pool.preempt_frees(vslot, req.gen_len):
+                if vslot is None or any(ln.slot == vslot
+                                        for ln in self._lanes):
+                    # a policy may hand back a stale verdict (the victim
+                    # retired this iteration) or — buggy — a mid-prefill
+                    # request whose open lane would keep writing into a
+                    # freed slot; both are "no victim": backpressure
+                    return
+                if not self.pool.preempt_frees(vslot, req.eff_gen_len,
+                                               prompt=prompt):
                     # eviction could not make room — don't cost the victim
                     # its progress for nothing (and don't re-try a doomed
                     # candidate against every runner, one per step)
@@ -306,7 +328,7 @@ class ServingEngine:
                 self._preempt(victim, vslot, now)
                 preempted = True
                 ready = None  # the victim re-joined the arrived set
-                if not self.pool.can_admit(req.gen_len):
+                if not self.pool.can_admit(req.eff_gen_len, prompt=prompt):
                     return  # preempt_frees promised room; belt and braces
             self.queue.remove(req)
             if ready is not None:
@@ -314,11 +336,17 @@ class ServingEngine:
             req.t_admit = now
             self._inflight[req.rid] = req
             if self.prefill_chunk:
-                slot = self.pool.admit(req.rid, req.gen_len, prefilling=True)
-                self._lanes.append(_Lane(slot=slot, req=req))
+                slot = self.pool.admit(req.rid, req.eff_gen_len,
+                                       prefilling=True, prompt=req.prompt)
+                # cached prefix positions never ride a lane: start at the
+                # first uncached token (at most prompt_len - 1 — the last
+                # prompt token always runs to emit the first token)
+                self._lanes.append(_Lane(
+                    slot=slot, req=req,
+                    pos=self.pool.cached_prefix_len(slot)))
             else:
-                self._admit_classic(self.pool.admit(req.rid, req.gen_len),
-                                    req, now)
+                self._admit_classic(
+                    self.pool.admit(req.rid, req.eff_gen_len), req, now)
 
     def _admit_classic(self, slot: int, req: Request, now: float) -> None:
         """Batch-1 prefill + cache insert (the non-chunked path). The first
@@ -327,7 +355,8 @@ class ServingEngine:
         — and fed to the same step's decode via the fresh-token path."""
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-        self.pool.insert(slot, req.rid, caches, req.gen_len)
+        self.metrics.record_prefill_tokens(self.prompt_len)
+        self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
         if req.sampling.greedy:
             first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
         else:
@@ -344,9 +373,13 @@ class ServingEngine:
         if self.pool.finished(slot) or first in req.sampling.stop_set:
             self._retire(slot, now)  # gen_len == 1 / instant stop token
 
-    def _slot_of(self, req: Request) -> int:
-        return next(s for s in self.pool.occupied_slots()
-                    if self.pool.rid_of(s) == req.rid)
+    def _slot_of(self, req: Request) -> Optional[int]:
+        """The slot `req` occupies, or None if it holds none (a stale
+        policy verdict — e.g. the victim retired this iteration). Callers
+        treat None as "no victim"; a bare next() here would leak
+        StopIteration out of the scheduler loop."""
+        return next((s for s in self.pool.occupied_slots()
+                     if self.pool.rid_of(s) == req.rid), None)
 
     def _preempt(self, victim: Request, slot: int, now: float) -> None:
         """Restart-preemption: return the victim's KV capacity, clear its
@@ -360,6 +393,11 @@ class ServingEngine:
         second, longer TTFT sample alongside the first. Both read as load,
         i.e. they bias the policies toward scaling up while preemptions
         are happening — the conservative direction."""
+        # only decode slots are preemptible (_running() excludes
+        # prefilling): an open lane would keep writing prompt chunks into
+        # a freed/reassigned slot — make the invariant explicit here too
+        assert all(ln.slot != slot for ln in self._lanes), \
+            f"preempting slot {slot} with an open prefill lane"
         self.pool.evict(slot)
         self._row_src.pop(slot, None)
         self._fresh.pop(slot, None)

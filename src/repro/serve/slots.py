@@ -119,20 +119,27 @@ class SlotPool:
         return FREE if s is None else s.rid
 
     # -- admission / retirement --------------------------------------------
-    def can_admit(self, gen_len: int) -> bool:
-        return bool(self._free)
+    def can_admit(self, gen_len: int, *, prompt=None) -> bool:
+        return bool(self._free)  # no prefix cache: prompt can't help
 
-    def preempt_frees(self, slot: int, gen_len: int) -> bool:
+    def preempt_frees(self, slot: int, gen_len: int, *,
+                      prompt=None) -> bool:
         """A slot is worst-case reserved, so evicting any slot admits any
         request the engine already validated against max_gen."""
         return True
 
-    def admit(self, rid: int, gen_len: int, *, prefilling: bool = False) -> int:
+    def admit(self, rid: int, gen_len: int, *, prefilling: bool = False,
+              prompt=None) -> int:
         """Bind a free slot for `rid`. The slot stays empty (info=None)
         until insert() writes the prefilled cache — the slot pool has no
-        chunked-prefill path, so `prefilling` must be False."""
+        chunked-prefill path, so `prefilling` must be False. A contiguous
+        per-slot cache has nothing to share, so `prompt` is ignored."""
         assert not prefilling, "slot pool has no chunked-prefill lanes"
         return self.acquire_slot()
+
+    def cached_prefix_len(self, slot: int) -> int:
+        """No prefix cache: every prompt position prefills."""
+        return 0
 
     def insert(self, slot: int, rid: int, prefill_caches: Pytree,
                gen_len: int) -> None:

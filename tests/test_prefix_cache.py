@@ -1,0 +1,290 @@
+"""Prefix caching with copy-on-write blocks (ISSUE-4 tentpole).
+
+BlockManager level: hash-chain prefix admission attaches shared blocks
+with refcounts; the first write into a shared block copies it
+(copy-on-write); refcounted frees retain registered blocks in a
+reclaimable LRU and extend — never weaken — the double-free guard;
+fork–free–fork sequences resurrect cached blocks.
+
+Engine level: lanes start at the first uncached token, prefill compute
+drops, TTFT is recorded for fully-cached prompts, and output stays
+token-exact vs --prefix-cache off for greedy and seeded sampling (two
+requests sharing a prefix never observe each other's writes).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LatencyPolicy
+from repro.configs import get_smoke
+from repro.core.clock import ManualClock
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.serve import (SERVE_PLAN, BlockManager, Request, SamplingParams,
+                         ServingEngine, run_to_completion)
+
+CFG = get_smoke("paper-demo")
+ENV0 = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
+P = 16
+BS = 4  # 4 full blocks per prompt
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+
+
+def _bm(num_slots=3, max_gen=8, **kw):
+    return BlockManager(CFG, ENV0, num_slots=num_slots, prompt_len=P,
+                        max_gen=max_gen, block_size=BS, **kw)
+
+
+def _prompt(seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (P,), dtype=np.int32)
+
+
+def _prefill(bm, rid, prompt, gen_len=8):
+    """Admit + walk the whole prompt through ensure, as the engine's lanes
+    would, then finish (registers full prompt blocks)."""
+    slot = bm.admit(rid, gen_len, prefilling=True, prompt=prompt)
+    for pos in range(bm.cached_prefix_len(slot), P):
+        bm.ensure(slot, pos)
+    bm.finish_prefill(slot)
+    return slot
+
+
+def _engine(num_slots=2, max_gen=8, prefix_cache=True, **kw):
+    return ServingEngine(CFG, PARAMS, num_slots=num_slots, prompt_len=P,
+                         max_gen=max_gen, block_size=BS,
+                         prefix_cache=prefix_cache, clock=ManualClock(),
+                         **kw)
+
+
+def _shared_trace(n=4, sampling=None, prefix_seed=0, gen_len=6):
+    """n requests sharing a 12-token system prompt + random 4-token tails,
+    arrivals staggered so later admissions see the registered prefix."""
+    rng = np.random.default_rng(prefix_seed)
+    pre = rng.integers(0, CFG.vocab_size, (12,), dtype=np.int32)
+    out = []
+    for i in range(n):
+        sp = SamplingParams() if sampling is None else sampling.derive(i)
+        tail = rng.integers(0, CFG.vocab_size, (P - 12,), dtype=np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([pre, tail]),
+                           gen_len=gen_len, arrival_t=0.05 * i, sampling=sp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BlockManager: shared admission, refcounts, copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_admit_attaches_shared_blocks_with_refcounts():
+    bm = _bm()
+    prompt = _prompt()
+    a = _prefill(bm, 0, prompt)
+    assert bm.cached_prefix_len(a) == 0, "cold cache: nothing shared"
+    used_before = bm.blocks_in_use
+    b = bm.admit(1, 8, prefilling=True, prompt=prompt)
+    # all 4 full blocks hit; the engine's lane starts at P - 1 (the last
+    # prompt token always runs to emit the first generated token)
+    assert bm.cached_prefix_len(b) == P - 1
+    sb = bm.info(b)
+    assert sb.shared_g == 4 and sb.alloc_g == 4
+    assert list(bm.table[b][:4]) == list(bm.table[a][:4])
+    assert all(bm._ref[int(x)] == 2 for x in bm.table[b][:4])
+    assert bm.blocks_in_use == used_before, "sharing allocates nothing"
+    # reservation covers only the private future: blocks_for - shared + 1
+    # (the +1 is the copy-on-write block the boundary write will take)
+    assert sb.reserved == bm.blocks_for(8) - 4 + 1
+    # actively-shared occupancy (ref >= 2): exactly the 4 shared blocks
+    assert bm.shared_occupancy == pytest.approx(4 / bm.usable_blocks)
+
+
+def test_first_divergent_write_copies_the_shared_block():
+    bm = _bm()
+    prompt = _prompt()
+    a = _prefill(bm, 0, prompt)
+    b = bm.admit(1, 8, prefilling=True, prompt=prompt)
+    boundary_a = int(bm.table[a][3])
+    bm.ensure(b, P - 1)  # the first (divergent) write position
+    sb = bm.info(b)
+    assert int(bm.table[b][3]) != boundary_a, "write must land in a copy"
+    assert sb.shared_g == 3, "the boundary entry is private now"
+    assert bm._ref[boundary_a] == 1 and bm._ref[int(bm.table[b][3])] == 1
+    assert sb.reserved == bm.blocks_for(8) - 4, "COW spent its reservation"
+    # the copy carries the original KV: reading both slots' shared span
+    # must agree bit-for-bit (request b never recomputed those positions)
+    ra = jax.tree.leaves(bm.read_slot(a))
+    rb = jax.tree.leaves(bm.read_slot(b))
+    for la, lb in zip(ra, rb):
+        if la.ndim >= 2 and la.shape[-2] >= P:  # k/v leaves, seq dim -2
+            np.testing.assert_array_equal(np.asarray(la[..., :P - 1, :]),
+                                          np.asarray(lb[..., :P - 1, :]))
+    # further growth never COWs again (writes are past the shared prefix)
+    cows = bm._cow_copies
+    bm.ensure(b, P + 5)
+    assert bm._cow_copies == cows
+
+
+def test_refcounted_frees_retain_cache_and_keep_double_free_guard():
+    bm = _bm()
+    prompt = _prompt()
+    a = _prefill(bm, 0, prompt)
+    b = bm.admit(1, 8, prefilling=True, prompt=prompt)
+    bm.evict(a)  # first sharer retires: blocks stay (b still references)
+    assert all(bm._ref[int(x)] == 1 for x in bm.table[b][:4])
+    assert bm.blocks_in_use == 4
+    with pytest.raises(RuntimeError, match="double free"):
+        bm.evict(a)
+    bm.evict(b)  # last reference: registered blocks become reclaimable
+    assert bm.blocks_in_use == 0
+    assert bm.free_unreserved == bm.usable_blocks
+    with pytest.raises(RuntimeError, match="double free"):
+        bm.evict(b)
+
+
+def test_fork_free_fork_resurrects_cached_blocks():
+    bm = _bm()
+    prompt = _prompt()
+    a = _prefill(bm, 0, prompt)
+    first = [int(x) for x in bm.table[a][:4]]
+    bm.evict(a)
+    for _ in range(2):  # fork -> free -> fork again
+        s = bm.admit(9, 8, prefilling=True, prompt=prompt)
+        assert bm.cached_prefix_len(s) == P - 1
+        assert [int(x) for x in bm.table[s][:4]] == first, \
+            "the same physical blocks must come back from the reclaim list"
+        bm.evict(s)
+    assert bm.blocks_in_use == 0
+
+
+def test_reclaim_lru_yields_cache_to_fresh_allocations():
+    # pool sized for exactly one request's worst case: after the cached
+    # request retires, a different prompt must be able to take every block
+    bm = _bm(num_slots=2, num_blocks=1 + 6)  # blocks_for(8)=6 at bs=4
+    pa = _prompt(0)
+    a = _prefill(bm, 0, pa)
+    bm.evict(a)
+    assert len(bm._hash_of) == 4, "prompt blocks retained in the cache"
+    pb = _prompt(1)
+    b = bm.admit(1, 8, prefilling=True, prompt=pb)
+    assert bm.cached_prefix_len(b) == 0
+    for pos in range(P + 7):
+        bm.ensure(b, pos)  # forces reclaim of the retained blocks
+    assert len(bm._hash_of) < 4, "LRU reclaim must unregister cache entries"
+    bm.evict(b)
+    # the original prompt now (partially) misses — no stale index entries
+    c = bm.admit(2, 8, prefilling=True, prompt=pa)
+    assert bm.cached_prefix_len(c) < P - 1
+
+
+def test_preempt_frees_applies_prefix_discount():
+    """A candidate whose prompt is mostly cached needs far fewer fresh
+    blocks than its worst case — preempt_frees must judge the eviction
+    against the same prefix-discounted need can_admit uses, or hot-prefix
+    candidates stall in backpressure behind viable preemptions."""
+    bm = _bm(num_slots=3, num_blocks=1 + 11)
+    r1 = _prefill(bm, 0, _prompt(0))
+    for pos in range(P + 7):
+        bm.ensure(r1, pos)  # r1 owns all 6 of its blocks (prefix registered)
+    r2 = bm.admit(1, 1, prefilling=True, prompt=_prompt(1))
+    for pos in range(P):
+        bm.ensure(r2, pos)  # r2: 4 blocks, nothing reserved
+    assert not bm.can_admit(8, prompt=_prompt(0)), \
+        "1 free block < the discounted need of 3"
+    assert bm.blocks_for(8) > bm.free_unreserved + 4, \
+        "worst-case math would also decline the eviction"
+    assert bm.preempt_frees(r2, 8, prompt=_prompt(0)), \
+        "eviction covers the prefix-discounted need"
+    assert not bm.preempt_frees(r2, 8), \
+        "without the prompt the check stays worst-case conservative"
+
+
+def test_prefix_cache_off_is_the_old_allocator():
+    bm = _bm(prefix_cache=False)
+    prompt = _prompt()
+    a = _prefill(bm, 0, prompt)
+    b = bm.admit(1, 8, prefilling=True, prompt=prompt)
+    assert bm.cached_prefix_len(b) == 0 and bm.info(b).shared_g == 0
+    bm.evict(a)
+    assert bm.free_unreserved == bm.usable_blocks - bm.info(b).reserved
+    assert not bm._hash_of and not bm._reclaim
+
+
+# ---------------------------------------------------------------------------
+# engine: exactness, isolation, skipped prefill, TTFT
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_exactness_and_prefill_skip_on_shared_prompts():
+    on = _engine(prefix_cache=True)
+    out_on = run_to_completion(on, _shared_trace(), dt=0.05)
+    off = _engine(prefix_cache=False)
+    out_off = run_to_completion(off, _shared_trace(), dt=0.05)
+    assert out_on == out_off, "prefix cache must be invisible in tokens"
+    snap = on.snapshot()
+    assert on.metrics.prefill_tokens < off.metrics.prefill_tokens
+    assert snap["prefix_hit_rate"] > 0.0
+    # drained: nothing is concurrently shared anymore, so the scale-hold
+    # signal has decayed and the autoscaler's shrink paths are open
+    assert snap["kv_shared_occupancy"] == 0.0
+    assert off.snapshot()["prefix_hit_rate"] == 0.0
+
+
+def test_sampled_requests_sharing_a_prefix_never_cross_contaminate():
+    """Divergence under sampling: requests share prompt blocks but sample
+    different continuations — writes after divergence must stay private
+    (COW), so cache on == cache off bit-for-bit, seeded."""
+    mk = lambda pc: run_to_completion(
+        _engine(num_slots=3, prefix_cache=pc),
+        _shared_trace(n=3, sampling=SAMPLED), dt=0.05)
+    assert mk(True) == mk(False)
+
+
+def test_fully_cached_prompt_gets_first_token_and_ttft():
+    """An identical repeat prompt caches all but its last position: one
+    lane step emits the first token (TTFT recorded), output matches the
+    cold run, and the boundary write went through copy-on-write."""
+    eng = _engine(num_slots=2)
+    prompt = _prompt(3)
+    reqs = [Request(rid=0, prompt=prompt.copy(), gen_len=5, arrival_t=0.0),
+            Request(rid=1, prompt=prompt.copy(), gen_len=5, arrival_t=0.4)]
+    out = run_to_completion(eng, reqs, dt=0.05)
+    assert out[1] == out[0], "identical greedy prompts, identical tokens"
+    done = {r.rid: r for r in eng.completed}
+    assert done[1].t_first_token is not None
+    # rid 1 probed P tokens and hit P - 1 of them
+    assert eng.snapshot()["prefix_hit_rate"] == pytest.approx(
+        (P - 1) / (2 * P))
+    assert eng.pool._cow_copies == 1
+    assert eng.pool.blocks_in_use == 0, "drained pool holds only cache"
+
+
+def test_engine_snapshot_reports_prefill_tokens():
+    eng = _engine(num_slots=1)
+    run_to_completion(eng, _shared_trace(n=1), dt=0.05)
+    assert eng.snapshot()["prefill_tokens"] == float(P)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: shared-block occupancy holds the shrink
+# ---------------------------------------------------------------------------
+
+
+def test_latency_policy_holds_shrink_while_prefix_cache_is_hot():
+    pol = LatencyPolicy(target_p95_ms=1000.0, min_nodes=1, max_nodes=4,
+                        hold_shared_above=0.75)
+
+    class V:
+        compute = (1, 2)
+
+    healthy = {"latency_p95_ms": 10.0, "queue_depth": 0.0}
+    plan = pol.decide(V, {**healthy, "kv_shared_occupancy": 0.9})
+    assert plan.target == 2 and "prefix cache hot" in plan.reason
+    assert pol.decide(V, {**healthy, "kv_shared_occupancy": 0.2}).target == 1
+    assert pol.decide(V, healthy).target == 1, "no signal -> old behavior"
+    # the default threshold must be reachable by the real signal, whose
+    # ceiling is shared-blocks/pool-size (the smoke bench peaks ~0.13)
+    dflt = LatencyPolicy(target_p95_ms=1000.0, min_nodes=1, max_nodes=4)
+    assert dflt.decide(V, {**healthy,
+                           "kv_shared_occupancy": 0.12}).target == 2

@@ -221,6 +221,77 @@ def test_block_manager_aliased_table_free_raises():
 
 
 # ---------------------------------------------------------------------------
+# scheduler bug sweep (ISSUE-4 satellites): stale victims, submit purity,
+# lane-occupied victims
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedPolicy:
+    """FIFO admission with an injected (possibly buggy) victim verdict —
+    the engine must survive whatever a policy hands back."""
+    name = "scripted"
+
+    def __init__(self, victim_fn):
+        self.victim_fn = victim_fn
+
+    def select(self, ready, now):
+        return ready[0] if ready else None
+
+    def victim(self, running, candidate, now):
+        return self.victim_fn(running, candidate, now)
+
+
+def test_stale_victim_verdict_is_backpressure_not_stopiteration():
+    """A victim that occupies no slot (retired this iteration, or a bogus
+    request) must read as "no victim" — a bare next() in _slot_of would
+    leak StopIteration out of the scheduler loop instead."""
+    ghost = _req(99)  # never submitted, occupies nothing
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, prompt_len=P, max_gen=8,
+                        block_size=8, kv_blocks=1 + 3,  # one request's worth
+                        policy=_ScriptedPolicy(lambda run, c, now: ghost),
+                        clock=ManualClock())
+    out = run_to_completion(eng, [_req(0, gen_len=4),
+                                  _req(1, gen_len=4, arrival_t=0.01)],
+                            dt=0.05)
+    assert sorted(out) == [0, 1], "backpressure, then normal admission"
+    assert eng.metrics.preemptions == 0
+
+
+def test_submit_derives_gen_len_without_mutating_requests():
+    """submit() must not write the max_tokens cap back into the caller's
+    Request — the CLI --verify re-serve path re-submits the same objects
+    and must see the declared gen_len unchanged (double-submit test)."""
+    r = _req(0, gen_len=6, sampling=SamplingParams(max_tokens=3))
+    out1 = run_to_completion(_engine(num_slots=1), [r], dt=0.05)
+    assert r.gen_len == 6, "caller state mutated by submit()"
+    assert len(out1[0]) == 3, "the cap still binds at admission"
+    r.tokens, r.t_admit, r.t_first_token, r.t_done = [], None, None, None
+    out2 = run_to_completion(_engine(num_slots=1), [r], dt=0.05)
+    assert out2 == out1 and r.gen_len == 6
+
+
+def test_preemption_never_targets_an_open_prefill_lane():
+    """Only decode slots are preemptible: a (buggy) verdict naming a
+    request that is mid-chunked-prefill would leave its _Lane writing
+    prompt chunks into a freed/reassigned slot. The engine must skip
+    lane-occupied victims and fall back to backpressure."""
+    a = _req(0, gen_len=4)
+    b = _req(1, gen_len=4, arrival_t=0.01)
+    # verdict fires only while nothing decodes — exactly the window where
+    # `a` is still prefilling (running excludes prefilling slots)
+    pol = _ScriptedPolicy(lambda run, c, now: None if run else a)
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, prompt_len=P, max_gen=8,
+                        block_size=8, kv_blocks=1 + 3, prefill_chunk=6,
+                        policy=pol, clock=ManualClock())
+    out = run_to_completion(eng, [a, b], dt=0.05)
+    assert eng.metrics.preemptions == 0, "lane-occupied victim was evicted"
+    assert sorted(out) == [0, 1]
+    solo = run_to_completion(_engine(num_slots=1, prefill_chunk=6),
+                             [_req(0, gen_len=4)], dt=0.05)
+    assert out[0] == solo[0], "the prefilling request was disturbed"
+
+
+# ---------------------------------------------------------------------------
 # SchedulerPolicy: FIFO / EDF selection, preemption, miss feedback
 # ---------------------------------------------------------------------------
 

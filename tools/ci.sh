@@ -40,6 +40,16 @@ assert s["edf"]["miss_rate"] == 0.0, s
 sam = r["sampling"]
 assert sam["reproducible"], "seeded sampling output drifted between runs"
 assert sam["sampled_vs_greedy"] >= 0.25, sam
+# prefix-cache floors (ISSUE-4): on a shared-system-prompt trace at an
+# equal KV budget, caching must cut prefill compute >= 2x and improve
+# TTFT p95 while staying token-exact vs cache-off (greedy and seeded) —
+# all sim-time deterministic, machine-speed-proof
+px = r["prefix"]
+assert px["token_exact"], "prefix caching lost greedy token-exactness"
+assert px["sampled_exact"], "prefix caching perturbed seeded sampling"
+assert px["prefill_reduction"] >= 2.0, px
+assert px["prefix_hit_rate"] >= 0.5, px
+assert px["ttft_p95_ms_on"] < px["ttft_p95_ms_off"], px
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
@@ -48,3 +58,7 @@ python -m repro.launch.serve --trace poisson --smoke --verify
 echo "== serving demo (seeded sampling + EDF + deadlines + verify) =="
 python -m repro.launch.serve --trace poisson --smoke --verify \
   --temperature 0.8 --top-k 40 --top-p 0.95 --sched edf --deadline 2.0
+
+echo "== serving demo (shared system prompts + prefix cache + verify) =="
+python -m repro.launch.serve --trace sysprompt --smoke --verify \
+  --block-size 4
