@@ -398,19 +398,22 @@ def bench_serve_sampling(smoke: bool = True):
     sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=11)
 
     def run_timed(sampling):
+        def trace():
+            return burst_trace(n_req, prompt_len=prompt_len,
+                               vocab_size=cfg.vocab_size, gen_len=gen,
+                               sampling=sampling, seed=3)
+
         eng = mk_engine(num_slots=4)
-        # warm every step shape outside the timed window
-        run_to_completion(eng, burst_trace(2, prompt_len=prompt_len,
-                                           vocab_size=cfg.vocab_size,
-                                           gen_len=2, sampling=sampling,
-                                           seed=9), dt=1e-4)
+        # warm with the exact timed workload so EVERY step shape compiles
+        # outside the timed window: step jits are shared across engines
+        # (serve/kv.py shared_jit), so a partial warm-up would compare a
+        # greedy pass warmed by earlier benches against a sampled pass
+        # still tracing mid-measurement
+        run_to_completion(eng, trace(), dt=1e-4)
         eng.metrics = ServingMetrics(window_s=1e9)
         eng.completed.clear()
-        trace = burst_trace(n_req, prompt_len=prompt_len,
-                            vocab_size=cfg.vocab_size, gen_len=gen,
-                            sampling=sampling, seed=3)
         t0 = time.perf_counter()
-        out = run_to_completion(eng, trace, dt=1e-4)
+        out = run_to_completion(eng, trace(), dt=1e-4)
         wall = time.perf_counter() - t0
         toks = sum(len(t) for t in out.values())
         return out, round(toks / wall, 1)
@@ -548,6 +551,117 @@ def dataclasses_replace(r):
     import dataclasses
     return dataclasses.replace(r, tokens=[], t_admit=None,
                                t_first_token=None, t_done=None)
+
+
+# -- multi-replica data plane: router + per-replica KV -------------------------
+#
+# Three claims recorded per commit (merged into BENCH_serve.json):
+#   scale-out: at an EQUAL TOTAL KV byte budget and equal per-node compute
+#     (slots = a node's decode lanes), 4 replicas beat 1 on decode
+#     tokens/s — the queue drains through 4 fused steps per sim tick
+#     instead of 1. This is the speedup the autoscaler's ScalePlans now
+#     actually buy (before the router, scaling only rescaled a simulated
+#     dt).
+#   routing: on a shared-system-prompt trace, prefix-affine routing keeps
+#     each template pinned to one replica's prefix cache and so achieves a
+#     strictly higher fleet hit rate than cache-blind least-occupancy
+#     routing (which smears every template across every replica's cache,
+#     paying the cold miss N times).
+#   exactness: per-request output is bit-identical across 1 vs 4 replicas
+#     and across both routing policies, greedy and seeded — the router
+#     moves requests, never tokens.
+
+
+def bench_serve_replicas(smoke: bool = True):
+    from repro.models import model as Mo
+    from repro.models.env import Env
+    from repro.serve import (SERVE_PLAN, ReplicaSet, ServingEngine,
+                             SamplingParams, ServingMetrics,
+                             run_to_completion, sysprompt_trace)
+
+    cfg = get_smoke("paper-demo")
+    params = Mo.init_params(jax.random.PRNGKey(0), cfg,
+                            Env(mesh=None, plan=SERVE_PLAN))
+    prompt_len, gen, bs = 16, 8, 4
+    prefix_len, n_prefixes = 12, 4  # 3 shared blocks x 4 tenant templates
+    n_req = 48 if smoke else 96
+    n_replicas, slots = 4, 4
+    # equal total KV bytes: per-replica worst case is slots * blocks_for
+    # (6 blocks each at these shapes); the single engine gets the whole
+    # fleet budget in one pool (+1 null block per pool is the only skew,
+    # and it favors the single engine)
+    per_replica_usable = slots * 6
+    fleet_total = n_replicas * per_replica_usable
+
+    def mk_trace(sampling=None):
+        return sysprompt_trace(n_req, 64.0, prompt_len=prompt_len,
+                               vocab_size=cfg.vocab_size,
+                               prefix_len=prefix_len, gen_len=gen,
+                               n_prefixes=n_prefixes, sampling=sampling,
+                               seed=0)
+
+    def run(engine, sampling=None):
+        if hasattr(engine, "replicas"):
+            for r in engine.replicas:
+                r.metrics = ServingMetrics(window_s=1e9)
+        else:
+            engine.metrics = ServingMetrics(window_s=1e9)
+        out = run_to_completion(engine, mk_trace(sampling), dt=0.05)
+        snap = engine.snapshot()
+        n_tok = sum(len(t) for t in out.values())
+        snap["tokens_per_s_sim"] = n_tok / max(engine.clock.now(), 1e-9)
+        return out, snap
+
+    def single(**kw):
+        return ServingEngine(cfg, params, num_slots=slots,
+                             prompt_len=prompt_len, max_gen=gen,
+                             block_size=bs, kv_blocks=fleet_total + 1, **kw)
+
+    def fleet(routing, **kw):
+        return ReplicaSet(cfg, params, replicas=n_replicas, routing=routing,
+                          num_slots=slots, prompt_len=prompt_len,
+                          max_gen=gen, block_size=bs,
+                          kv_blocks=per_replica_usable + 1, **kw)
+
+    out_1, snap_1 = run(single())
+    out_aff, snap_aff = run(fleet("prefix"))
+    out_occ, snap_occ = run(fleet("occupancy"))
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=17)
+    sam_1, _ = run(single(), sampling=sp)
+    sam_aff, _ = run(fleet("prefix"), sampling=sp)
+
+    speedup = (snap_aff["tokens_per_s_sim"]
+               / max(snap_1["tokens_per_s_sim"], 1e-9))
+    report = {
+        "replicas": {
+            "requests": n_req, "replicas": n_replicas,
+            "slots_per_replica": slots,
+            "kv_blocks_total": fleet_total,
+            "prefix_len": prefix_len, "n_prefixes": n_prefixes,
+            "tokens_per_s_1": round(snap_1["tokens_per_s_sim"], 2),
+            "tokens_per_s_4": round(snap_aff["tokens_per_s_sim"], 2),
+            "speedup_tokens_per_s": round(speedup, 2),
+            "ttft_p95_ms_1": round(snap_1.get("ttft_p95_ms", 0.0), 2),
+            "ttft_p95_ms_4": round(snap_aff.get("ttft_p95_ms", 0.0), 2),
+            "affine_hit_rate": round(snap_aff["prefix_hit_rate"], 3),
+            "occupancy_hit_rate": round(snap_occ["prefix_hit_rate"], 3),
+            "token_exact": bool(out_aff == out_1 and out_occ == out_1),
+            "sampled_exact": bool(sam_aff == sam_1),
+        }
+    }
+    _merge_bench_report(report)
+    rp = report["replicas"]
+    return [
+        ("serve_replicas_speedup", rp["speedup_tokens_per_s"],
+         f"4x{slots} slots vs 1x{slots} at {fleet_total} blocks "
+         f"exact={rp['token_exact']} sampled_exact={rp['sampled_exact']}"),
+        ("serve_replicas_hit_rate", rp["affine_hit_rate"],
+         f"prefix-affine vs occupancy={rp['occupancy_hit_rate']} (sim)"),
+    ]
+
+
+def bench_serve_replicas_full():
+    return bench_serve_replicas(smoke=False)
 
 
 # -- per-arch smoke step times (throughput harness) -------------------------------

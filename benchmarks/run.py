@@ -18,6 +18,8 @@ def main() -> None:
                                           bench_serve_paged_full,
                                           bench_serve_prefix,
                                           bench_serve_prefix_full,
+                                          bench_serve_replicas,
+                                          bench_serve_replicas_full,
                                           bench_serve_sampling,
                                           bench_serve_sampling_full,
                                           bench_serve_throughput,
@@ -32,13 +34,14 @@ def main() -> None:
     if args.smoke:
         benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput,
                    bench_serve_paged, bench_serve_sampling,
-                   bench_serve_prefix)
+                   bench_serve_prefix, bench_serve_replicas)
     else:
         benches = (bench_cluster_formation, bench_autoscale_response,
                    bench_mpi_job, bench_env_capture,
                    bench_interconnect_model, bench_serve_throughput_full,
                    bench_step_time, bench_serve_paged_full,
-                   bench_serve_sampling_full, bench_serve_prefix_full)
+                   bench_serve_sampling_full, bench_serve_prefix_full,
+                   bench_serve_replicas_full)
 
     print("name,us_per_call,derived")
     for bench in benches:

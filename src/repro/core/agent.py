@@ -31,7 +31,10 @@ class NodeAgent:
         self._running = False
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
-        self._serving_keys: set = set()  # serving metric names last published
+        # serving metric names last published, per source (this node's own
+        # snapshot plus any replica sources it publishes on behalf of)
+        self._serving_keys: Dict[str, set] = {}
+        self._plain_keys: set = set()  # step_time / queue_depth published
 
     # -- lifecycle ------------------------------------------------------------
     @property
@@ -54,9 +57,28 @@ class NodeAgent:
         return self.registry.heartbeat(HPC_SERVICE, self.node_id)
 
     def drain(self) -> None:
-        """Graceful leave (scale-down path)."""
+        """Graceful leave (scale-down path). Tombstones every metric key
+        this agent ever published — its own step_time/queue_depth and all
+        serving sources — *immediately*: registry KV entries have no TTL,
+        so without this a departed node's last readings linger forever and
+        keep skewing the fleet aggregates (the straggler policy's median,
+        the summed queue depth) long after the node left the catalog.
+
+        Known limitation: a crash() cannot clean up after itself, and a
+        node partitioned mid-drain loses its tombstone writes — in both
+        cases the ghost's last metrics DO linger (only the service
+        catalog is TTL-reaped, not metrics KV). A liveness-filtered
+        read_metrics / metrics-KV TTL is the open item for that case."""
         self._running = False
         self._stop_evt.set()
+        try:
+            for src in list(self._serving_keys):
+                self.retire_source(src)
+            for name in self._plain_keys:
+                self.registry.kv_put(f"metrics/{self.node_id}/{name}", "")
+            self._plain_keys = set()
+        except Exception:
+            pass  # partitioned mid-drain: keys linger (see docstring)
         try:
             self.registry.deregister(HPC_SERVICE, self.node_id)
         except Exception:
@@ -73,16 +95,24 @@ class NodeAgent:
             return
         self.registry.kv_put(f"metrics/{self.node_id}/step_time",
                              f"{step}:{seconds:.6f}")
+        self._plain_keys.add("step_time")
 
     def report_queue_depth(self, depth: int) -> None:
         if not self._running:
             return
         self.registry.kv_put(f"metrics/{self.node_id}/queue_depth", str(depth))
+        self._plain_keys.add("queue_depth")
 
-    def report_serving(self, metrics: Dict[str, float]) -> None:
+    def report_serving(self, metrics: Dict[str, float],
+                       source: Optional[str] = None) -> None:
         """Publish a ServingMetrics snapshot (queue depth, tokens/s,
         latency percentiles, slot occupancy) — the signals the serving-aware
         scaling policies consume.
+
+        `source` namespaces the keys (metrics/<source>/<name>) so one
+        agent can publish on behalf of several serving replicas (the
+        multi-replica head does); it defaults to this node's id. The
+        autoscaler aggregates across sources exactly as across nodes.
 
         Keys the snapshot omits (ServingMetrics' "no data in window"
         contract) are tombstoned with an empty value so stale readings
@@ -90,12 +120,23 @@ class NodeAgent:
         AutoScaler.read_metrics skips non-numeric values."""
         if not self._running:
             return
-        for name in self._serving_keys - set(metrics):
-            self.registry.kv_put(f"metrics/{self.node_id}/{name}", "")
+        src = source or self.node_id
+        seen = self._serving_keys.get(src, set())
+        for name in seen - set(metrics):
+            self.registry.kv_put(f"metrics/{src}/{name}", "")
         for name, val in metrics.items():
-            self.registry.kv_put(f"metrics/{self.node_id}/{name}",
+            self.registry.kv_put(f"metrics/{src}/{name}",
                                  f"{float(val):.6f}")
-        self._serving_keys = set(metrics)
+        self._serving_keys[src] = set(metrics)
+
+    def retire_source(self, source: str) -> None:
+        """A serving source left for good (replica drained + released):
+        tombstone ALL its keys *now*. Waiting for the next report_serving
+        diff can't work — a departed source never reports again — and
+        waiting for a TTL window to lapse leaves its last snapshot
+        skewing every fleet aggregate in the meantime."""
+        for name in self._serving_keys.pop(source, ()):  # idempotent
+            self.registry.kv_put(f"metrics/{source}/{name}", "")
 
     # -- threaded mode (examples/benchmarks; tests use tick()) -------------------
     def run_threaded(self, interval: Optional[float] = None) -> None:

@@ -197,12 +197,20 @@ class AutoScaler:
         depths = [v for k, v in out.items() if k.startswith("node_queue_depth/")]
         if depths:
             out["queue_depth"] = sum(depths)
-        # serving metrics (NodeAgent.report_serving snapshots): latencies
-        # take the worst node, throughput sums, occupancy averages
+        # serving metrics (NodeAgent.report_serving snapshots — one source
+        # per node, or one per serving *replica* when a ReplicaSet head
+        # publishes on the fleet's behalf): latencies take the worst
+        # source, so LatencyPolicy votes on the fleet-wide p95 (a single
+        # overloaded replica is a scale-up case even when the mean looks
+        # healthy); throughput and counters sum; occupancies average.
+        # replicas_live / replica_warmups come from the router source only
+        # (max = passthrough) — warmups flag cold prefix caches behind a
+        # recent scale-up, context for a transiently low fleet hit rate.
         for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
                           ("ttft_p95_ms", max), ("tokens_per_s", sum),
                           ("deadline_misses", sum), ("preemptions", sum),
-                          ("prefill_tokens", sum)):
+                          ("prefill_tokens", sum), ("replicas_live", max),
+                          ("replica_warmups", max)):
             vals = [v for k, v in out.items()
                     if k.startswith(f"node_{name}/")]
             if vals:

@@ -104,12 +104,15 @@ class VirtualCluster:
     # -- long-running serving (continuous batching; serve/scheduler.py) ------------------
     def serve(self, engine, requests=(), *, dt=0.05, autoscale: bool = True,
               max_steps: int = 100_000, on_step=None):
-        """Drive a ServingEngine to completion against this cluster.
+        """Drive a serving engine to completion against this cluster —
+        a single ServingEngine, or a multi-replica ReplicaSet
+        (serve/router.py), detected by its reconcile/metric_sources
+        surface.
 
         Each iteration: one scheduler step (admit / mixed-batch decode +
-        prefill lanes / retire), publish the engine's metrics snapshot
-        through the head node's agent into the registry KV, then pump the
-        control plane with autoscaling — so the installed policy
+        prefill lanes / retire), publish the engine's metrics through the
+        head node's agent into the registry KV, then pump the control
+        plane with autoscaling — so the installed policy
         (QueueDepthPolicy, LatencyPolicy, ...) resizes the cluster
         *mid-serve* from live load. The snapshot carries whatever load
         signals the engine's KVBackend reports (the paged BlockManager
@@ -117,10 +120,20 @@ class VirtualCluster:
         actually gates admission) plus deadline_misses, which an EDF
         scheduler feeds back into LatencyPolicy scale-up votes.
 
+        With a ReplicaSet the loop closes all the way through the data
+        plane: each replica's snapshot is published as its own metric
+        source (the autoscaler aggregates per replica), released replicas
+        have their keys tombstoned immediately, and after every pump the
+        fleet is reconciled to the applied plan's compute-node count —
+        a scale-up spawns a cold replica, a scale-down drains one for
+        real (serve/router.py has the lifecycle).
+
         `dt` is the simulated wall time of one decode step: a float, or a
-        callable (n_compute -> seconds) to model data-parallel speedup —
-        more nodes drain the queue faster, which is what lets the policy
-        scale back down. The engine must share this cluster's clock.
+        callable (n_compute -> seconds). With a single engine the callable
+        models data-parallel speedup (more nodes drain the shared queue
+        faster); a ReplicaSet's speedup is real — every live replica
+        decodes its own batch within the tick — so a constant dt is the
+        honest choice there. The engine must share this cluster's clock.
 
         Returns engine.results() (rid -> tokens).
         """
@@ -128,13 +141,23 @@ class VirtualCluster:
             "engine must be built with clock=cluster.clock"
         engine.submit(requests)
         head_agent = self.sim.nodes[self.head_id].agent
+        reconcile = getattr(engine, "reconcile", None)
+        sources = getattr(engine, "metric_sources", None)
         steps = 0
         while not engine.drained() and steps < max_steps:
             snap = engine.step()
-            head_agent.report_serving(snap)
+            if sources is not None:
+                for src, m in sources().items():
+                    head_agent.report_serving(m, source=src)
+                for src in engine.pop_retired_sources():
+                    head_agent.retire_source(src)
+            else:
+                head_agent.report_serving(snap)
             n = max(len(self.current_view().compute), 1)
             step_dt = dt(n) if callable(dt) else dt
             self.pump(dt=step_dt, autoscale=autoscale)
+            if reconcile is not None:
+                reconcile(max(len(self.current_view().compute), 1))
             if on_step is not None:
                 on_step(steps, snap, self)
             steps += 1

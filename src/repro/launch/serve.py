@@ -30,9 +30,9 @@ from repro.core.clock import ManualClock
 from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
-from repro.serve import (SERVE_PLAN, SamplingParams, ServingEngine,
-                         burst_trace, make_scheduler_policy, poisson_trace,
-                         run_to_completion, sysprompt_trace)
+from repro.serve import (SERVE_PLAN, SamplingParams, burst_trace,
+                         make_scheduler_policy, make_serving_engine,
+                         poisson_trace, run_to_completion, sysprompt_trace)
 
 
 def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan,
@@ -120,28 +120,39 @@ def _trace_of(args, cfg):
                          sampling=sampling, seed=args.seed)
 
 
-def _make_engine(args, cfg, params, *, num_slots=None, clock=None):
+def _make_engine(args, cfg, params, *, num_slots=None, replicas=None,
+                 clock=None):
+    """A ServingEngine (replicas == 1) or a Router + ReplicaSet data
+    plane. --kv-blocks is per replica, so a fleet runs at replicas x that
+    total budget — pass total/replicas to compare at equal KV bytes."""
     sched = {"preemptive": True} if (args.sched == "edf"
                                      and args.edf_preempt) else {}
-    return ServingEngine(cfg, params, num_slots=num_slots or args.slots,
-                         prompt_len=args.prompt_len, max_gen=args.gen_max,
-                         kv=args.kv, block_size=args.block_size,
-                         kv_blocks=args.kv_blocks,
-                         prefix_cache=args.prefix_cache == "on",
-                         prefill_chunk=args.prefill_chunk,
-                         policy=make_scheduler_policy(args.sched, **sched),
-                         clock=clock)
+    return make_serving_engine(
+        cfg, params,
+        replicas=args.replicas if replicas is None else replicas,
+        routing=args.routing, drain_mode=args.drain,
+        num_slots=num_slots or args.slots,
+        prompt_len=args.prompt_len, max_gen=args.gen_max,
+        kv=args.kv, block_size=args.block_size,
+        kv_blocks=args.kv_blocks,
+        prefix_cache=args.prefix_cache == "on",
+        prefill_chunk=args.prefill_chunk,
+        policy=make_scheduler_policy(args.sched, **sched),
+        clock=clock)
 
 
 def run_trace(args, cfg, params) -> int:
     policy = _build_policy(args)
     image = ClusterImage.build(f"{cfg.name}-serve", cfg, SERVE_PLAN, "serve")
-    cluster = VirtualCluster(n_compute=args.nodes, image=image, policy=policy,
+    n0 = max(args.nodes, args.replicas)  # fleet replicas track nodes 1:1
+    cluster = VirtualCluster(n_compute=n0, image=image, policy=policy,
                              cooldown_s=args.cooldown)
     print("serving replicas register to the catalog:\n" + cluster.hostfile)
 
     engine = _make_engine(args, cfg, params, clock=cluster.clock)
-    print(f"{engine.pool.describe()}, chunked prefill="
+    multi = args.replicas > 1
+    plane = engine.describe() if multi else engine.pool.describe()
+    print(f"{plane}, chunked prefill="
           f"{engine.prefill_chunk or 'off'}, scheduler={engine.policy.name}, "
           f"sampling={'greedy' if args.temperature <= 0 else _sampling_of(args)}")
     trace = _trace_of(args, cfg)
@@ -152,26 +163,39 @@ def run_trace(args, cfg, params) -> int:
         n = len(c.current_view().compute)
         if not sizes or sizes[-1][1] != n:
             sizes.append((c.clock.now(), n))
+            extra = (f"  replicas={snap['replicas_live']:.0f}"
+                     if multi else "")
             print(f"  t={c.clock.now():7.2f}s  nodes={n}  "
                   f"queue={snap['queue_depth']:.0f}  "
                   f"p95={snap.get('latency_p95_ms', 0.0):.0f}ms  "
-                  f"occ={snap['slot_occupancy']:.2f}")
+                  f"occ={snap['slot_occupancy']:.2f}{extra}")
 
-    # one decode step costs step_time on one node; N data-parallel serving
-    # replicas drain the shared queue ~N x faster (sim speedup model)
-    dt = lambda n: args.step_time / max(n, 1)
+    if multi:
+        # the fleet's speedup is real — every live replica decodes its own
+        # batch within the tick — so one step costs step_time flat
+        dt = args.step_time
+    else:
+        # one decode step costs step_time on one node; N data-parallel
+        # serving replicas drain the shared queue ~N x faster (the PR-1
+        # sim speedup model, kept for the single-engine baseline)
+        dt = lambda n: args.step_time / max(n, 1)
     t0 = time.time()
     out = cluster.serve(engine, trace, dt=dt, on_step=on_step)
     wall = time.time() - t0
 
-    peak = max((n for _, n in sizes), default=args.nodes)
+    peak = max((n for _, n in sizes), default=n0)
     final = len(cluster.current_view().compute)
     n_tok = sum(len(t) for t in out.values())
     snap = engine.snapshot()
     print(f"served {len(out)}/{len(trace)} requests, {n_tok} tokens "
           f"in {engine.clock.now():.2f}s sim ({wall:.2f}s wall)")
-    print(f"autoscale: start={args.nodes} peak={peak} final={final} "
+    print(f"autoscale: start={n0} peak={peak} final={final} "
           f"({len(cluster.scaler.history)} actions)")
+    if multi:
+        print(f"fleet: replicas live={snap['replicas_live']:.0f} "
+              f"cold warmups={snap['replica_warmups']:.0f} "
+              f"drained+released={len(engine.released)} "
+              f"routing={engine.routing.name}")
     print(f"p50={snap.get('latency_p50_ms', 0.0):.0f}ms "
           f"p95={snap.get('latency_p95_ms', 0.0):.0f}ms "
           f"tokens/s(sim)={snap['tokens_per_s']:.1f}")
@@ -183,7 +207,20 @@ def run_trace(args, cfg, params) -> int:
 
     rc = 0
     if args.verify:
-        if args.temperature > 0:
+        if multi:
+            # the multi-replica acceptance bar: the same trace through a
+            # single zero-router engine must emit bit-identical tokens —
+            # routing, replica count, and any drain events along the way
+            # are invisible in the output (greedy and seeded alike)
+            eng2 = _make_engine(args, cfg, params, replicas=1,
+                                clock=ManualClock())
+            out2 = run_to_completion(eng2, _trace_of(args, cfg),
+                                     dt=args.step_time)
+            ok = out == out2
+            print(f"verify {args.replicas} replicas "
+                  f"({engine.routing.name} routing) vs 1: "
+                  f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
+        elif args.temperature > 0:
             # seeded sampling has no one-shot oracle; verify the v2
             # contract instead: the same trace on a fresh engine with a
             # different slot count (different lane placements, different
@@ -250,7 +287,23 @@ def main() -> int:
     ap.add_argument("--rate", type=float, default=16.0,
                     help="poisson arrival rate, requests/s (sim time)")
     ap.add_argument("--slots", type=int, default=4,
-                    help="KV-cache slots (max concurrent decodes)")
+                    help="KV-cache slots per replica (max concurrent "
+                    "decodes each)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas, each with its own KV pool and "
+                    "prefix cache; a Router admits requests across them "
+                    "and the autoscaler drains/spawns them live (1 = the "
+                    "zero-router single-engine data plane)")
+    ap.add_argument("--routing", default="occupancy",
+                    choices=("occupancy", "prefix"),
+                    help="replica routing policy: least committed KV, or "
+                    "prefix-affine (route to the replica whose prefix "
+                    "cache holds the prompt's longest prefix)")
+    ap.add_argument("--drain", default="finish",
+                    choices=("finish", "preempt"),
+                    help="scale-down drain mode: let a draining replica's "
+                    "requests finish, or restart-preempt them back to the "
+                    "router queue (bit-identical either way)")
     ap.add_argument("--kv", default="paged", choices=("paged", "slot"),
                     help="paged block-table cache vs PR-1 slot reservation")
     ap.add_argument("--block-size", type=int, default=16,

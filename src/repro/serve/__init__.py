@@ -25,9 +25,18 @@ from repro.serve.request import (  # noqa: F401
     poisson_trace,
     sysprompt_trace,
 )
+from repro.serve.router import (  # noqa: F401
+    LeastOccupancyRouting,
+    PrefixAffineRouting,
+    ReplicaSet,
+    RoutingPolicy,
+    make_routing_policy,
+    make_serving_engine,
+)
 from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     SERVE_PLAN,
+    ReplicaEngine,
     ServingEngine,
     run_to_completion,
 )

@@ -23,6 +23,15 @@ invariant and RoPE is applied at write time, so the ring never needs
 unscrambling (this is what lets recurrentgemma-style archs serve here while
 the slot pool still rejects them).
 
+Reclaim ordering is hit-count-weighted: when the free list runs dry, the
+retained (refcount-0, still-registered) block with the fewest lifetime
+prefix-cache hits is unregistered first, LRU insertion order breaking
+ties — a hot system prompt outlives a parade of one-off templates. A
+`max_shared_fraction` residency cap bounds how much of the pool the
+prefix index may retain at all, so one tenant's template churn cannot
+monopolize a replica's pool (blocks past the cap simply never register;
+they free normally at retirement).
+
 Prefix caching (copy-on-write sharing): real multi-user traffic is
 dominated by shared prompt prefixes (system prompts, few-shot templates).
 Full prompt blocks are content-addressed by a per-block hash *chain*
@@ -55,6 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
+from repro.serve.kv import shared_jit
 
 Pytree = Any
 
@@ -88,7 +98,8 @@ class BlockManager:
     def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
                  prompt_len: int, max_gen: int, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 max_shared_fraction: float = 1.0):
         if cfg.family == "vlm" or cfg.is_encdec:
             raise ValueError(
                 f"{cfg.name}: continuous batching supports decoder-only "
@@ -144,12 +155,19 @@ class BlockManager:
         # not content-addressable, so those archs keep prefix_cache off)
         self.prefix_cache = (bool(prefix_cache) and self.has_global
                              and self.chunk_prefill_ok)
+        if not 0.0 <= max_shared_fraction <= 1.0:
+            raise ValueError(f"max_shared_fraction must be in [0, 1], got "
+                             f"{max_shared_fraction}")
+        self.max_shared_fraction = float(max_shared_fraction)
         self._ref = np.zeros(self.num_blocks, np.int64)  # table references
         self._cached: Dict[bytes, int] = {}   # prefix-chain hash -> block id
         self._hash_of: Dict[int, bytes] = {}  # registered block -> its hash
+        self._hits: Dict[int, int] = {}  # registered block -> cache hits
         # registered blocks whose last reference dropped: still KV-valid,
-        # still admission capacity, reclaimed LRU when the free list is dry
-        self._reclaim: Dict[int, None] = {}
+        # still admission capacity. Values are insertion sequence numbers:
+        # reclaim pops the fewest-hits entry, LRU breaking ties.
+        self._reclaim: Dict[int, int] = {}
+        self._reclaim_seq = 0
         self._hit_tokens = 0     # prompt tokens served from the cache
         self._lookup_tokens = 0  # prompt tokens probed at admission
         self._cow_copies = 0
@@ -158,18 +176,28 @@ class BlockManager:
         # (can_admit, admit's assert, admit) — don't re-hash the prompt
         # each time. Invalidated whenever the index changes.
         self._probe_memo: Optional[Tuple[bytes, tuple]] = None
-        self._insert = jax.jit(Mo.make_paged_insert(cfg, bs),
-                               donate_argnums=(0,))
-        self._copy = jax.jit(Mo.make_paged_copy(cfg), donate_argnums=(0,))
-        self._evict = jax.jit(Mo.make_paged_evict(cfg), donate_argnums=(0,))
-        self._read = jax.jit(Mo.make_paged_read(cfg))
+        # shared_jit: N replicas built from the same config share these
+        # compilations instead of re-tracing identical closures per pool
+        self._insert = shared_jit(("paged_insert", cfg, bs),
+                                  lambda: Mo.make_paged_insert(cfg, bs),
+                                  donate_argnums=(0,))
+        self._copy = shared_jit(("paged_copy", cfg),
+                                lambda: Mo.make_paged_copy(cfg),
+                                donate_argnums=(0,))
+        self._evict = shared_jit(("paged_evict", cfg),
+                                 lambda: Mo.make_paged_evict(cfg),
+                                 donate_argnums=(0,))
+        self._read = shared_jit(("paged_read", cfg),
+                                lambda: Mo.make_paged_read(cfg))
         # two fused-step variants: an all-greedy batch runs the pure-argmax
         # step (no mask/Gumbel work); any sampling row selects the sampler
         self._decode = {
-            s: jax.jit(St.make_paged_decode_step(cfg, env,
-                                                 prompt_len=prompt_len,
-                                                 sample=s),
-                       donate_argnums=(1,))
+            s: shared_jit(
+                ("paged_decode", cfg, env.plan, env.mesh, prompt_len, s),
+                lambda s=s: St.make_paged_decode_step(cfg, env,
+                                                      prompt_len=prompt_len,
+                                                      sample=s),
+                donate_argnums=(1,))
             for s in (False, True)}
 
     # -- sizing / admission math -------------------------------------------
@@ -345,34 +373,46 @@ class BlockManager:
 
     def _attach(self, slot: int, j: int, bid: int) -> None:
         """Point table entry j at shared block `bid` (incref; resurrect it
-        from the reclaim list if its last holder already retired)."""
+        from the reclaim list if its last holder already retired). Every
+        attach is a cache hit — the count is what reclaim ordering
+        weighs."""
         if self._ref[bid] == 0:
             del self._reclaim[bid]
         self._ref[bid] += 1
+        self._hits[bid] = self._hits.get(bid, 0) + 1
         self.table[slot, j] = bid
+
+    def _unregister_coldest(self) -> int:
+        """Pop the reclaimable block with the fewest lifetime cache hits
+        (LRU insertion order breaks ties — pure LRU is the zero-hit
+        degenerate case) and drop its prefix-index entry."""
+        bid = min(self._reclaim,
+                  key=lambda b: (self._hits.get(b, 0), self._reclaim[b]))
+        del self._reclaim[bid]
+        del self._cached[self._hash_of.pop(bid)]
+        self._hits.pop(bid, None)
+        self._probe_memo = None  # the index shrank; memoized hits may lie
+        return bid
 
     def _take_block(self) -> int:
         """A fresh physical block: the free list first, else reclaim the
-        LRU cache-retained block (unregistering its prefix entry)."""
+        coldest cache-retained block (hit-count-weighted, LRU ties)."""
         if self._free_blocks:
             bid = self._free_blocks.popleft()
             self._free_block_set.discard(bid)
             return bid
-        bid = next(iter(self._reclaim))  # LRU: oldest insertion
-        del self._reclaim[bid]
-        del self._cached[self._hash_of.pop(bid)]
-        self._probe_memo = None  # the index shrank; memoized hits may lie
-        return bid
+        return self._unregister_coldest()
 
     def _release(self, bid: int) -> bool:
         """Drop one reference to `bid`; returns True iff the block went
         back to the free list (registered blocks are retained, reclaimable
-        LRU, so a later identical prompt still hits)."""
+        coldest-first, so a later identical prompt still hits)."""
         self._ref[bid] -= 1
         if self._ref[bid] > 0:
             return False
         if bid in self._hash_of:
-            self._reclaim[bid] = None
+            self._reclaim[bid] = self._reclaim_seq
+            self._reclaim_seq += 1
             return False
         self._free_blocks.append(bid)
         self._free_block_set.add(bid)
@@ -477,12 +517,28 @@ class BlockManager:
         s.cur_len = self.prompt_len
         s.tokens_done = 1
         if self.prefix_cache:
+            cap = int(self.max_shared_fraction * self.usable_blocks)
             for j, h in enumerate(s.hashes):
-                if h not in self._cached:
-                    bid = int(self.table[slot, j])
-                    self._cached[h] = bid
-                    self._hash_of[bid] = h
-                    self._probe_memo = None  # the index grew; re-probe
+                if h in self._cached:
+                    continue
+                if len(self._hash_of) >= cap:
+                    # residency cap: the prefix index may not retain more
+                    # than max_shared_fraction of the pool. Make room by
+                    # unregistering the coldest *reclaimable* entry; if
+                    # every registered block is still referenced, this
+                    # block simply stays private (freed normally at
+                    # retirement) — one tenant's template churn cannot
+                    # monopolize the pool.
+                    if not self._reclaim:
+                        continue
+                    freed = self._unregister_coldest()
+                    self._free_blocks.append(freed)
+                    self._free_block_set.add(freed)
+                bid = int(self.table[slot, j])
+                self._cached[h] = bid
+                self._hash_of[bid] = h
+                self._hits.setdefault(bid, 0)
+                self._probe_memo = None  # the index grew; re-probe
         return s
 
     # -- the fused step -------------------------------------------------------
@@ -576,7 +632,53 @@ class BlockManager:
         s = self._slots[slot]
         return 0 if s is None else s.cached_len
 
+    def probe_prefix(self, prompt) -> int:
+        """Prompt positions an admission would serve from the cache right
+        now (read-only). The router's prefix-affine policy probes every
+        replica's pool with this before choosing one."""
+        if prompt is None:
+            return 0
+        return self._probe(prompt)[2]
+
+    def release(self) -> None:
+        """Retire the pool (replica scale-down). Verifies the free-list
+        accounting returns to empty — every usable block either free or
+        cache-retained with zero references, no dangling reservations —
+        then drops the device cache pytree. Leaks raise: a drained
+        replica that cannot account for all its blocks is exactly the bug
+        refcounting must never hide."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if live:
+            raise RuntimeError(f"release with occupied slots {live}")
+        if self._reserved_total:
+            raise RuntimeError(f"release leaked {self._reserved_total} "
+                               "reserved blocks")
+        accounted = len(self._free_blocks) + len(self._reclaim)
+        if accounted != self.usable_blocks:
+            raise RuntimeError(
+                f"release leaked {self.usable_blocks - accounted} blocks "
+                f"({len(self._free_blocks)} free + {len(self._reclaim)} "
+                f"reclaimable of {self.usable_blocks})")
+        if int(np.count_nonzero(self._ref)):
+            held = np.flatnonzero(self._ref).tolist()
+            raise RuntimeError(f"release with referenced blocks {held}")
+        self.caches = None
+
     # -- reporting ----------------------------------------------------------
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Cumulative prompt tokens served from the cache — the fleet
+        rollup sums these raw counts across replicas (a mean of
+        per-replica *ratios* would let zero-traffic replicas drag the
+        fleet rate down)."""
+        return self._hit_tokens
+
+    @property
+    def prefix_lookup_tokens(self) -> int:
+        """Cumulative prompt tokens probed at admission (the hit-rate
+        denominator)."""
+        return self._lookup_tokens
+
     @property
     def prefix_hit_rate(self) -> float:
         """Cumulative fraction of probed prompt tokens served from the

@@ -38,14 +38,39 @@ only place a cache-kind string is interpreted.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.env import Env
 
 Pytree = Any
+
+# Backend step/insert/prefill functions are pure closures over (cfg, plan,
+# mesh): two replicas built from the same config share compilations. Keyed
+# on the frozen config dataclasses themselves, so a distinct config can
+# never collide; a non-hashable key (exotic mesh) falls back to a private
+# jit. Donation is per-call, so sharing the callable is safe.
+_JIT_CACHE: Dict[Tuple, Any] = {}
+
+
+def shared_jit(key: Tuple[Hashable, ...], builder: Callable[[], Callable],
+               **jit_kw):
+    """jax.jit(builder()) memoized on `key` — the multi-replica data plane
+    builds N backends per fleet, and without this each replica re-traces
+    identical step functions."""
+    try:
+        hash(key)
+    except TypeError:  # pragma: no cover - unhashable config/mesh
+        return jax.jit(builder(), **jit_kw)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(builder(), **jit_kw)
+        _JIT_CACHE[key] = fn
+    return fn
 
 
 @runtime_checkable
@@ -69,6 +94,17 @@ class KVBackend(Protocol):
     def cached_prefix_len(self, slot: int) -> int:
         """Prompt positions admit() served from a prefix cache (0 when the
         backend has none) — the engine's lanes start at this position."""
+        ...
+    def probe_prefix(self, prompt) -> int:
+        """Prompt positions an admission *would* serve from this backend's
+        prefix cache right now (0 on cache-less backends). Read-only — the
+        router's prefix-affine policy probes every replica with it before
+        choosing one."""
+        ...
+    def release(self) -> None:
+        """Retire the backend (replica scale-down): verify the free-list
+        accounting returns to empty — every block/slot back, no dangling
+        reservations; leaks raise — then drop the device cache pytree."""
         ...
     def insert(self, slot: int, rid: int, prefill_caches: Pytree,
                gen_len: int) -> None: ...
@@ -107,7 +143,8 @@ class KVBackend(Protocol):
 def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
                     prompt_len: int, max_gen: int, block_size: int = 16,
                     kv_blocks: Optional[int] = None,
-                    prefix_cache: bool = True) -> KVBackend:
+                    prefix_cache: bool = True,
+                    max_shared_fraction: float = 1.0) -> KVBackend:
     """The one cache-kind dispatch in the serving plane."""
     from repro.serve.blocks import BlockManager
     from repro.serve.slots import SlotPool
@@ -116,7 +153,8 @@ def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
         return BlockManager(cfg, env, num_slots=num_slots,
                             prompt_len=prompt_len, max_gen=max_gen,
                             block_size=block_size, num_blocks=kv_blocks,
-                            prefix_cache=prefix_cache)
+                            prefix_cache=prefix_cache,
+                            max_shared_fraction=max_shared_fraction)
     if kind == "slot":
         return SlotPool(cfg, env, num_slots=num_slots, prompt_len=prompt_len,
                         max_gen=max_gen)

@@ -27,7 +27,7 @@ load is just another signal the reconcile loop reads.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -84,14 +84,26 @@ class ServingMetrics:
             while dq and dq[0][0] < horizon:
                 dq.popleft()
 
+    def window_samples(self, now: float) -> Tuple[List[float], List[float]]:
+        """(latency_s, ttft_s) samples still inside the window. Fleet
+        rollups merge these across replicas so the published percentiles
+        are true fleet percentiles over every completion, not a
+        percentile-of-percentiles."""
+        self._trim(now)
+        return ([s for _, s in self._latency], [s for _, s in self._ttft])
+
     # -- snapshot -----------------------------------------------------------
-    def snapshot(self, now: float, *, queue_depth: int,
+    def snapshot(self, now: float, *, queue_depth: Optional[int],
                  slot_occupancy: float,
                  **backend_metrics: float) -> Dict[str, float]:
         """Latency keys are OMITTED until a request completes (resp. emits a
         first token) inside the window — publishing 0ms for "no data" would
         read as excellent latency and make LatencyPolicy scale down
         mid-flight (its no-data branch keys off the absence).
+
+        queue_depth=None omits the key entirely: a replica inside a
+        ReplicaSet holds no arrival queue (the router owns it), and
+        publishing 0 per replica would multiply the fleet's summed depth.
 
         **backend_metrics passes the KVBackend's own load signals through
         verbatim (ServingEngine.snapshot feeds pool.metrics() here)."""
@@ -105,13 +117,14 @@ class ServingMetrics:
             if span <= 0.0:
                 span = self.window_s
         out = {
-            "queue_depth": float(queue_depth),
             "tokens_per_s": toks / span if toks else 0.0,
             "slot_occupancy": slot_occupancy,
             "deadline_misses": float(self.deadline_misses),
             "preemptions": float(self.preemptions),
             "prefill_tokens": float(self.prefill_tokens),
         }
+        if queue_depth is not None:
+            out["queue_depth"] = float(queue_depth)
         for name, val in backend_metrics.items():
             out[name] = float(val)
         lats = [s for _, s in self._latency]

@@ -1,6 +1,23 @@
-"""ServingEngine — continuous batching over a pluggable KVBackend.
+"""ReplicaEngine + ServingEngine — continuous batching over a KVBackend.
 
-One scheduler iteration (step()):
+The serving data plane is split into two layers:
+
+`ReplicaEngine` is ONE serving replica: a KVBackend (its own block pool,
+its own prefix cache), the in-flight lane/slot bookkeeping, the fused
+decode step, and its own ServingMetrics. It has no arrival queue and no
+SchedulerPolicy — it only answers "can you take this request?"
+(`can_accept`), commits admissions (`admit`), and runs decode ticks
+(`step_decode`). It also owns the drain lifecycle real scale-down needs:
+a draining replica accepts no new work, finishes (or restart-preempts)
+what it holds, and `release()` returns its pool with leak checking.
+
+`ServingEngine` is the single-replica composition kept as the stable
+public surface: a RequestQueue + SchedulerPolicy admission loop over one
+ReplicaEngine. The multi-replica composition is `serve/router.py`'s
+`ReplicaSet`: a Router front-end owning the global queue, admitting each
+request to one of N ReplicaEngines via a RoutingPolicy.
+
+One scheduler iteration (ServingEngine.step()):
 
   1. admit: the SchedulerPolicy (serve/policy.py) picks which arrived
      request admits next (FIFO, EDF, ...) while the KVBackend can reserve
@@ -27,12 +44,10 @@ The engine never re-jits per admission; step shapes are pinned to
 (num_slots,) and (num_slots + prefill_chunk,) rows. Greedy decoding keeps
 output token-for-token equal to the one-shot serve_batch baseline on every
 backend; seeded sampling is reproducible and lane-placement-invariant —
-tests/test_serving.py holds all of it.
-
-The engine talks to the cache exclusively through the KVBackend protocol
-(serve/kv.py) — it does not know whether KV lives in reserved slots or
-paged blocks. kv="slot" keeps the PR-1 slot-reserved pool as the measured
-baseline; kv="paged" (default) is the BlockManager.
+tests/test_serving.py holds all of it. Every row is computed independently
+(each attends over its own KV at its own depth), which is what makes
+per-request output invariant to *which replica* serves it — the property
+the multi-replica exactness tests pin down.
 
 The clock is injected: tests and the simulated cluster drive a ManualClock
 (deterministic arrival replay); nothing here sleeps.
@@ -50,7 +65,7 @@ from repro.configs.base import ModelConfig, ParallelPlan
 from repro.core.clock import Clock, ManualClock
 from repro.launch import steps as St
 from repro.models.env import Env
-from repro.serve.kv import KVBackend, make_kv_backend
+from repro.serve.kv import KVBackend, make_kv_backend, shared_jit
 from repro.serve.metrics import ServingMetrics
 from repro.serve.policy import FIFOPolicy, SchedulerPolicy
 from repro.serve.request import Request, RequestQueue
@@ -87,30 +102,38 @@ class _Lane:
     last_row: int = 0  # row of the chunk's final token (first-token source)
 
 
-class ServingEngine:
+class ReplicaEngine:
+    """One serving replica: KVBackend + lanes + fused step + metrics.
+
+    Admission *order* lives above this class (ServingEngine's policy loop
+    for one replica; ReplicaSet's router for a fleet); the replica only
+    commits admissions it has capacity for and steps its own batch."""
+
     def __init__(self, cfg: ModelConfig, params: Pytree, *,
+                 name: str = "replica-0",
                  num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
                  kv="paged", block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
+                 max_shared_fraction: float = 1.0,
                  prefill_chunk: Optional[int] = None,
-                 policy: Optional[SchedulerPolicy] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
                  metrics_window_s: float = 10.0):
         self.cfg = cfg
         self.params = params
+        self.name = name
         self.prompt_len = prompt_len
         self.max_gen = max_gen
         self.clock = clock or ManualClock()
-        self.policy: SchedulerPolicy = policy or FIFOPolicy()
         env = Env(mesh=mesh, plan=plan or SERVE_PLAN)
         self.env = env
         if isinstance(kv, str):
             self.pool: KVBackend = make_kv_backend(
                 kv, cfg, env, num_slots=num_slots, prompt_len=prompt_len,
                 max_gen=max_gen, block_size=block_size, kv_blocks=kv_blocks,
-                prefix_cache=prefix_cache)
+                prefix_cache=prefix_cache,
+                max_shared_fraction=max_shared_fraction)
         else:  # a pre-built backend (custom implementations plug in here)
             self.pool = kv
             num_slots = self.pool.num_slots
@@ -124,12 +147,15 @@ class ServingEngine:
                 "state is sequential over the prompt; ring writes wrap "
                 "within a chunk; the slot pool has no per-row tables)")
         self.prefill_chunk = int(prefill_chunk)
-        self.queue = RequestQueue()
         self.metrics = ServingMetrics(window_s=metrics_window_s)
-        self._prefill = jax.jit(St.make_prefill_step(cfg, env))
+        self._prefill = shared_jit(
+            ("prefill", cfg, env.plan, env.mesh),
+            lambda: St.make_prefill_step(cfg, env))
         # classic admissions sample their first token from the prefill
         # logits with the same fused sample math (position 0)
-        self._sample_first = jax.jit(St.make_sample_fn(cfg, prompt_len))
+        self._sample_first = shared_jit(
+            ("sample_first", cfg, prompt_len),
+            lambda: St.make_sample_fn(cfg, prompt_len))
         self._lanes: List[_Lane] = []
         # device [T] int32: last step's fused sample/argmax. Seeded at
         # num_slots so the step's (rows, prev-rows) shape pair cycles
@@ -141,47 +167,170 @@ class ServingEngine:
         self._inflight: Dict[int, Request] = {}  # rid -> request
         self.completed: List[Request] = []
         self.decode_steps = 0
+        self.draining = False
 
     # -- state -----------------------------------------------------------------
     @property
     def busy(self) -> bool:
         return bool(self._inflight)
 
-    def pending(self) -> int:
-        return len(self.queue)
+    def prompt_arg(self, req: Request):
+        """The prompt to hand the backend's admission probes: chunked
+        admissions pass it so a prefix-caching backend can attach shared
+        blocks (classic batch-1 prefill scatters the whole prompt and
+        cannot share)."""
+        return req.prompt if self.prefill_chunk else None
 
-    def drained(self) -> bool:
-        return not self.busy and not self.pending()
+    def admission_room(self) -> bool:
+        """Lane-budget gate: open lanes only while the step's token budget
+        can still reach a new prompt (bounds admitted-but-starved lanes
+        ~1). Classic (non-chunked) replicas always have room — the
+        backend's can_admit is the only gate."""
+        if not self.prefill_chunk:
+            return True
+        return (sum(self.prompt_len - l.pos for l in self._lanes)
+                < self.prefill_chunk)
 
-    def submit(self, requests: Sequence[Request]) -> None:
-        """Validate and enqueue. Never mutates the caller's Requests: the
-        admitted generation budget (gen_len capped by max_tokens) is
-        derived at admission via Request.eff_gen_len, so re-submitting the
-        same objects (the CLI --verify re-serve path) sees the declared
-        gen_len unchanged."""
-        for r in requests:
-            if len(r.prompt) != self.prompt_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.prompt)} != "
-                    f"engine prompt_len {self.prompt_len} (pad the trace)")
-            if r.eff_gen_len > self.max_gen:
-                raise ValueError(
-                    f"request {r.rid}: gen_len {r.eff_gen_len} > "
-                    f"engine max_gen {self.max_gen}")
-            self.queue.push(r)
+    def can_accept(self, req: Request) -> bool:
+        """Could this replica commit `req` right now? (Routing predicate —
+        admission-accurate because admit() takes its reservations
+        immediately, so successive calls within one tick stay honest.)"""
+        return (not self.draining and self.admission_room()
+                and self.pool.can_admit(req.eff_gen_len,
+                                        prompt=self.prompt_arg(req)))
 
-    # -- scheduler iteration ------------------------------------------------------
-    def step(self) -> Dict[str, float]:
-        """Admit arrivals (policy order), run one fused decode step over
-        the mixed batch (+ prefill lanes), retire finished requests.
-        Returns the metrics snapshot (what a node would publish)."""
+    # -- admission commit ---------------------------------------------------
+    def admit(self, req: Request, now: float) -> None:
+        """Commit one admission (caller already took it off its queue)."""
+        req.t_admit = now
+        self._inflight[req.rid] = req
+        if self.prefill_chunk:
+            slot = self.pool.admit(req.rid, req.eff_gen_len,
+                                   prefilling=True, prompt=req.prompt)
+            # cached prefix positions never ride a lane: start at the
+            # first uncached token (at most prompt_len - 1 — the last
+            # prompt token always runs to emit the first token)
+            self._lanes.append(_Lane(
+                slot=slot, req=req,
+                pos=self.pool.cached_prefix_len(slot)))
+        else:
+            self._admit_classic(
+                self.pool.admit(req.rid, req.eff_gen_len), req, now)
+
+    def _admit_classic(self, slot: int, req: Request, now: float) -> None:
+        """Batch-1 prefill + cache insert (the non-chunked path). The first
+        token is sampled from the prefill logits at position 0 — greedy
+        requests take the plain argmax, bit-identical to the pre-v2 engine
+        — and fed to the same step's decode via the fresh-token path."""
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+        self.metrics.record_prefill_tokens(self.prompt_len)
+        self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
+        if req.sampling.greedy:
+            first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        else:
+            mi = np.zeros((St.META_I_ROWS, 1), np.int32)
+            mf = np.zeros((St.META_F_ROWS, 1), np.float32)
+            mi[St.ROW_CUR_LEN, 0] = self.prompt_len - 1  # -> position 0
+            self._fill_sampling(mi, mf, 0, req)
+            first = int(self._sample_first(logits, mi, mf)[0])
+        req.t_first_token = now
+        req.tokens.append(first)
+        self._fresh[slot] = first
+        self.metrics.record_first_token(req, now)
+        self.metrics.record_tokens(now, 1)
+        if self.pool.finished(slot) or first in req.sampling.stop_set:
+            self._retire(slot, now)  # gen_len == 1 / instant stop token
+
+    # -- preemption (restart-style) ------------------------------------------
+    def running(self) -> List[Request]:
+        """Decoding (preemptible) requests, for the policy's verdict."""
+        return [self._inflight[self.pool.info(s).rid]
+                for s in self.pool.active_slots()]
+
+    def slot_of(self, req: Request) -> Optional[int]:
+        """The slot `req` occupies, or None if it holds none (a stale
+        policy verdict — e.g. the victim retired this iteration). Callers
+        treat None as "no victim"; a bare next() here would leak
+        StopIteration out of the scheduler loop."""
+        return next((s for s in self.pool.occupied_slots()
+                     if self.pool.rid_of(s) == req.rid), None)
+
+    def lane_open(self, slot: int) -> bool:
+        return any(ln.slot == slot for ln in self._lanes)
+
+    def preempt(self, victim: Request, slot: int, now: float) -> Request:
+        """Restart-preemption: return the victim's KV capacity and clear
+        its progress; the caller re-queues it at its original arrival
+        time. Safe because sampling is position-keyed — on re-admission
+        the victim regenerates bit-identical tokens (greedy or seeded).
+
+        Metrics semantics: the victim's pre-preemption tokens stay in
+        tokens_per_s (the device really decoded them — that is the decode
+        throughput the autoscaler budgets), and the restart records a
+        second, longer TTFT sample alongside the first. Both read as load,
+        i.e. they bias the policies toward scaling up while preemptions
+        are happening — the conservative direction."""
+        # only decode slots are preemptible (running() excludes
+        # prefilling): an open lane would keep writing prompt chunks into
+        # a freed/reassigned slot — make the invariant explicit here too
+        assert not self.lane_open(slot), \
+            f"preempting slot {slot} with an open prefill lane"
+        self.pool.evict(slot)
+        self._row_src.pop(slot, None)
+        self._fresh.pop(slot, None)
+        del self._inflight[victim.rid]
+        victim.tokens.clear()
+        victim.t_admit = None
+        victim.t_first_token = None
+        self.metrics.record_preempt(now)
+        return victim
+
+    # -- drain lifecycle ------------------------------------------------------
+    def start_drain(self, *, preempt: bool = False) -> List[Request]:
+        """Enter drain mode: no new admissions (can_accept goes False).
+        With preempt=False the replica finishes what it holds; with
+        preempt=True every in-flight request — decoding or mid-prefill —
+        is restart-preempted and returned for the caller to re-queue
+        (bit-identical regeneration is the position-keyed sampling
+        guarantee, so a drain can be immediate without changing output)."""
+        self.draining = True
+        if not preempt:
+            return []
         now = self.clock.now()
-        self._admit_ready(now)
+        # closing the lanes first makes mid-prefill slots preemptible too
+        # (preempt()'s open-lane guard is about a lane writing into a
+        # freed slot; with no lanes left there is nothing to write)
+        self._lanes.clear()
+        return [self.preempt(self._inflight[self.pool.rid_of(slot)], slot,
+                             now)
+                for slot in list(self.pool.occupied_slots())]
 
+    def cancel_drain(self) -> None:
+        """Scale-up may reuse a still-draining replica: its cache is warm,
+        which beats a cold spawn."""
+        self.draining = False
+
+    def release(self) -> None:
+        """Return the replica's pool to the void. Must be idle; the
+        backend's release() verifies its free-list accounting returns to
+        empty (no leaked blocks/reservations) before dropping the device
+        cache."""
+        if self.busy or self._lanes:
+            raise RuntimeError(
+                f"{self.name}: release() while {len(self._inflight)} "
+                "requests are in flight — drain first")
+        self.pool.release()
+
+    # -- one decode tick -----------------------------------------------------
+    def step_decode(self, now: float) -> int:
+        """Run one fused decode step over the replica's mixed batch
+        (+ prefill lanes) and retire finished requests. Returns tokens
+        emitted this tick."""
         active = self.pool.active_slots()
         lanes = self._lanes
         if not active and not lanes:
-            return self.snapshot()
+            return 0
 
         # pack the prefill token budget FIFO across open lanes
         N = self.pool.num_slots
@@ -263,7 +412,7 @@ class ServingEngine:
         self._lanes = still_open
         if emitted:
             self.metrics.record_tokens(now, emitted)
-        return self.snapshot()
+        return emitted
 
     @staticmethod
     def _fill_sampling(meta_i, meta_f, rows, req: Request) -> bool:
@@ -277,137 +426,6 @@ class ServingEngine:
         meta_f[St.ROW_TOP_P, rows] = sp.top_p
         return not sp.greedy
 
-    # -- admission ----------------------------------------------------------------
-    def _running(self) -> List[Request]:
-        """Decoding (preemptible) requests, for the policy's verdict."""
-        return [self._inflight[self.pool.info(s).rid]
-                for s in self.pool.active_slots()]
-
-    def _admit_ready(self, now: float) -> None:
-        preempted = False  # at most one restart per iteration (no thrash)
-        ready = None  # built lazily, reused across the loop (O(arrived)
-        # once per step, not per admission; invalidated when the queue
-        # changes underneath it — i.e. a preemption re-push)
-        while True:
-            if self.prefill_chunk:
-                # open lanes only while the step's token budget can still
-                # reach a new prompt (bounds admitted-but-starved lanes ~1)
-                if (sum(self.prompt_len - l.pos for l in self._lanes)
-                        >= self.prefill_chunk):
-                    return
-            if self.queue.peek_ready(now) is None:
-                return  # O(1) hot-path exit: nothing has arrived
-            if ready is None:
-                ready = self.queue.ready(now)
-            req = self.policy.select(ready, now)
-            if req is None:
-                return
-            # chunked admissions pass the prompt so a prefix-caching
-            # backend can probe/attach shared blocks (classic batch-1
-            # prefill scatters the whole prompt and cannot share)
-            prompt = req.prompt if self.prefill_chunk else None
-            if not self.pool.can_admit(req.eff_gen_len, prompt=prompt):
-                victim = None if preempted else \
-                    self.policy.victim(self._running(), req, now)
-                if victim is None:
-                    return  # backend exhaustion -> queue backpressure
-                vslot = self._slot_of(victim)
-                if vslot is None or any(ln.slot == vslot
-                                        for ln in self._lanes):
-                    # a policy may hand back a stale verdict (the victim
-                    # retired this iteration) or — buggy — a mid-prefill
-                    # request whose open lane would keep writing into a
-                    # freed slot; both are "no victim": backpressure
-                    return
-                if not self.pool.preempt_frees(vslot, req.eff_gen_len,
-                                               prompt=prompt):
-                    # eviction could not make room — don't cost the victim
-                    # its progress for nothing (and don't re-try a doomed
-                    # candidate against every runner, one per step)
-                    return
-                self._preempt(victim, vslot, now)
-                preempted = True
-                ready = None  # the victim re-joined the arrived set
-                if not self.pool.can_admit(req.eff_gen_len, prompt=prompt):
-                    return  # preempt_frees promised room; belt and braces
-            self.queue.remove(req)
-            if ready is not None:
-                ready.remove(req)
-            req.t_admit = now
-            self._inflight[req.rid] = req
-            if self.prefill_chunk:
-                slot = self.pool.admit(req.rid, req.eff_gen_len,
-                                       prefilling=True, prompt=req.prompt)
-                # cached prefix positions never ride a lane: start at the
-                # first uncached token (at most prompt_len - 1 — the last
-                # prompt token always runs to emit the first token)
-                self._lanes.append(_Lane(
-                    slot=slot, req=req,
-                    pos=self.pool.cached_prefix_len(slot)))
-            else:
-                self._admit_classic(
-                    self.pool.admit(req.rid, req.eff_gen_len), req, now)
-
-    def _admit_classic(self, slot: int, req: Request, now: float) -> None:
-        """Batch-1 prefill + cache insert (the non-chunked path). The first
-        token is sampled from the prefill logits at position 0 — greedy
-        requests take the plain argmax, bit-identical to the pre-v2 engine
-        — and fed to the same step's decode via the fresh-token path."""
-        logits, caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-        self.metrics.record_prefill_tokens(self.prompt_len)
-        self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
-        if req.sampling.greedy:
-            first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
-        else:
-            mi = np.zeros((St.META_I_ROWS, 1), np.int32)
-            mf = np.zeros((St.META_F_ROWS, 1), np.float32)
-            mi[St.ROW_CUR_LEN, 0] = self.prompt_len - 1  # -> position 0
-            self._fill_sampling(mi, mf, 0, req)
-            first = int(self._sample_first(logits, mi, mf)[0])
-        req.t_first_token = now
-        req.tokens.append(first)
-        self._fresh[slot] = first
-        self.metrics.record_first_token(req, now)
-        self.metrics.record_tokens(now, 1)
-        if self.pool.finished(slot) or first in req.sampling.stop_set:
-            self._retire(slot, now)  # gen_len == 1 / instant stop token
-
-    def _slot_of(self, req: Request) -> Optional[int]:
-        """The slot `req` occupies, or None if it holds none (a stale
-        policy verdict — e.g. the victim retired this iteration). Callers
-        treat None as "no victim"; a bare next() here would leak
-        StopIteration out of the scheduler loop."""
-        return next((s for s in self.pool.occupied_slots()
-                     if self.pool.rid_of(s) == req.rid), None)
-
-    def _preempt(self, victim: Request, slot: int, now: float) -> None:
-        """Restart-preemption: return the victim's KV capacity, clear its
-        progress, and re-queue it at its original arrival time. Safe
-        because sampling is position-keyed — on re-admission the victim
-        regenerates bit-identical tokens (greedy or seeded).
-
-        Metrics semantics: the victim's pre-preemption tokens stay in
-        tokens_per_s (the device really decoded them — that is the decode
-        throughput the autoscaler budgets), and the restart records a
-        second, longer TTFT sample alongside the first. Both read as load,
-        i.e. they bias the policies toward scaling up while preemptions
-        are happening — the conservative direction."""
-        # only decode slots are preemptible (_running() excludes
-        # prefilling): an open lane would keep writing prompt chunks into
-        # a freed/reassigned slot — make the invariant explicit here too
-        assert all(ln.slot != slot for ln in self._lanes), \
-            f"preempting slot {slot} with an open prefill lane"
-        self.pool.evict(slot)
-        self._row_src.pop(slot, None)
-        self._fresh.pop(slot, None)
-        del self._inflight[victim.rid]
-        victim.tokens.clear()
-        victim.t_admit = None
-        victim.t_first_token = None
-        self.queue.push(victim)
-        self.metrics.record_preempt(now)
-
     def _retire(self, slot: int, now: float) -> None:
         rid = self.pool.rid_of(slot)
         req = self._inflight.pop(rid)
@@ -419,26 +437,229 @@ class ServingEngine:
         self._fresh.pop(slot, None)
 
     # -- reporting ----------------------------------------------------------------
-    def snapshot(self) -> Dict[str, float]:
-        now = self.clock.now()
-        return self.metrics.snapshot(now, queue_depth=self.queue.depth(now),
+    def load_score(self):
+        """Routing key: committed KV first (the signal that actually gates
+        admission on paged backends; slot occupancy elsewhere), then the
+        in-flight count as the queue-depth tiebreak."""
+        m = self.pool.metrics()
+        return (m.get("kv_block_occupancy", self.pool.occupancy),
+                len(self._inflight))
+
+    def snapshot(self, *, queue_depth: Optional[int] = None
+                 ) -> Dict[str, float]:
+        return self.metrics.snapshot(self.clock.now(),
+                                     queue_depth=queue_depth,
                                      slot_occupancy=self.pool.occupancy,
                                      **self.pool.metrics())
+
+
+class ServingEngine:
+    """The single-replica serving composition: RequestQueue +
+    SchedulerPolicy admission loop over one ReplicaEngine. Kept as the
+    stable public surface (tests/CLI/benchmarks); `serve/router.py`'s
+    ReplicaSet is the N-replica composition of the same pieces."""
+
+    def __init__(self, cfg: ModelConfig, params: Pytree, *,
+                 num_slots: int = 4, prompt_len: int = 32, max_gen: int = 32,
+                 kv="paged", block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 max_shared_fraction: float = 1.0,
+                 prefill_chunk: Optional[int] = None,
+                 policy: Optional[SchedulerPolicy] = None,
+                 plan: Optional[ParallelPlan] = None, mesh=None,
+                 clock: Optional[Clock] = None,
+                 metrics_window_s: float = 10.0):
+        self.replica = ReplicaEngine(
+            cfg, params, num_slots=num_slots, prompt_len=prompt_len,
+            max_gen=max_gen, kv=kv, block_size=block_size,
+            kv_blocks=kv_blocks, prefix_cache=prefix_cache,
+            max_shared_fraction=max_shared_fraction,
+            prefill_chunk=prefill_chunk, plan=plan, mesh=mesh, clock=clock,
+            metrics_window_s=metrics_window_s)
+        self.policy: SchedulerPolicy = policy or FIFOPolicy()
+        self.queue = RequestQueue()
+
+    # -- delegated surface (the replica owns the data plane) -----------------
+    @property
+    def cfg(self):
+        return self.replica.cfg
+
+    @property
+    def params(self):
+        return self.replica.params
+
+    @property
+    def env(self):
+        return self.replica.env
+
+    @property
+    def clock(self):
+        return self.replica.clock
+
+    @property
+    def pool(self) -> KVBackend:
+        return self.replica.pool
+
+    @property
+    def kv(self) -> str:
+        return self.replica.kv
+
+    @property
+    def prompt_len(self) -> int:
+        return self.replica.prompt_len
+
+    @property
+    def max_gen(self) -> int:
+        return self.replica.max_gen
+
+    @property
+    def prefill_chunk(self) -> int:
+        return self.replica.prefill_chunk
+
+    @property
+    def metrics(self) -> ServingMetrics:
+        return self.replica.metrics
+
+    @metrics.setter
+    def metrics(self, m: ServingMetrics) -> None:
+        self.replica.metrics = m
+
+    @property
+    def completed(self) -> List[Request]:
+        return self.replica.completed
+
+    @property
+    def decode_steps(self) -> int:
+        return self.replica.decode_steps
+
+    @decode_steps.setter
+    def decode_steps(self, n: int) -> None:
+        self.replica.decode_steps = n
+
+    @property
+    def _prefill(self):
+        return self.replica._prefill
+
+    @property
+    def _lanes(self) -> List[_Lane]:
+        return self.replica._lanes
+
+    @property
+    def _inflight(self) -> Dict[int, Request]:
+        return self.replica._inflight
+
+    # -- state -----------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return self.replica.busy
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def drained(self) -> bool:
+        return not self.busy and not self.pending()
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Validate and enqueue. Never mutates the caller's Requests: the
+        admitted generation budget (gen_len capped by max_tokens) is
+        derived at admission via Request.eff_gen_len, so re-submitting the
+        same objects (the CLI --verify re-serve path) sees the declared
+        gen_len unchanged."""
+        validate_requests(requests, self.prompt_len, self.max_gen)
+        for r in requests:
+            self.queue.push(r)
+
+    # -- scheduler iteration ------------------------------------------------------
+    def step(self) -> Dict[str, float]:
+        """Admit arrivals (policy order), run one fused decode step over
+        the mixed batch (+ prefill lanes), retire finished requests.
+        Returns the metrics snapshot (what a node would publish)."""
+        now = self.clock.now()
+        self._admit_ready(now)
+        self.replica.step_decode(now)
+        return self.snapshot()
+
+    # -- admission ----------------------------------------------------------------
+    def _admit_ready(self, now: float) -> None:
+        rep = self.replica
+        preempted = False  # at most one restart per iteration (no thrash)
+        ready = None  # built lazily, reused across the loop (O(arrived)
+        # once per step, not per admission; invalidated when the queue
+        # changes underneath it — i.e. a preemption re-push)
+        while True:
+            if not rep.admission_room():
+                return
+            if self.queue.peek_ready(now) is None:
+                return  # O(1) hot-path exit: nothing has arrived
+            if ready is None:
+                ready = self.queue.ready(now)
+            req = self.policy.select(ready, now)
+            if req is None:
+                return
+            prompt = rep.prompt_arg(req)
+            if not rep.pool.can_admit(req.eff_gen_len, prompt=prompt):
+                victim = None if preempted else \
+                    self.policy.victim(rep.running(), req, now)
+                if victim is None:
+                    return  # backend exhaustion -> queue backpressure
+                vslot = rep.slot_of(victim)
+                if vslot is None or rep.lane_open(vslot):
+                    # a policy may hand back a stale verdict (the victim
+                    # retired this iteration) or — buggy — a mid-prefill
+                    # request whose open lane would keep writing into a
+                    # freed slot; both are "no victim": backpressure
+                    return
+                if not rep.pool.preempt_frees(vslot, req.eff_gen_len,
+                                              prompt=prompt):
+                    # eviction could not make room — don't cost the victim
+                    # its progress for nothing (and don't re-try a doomed
+                    # candidate against every runner, one per step)
+                    return
+                self.queue.push(rep.preempt(victim, vslot, now))
+                preempted = True
+                ready = None  # the victim re-joined the arrived set
+                if not rep.pool.can_admit(req.eff_gen_len, prompt=prompt):
+                    return  # preempt_frees promised room; belt and braces
+            self.queue.remove(req)
+            if ready is not None:
+                ready.remove(req)
+            rep.admit(req, now)
+
+    # -- reporting ----------------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        now = self.clock.now()
+        return self.replica.snapshot(queue_depth=self.queue.depth(now))
 
     def results(self) -> Dict[int, List[int]]:
         """rid -> generated tokens, for every completed request."""
         return {r.rid: list(r.tokens) for r in self.completed}
 
 
-def run_to_completion(engine: ServingEngine,
-                      requests: Sequence[Request] = (), *,
+def validate_requests(requests: Sequence[Request], prompt_len: int,
+                      max_gen: int) -> None:
+    """Shared submit-time validation (ServingEngine and the router both
+    gate here, before anything reaches a replica)."""
+    for r in requests:
+        if len(r.prompt) != prompt_len:
+            raise ValueError(
+                f"request {r.rid}: prompt length {len(r.prompt)} != "
+                f"engine prompt_len {prompt_len} (pad the trace)")
+        if r.eff_gen_len > max_gen:
+            raise ValueError(
+                f"request {r.rid}: gen_len {r.eff_gen_len} > "
+                f"engine max_gen {max_gen}")
+
+
+def run_to_completion(engine, requests: Sequence[Request] = (), *,
                       dt: float = 0.05, max_steps: int = 100_000,
                       on_step: Optional[Callable[[int, Dict[str, float]],
                                                  None]] = None
                       ) -> Dict[int, List[int]]:
-    """Standalone drain loop (no cluster): step the engine, advance the
-    clock by `dt` between iterations. VirtualCluster.serve() is the
-    cluster-integrated version of this loop."""
+    """Standalone drain loop (no cluster): step the engine (a ServingEngine
+    or a router.ReplicaSet), advance the clock by `dt` between iterations.
+    VirtualCluster.serve() is the cluster-integrated version of this
+    loop."""
     engine.submit(requests)
     steps = 0
     while not engine.drained() and steps < max_steps:

@@ -31,6 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as St
 from repro.models import model as Mo
 from repro.models.env import Env
+from repro.serve.kv import shared_jit
 
 Pytree = Any
 
@@ -74,18 +75,21 @@ class SlotPool:
         self._free: Deque[int] = deque(range(num_slots))  # O(1) admission
         # grow the batch-1 prefill cache to pool seq length, then write it
         # into the slot — one jitted op, slot index traced (no re-jit per slot)
-        self._insert = jax.jit(
-            lambda pool, c, slot: Mo.cache_insert_slot(
-                pool, Mo.grow_caches(c, max_gen), slot),
+        self._insert = shared_jit(
+            ("slot_insert", cfg, max_gen),
+            lambda: (lambda pool, c, slot: Mo.cache_insert_slot(
+                pool, Mo.grow_caches(c, max_gen), slot)),
             donate_argnums=(0,))
         self._evict = jax.jit(Mo.cache_evict_slot, donate_argnums=(0,))
         # two fused-step variants: an all-greedy batch runs the pure-argmax
         # step (no mask/Gumbel work); any sampling row selects the sampler
         self._decode = {
-            s: jax.jit(St.make_fused_decode_step(cfg, env,
-                                                 prompt_len=prompt_len,
-                                                 sample=s),
-                       donate_argnums=(1,))
+            s: shared_jit(
+                ("slot_decode", cfg, env.plan, env.mesh, prompt_len, s),
+                lambda s=s: St.make_fused_decode_step(cfg, env,
+                                                      prompt_len=prompt_len,
+                                                      sample=s),
+                donate_argnums=(1,))
             for s in (False, True)}
 
     # -- occupancy ---------------------------------------------------------
@@ -140,6 +144,22 @@ class SlotPool:
     def cached_prefix_len(self, slot: int) -> int:
         """No prefix cache: every prompt position prefills."""
         return 0
+
+    def probe_prefix(self, prompt) -> int:
+        """No prefix cache: a router probe can never hit here."""
+        return 0
+
+    def release(self) -> None:
+        """Retire the pool (replica scale-down): every slot must be back
+        on the free list — a leak raises — then the cache is dropped."""
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if live:
+            raise RuntimeError(f"release with occupied slots {live}")
+        if len(self._free) != self.num_slots:
+            raise RuntimeError(
+                f"release leaked {self.num_slots - len(self._free)} slots "
+                "(acquired but never evicted)")
+        self.caches = None
 
     def insert(self, slot: int, rid: int, prefill_caches: Pytree,
                gen_len: int) -> None:

@@ -1,0 +1,463 @@
+"""Multi-replica serving data plane: Router + per-replica KV pools,
+routing policies, the real scale-out/drain lifecycle, per-source metric
+tombstoning, and the prefix-cache eviction policy (hit-count-weighted
+reclaim + residency cap).
+
+Correctness bar: per-request output is bit-identical — greedy and seeded —
+across 1 vs N replicas, across both routing policies, and across mid-serve
+scale-up + drain events. The fused step computes every row independently,
+so WHICH replica serves a request can never change WHAT it emits; these
+tests pin that property through the router."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import VirtualCluster
+from repro.core.clock import ManualClock
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.serve import (SERVE_PLAN, BlockManager, LeastOccupancyRouting,
+                         PrefixAffineRouting, ReplicaEngine, ReplicaSet,
+                         RoutingPolicy, SamplingParams, ServingEngine,
+                         burst_trace, make_routing_policy,
+                         make_serving_engine, poisson_trace,
+                         run_to_completion, sysprompt_trace)
+
+CFG = get_smoke("paper-demo")
+ENV0 = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
+P = 16  # prompt length used throughout
+BS = 4
+
+
+def _fleet(replicas=2, routing="occupancy", num_slots=2, max_gen=8, **kw):
+    return ReplicaSet(CFG, PARAMS, replicas=replicas, routing=routing,
+                      num_slots=num_slots, prompt_len=P, max_gen=max_gen,
+                      clock=ManualClock(), **kw)
+
+
+def _single(num_slots=2, max_gen=8, **kw):
+    return ServingEngine(CFG, PARAMS, num_slots=num_slots, prompt_len=P,
+                         max_gen=max_gen, clock=ManualClock(), **kw)
+
+
+def _fresh(trace):
+    return [dataclasses.replace(r, tokens=[], t_admit=None,
+                                t_first_token=None, t_done=None)
+            for r in trace]
+
+
+def _trace(n=8, gen_len=6, rate=32.0, seed=0, sampling=None):
+    return poisson_trace(n, rate, prompt_len=P, vocab_size=CFG.vocab_size,
+                         gen_len=gen_len, sampling=sampling, seed=seed)
+
+
+def _shared_trace(n=12, rate=48.0, sampling=None, n_prefixes=2, seed=0):
+    return sysprompt_trace(n, rate, prompt_len=P, vocab_size=CFG.vocab_size,
+                           prefix_len=12, gen_len=6, n_prefixes=n_prefixes,
+                           sampling=sampling, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+
+
+def test_routing_registry_and_protocol():
+    assert isinstance(make_routing_policy("occupancy"),
+                      LeastOccupancyRouting)
+    assert isinstance(make_routing_policy("prefix"), PrefixAffineRouting)
+    assert isinstance(LeastOccupancyRouting(), RoutingPolicy)
+    assert isinstance(PrefixAffineRouting(), RoutingPolicy)
+    with pytest.raises(ValueError):
+        make_routing_policy("round-robin")
+
+
+def test_least_occupancy_spreads_a_burst_across_replicas():
+    rs = _fleet(replicas=2, num_slots=2)
+    trace = burst_trace(4, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=6, seed=1)
+    rs.submit(trace)
+    rs.step()  # all four arrive at t=0; one lane opens per replica/step
+    assert sorted(len(r._inflight) for r in rs.replicas) == [1, 1]
+    rs.step()  # ... so the burst spreads 2+2, never 3+1
+    counts = sorted(len(r._inflight) for r in rs.replicas)
+    assert counts == [2, 2], counts
+    out = run_to_completion(rs, dt=0.05)
+    assert sorted(out) == [0, 1, 2, 3]
+
+
+def test_prefix_affine_routes_to_the_warm_replica():
+    rs = _fleet(replicas=2, routing="prefix", num_slots=2, block_size=BS)
+    trace = _shared_trace(n=3, n_prefixes=1, rate=1000.0)
+    # warm replica-1 by hand: serve the first templated request there
+    warm = rs.replicas[1]
+    warm.admit(trace[0], 0.0)
+    while warm.busy:
+        warm.step_decode(rs.clock.now())
+        rs.clock.sleep(0.05)
+    assert warm.pool.probe_prefix(trace[1].prompt) > 0
+    # both replicas are now idle (equal occupancy; replica-0 would win a
+    # least-occupancy tie) — affinity must still route to the warm cache
+    rs.submit(trace[1:])
+    rs.step()
+    assert not rs.replicas[0]._inflight, "cold replica stole a warm prompt"
+    assert warm._inflight
+    out = run_to_completion(rs, dt=0.05)
+    assert sorted(out) == [0, 1, 2]  # rid 0 completed on the warm replica
+    assert warm.pool.prefix_hit_rate >= 0.5  # 2 of 3 prompts hit 12/16
+
+
+def test_prefix_affine_beats_occupancy_on_fleet_hit_rate():
+    runs = {}
+    for routing in ("prefix", "occupancy"):
+        rs = _fleet(replicas=2, routing=routing, num_slots=2, block_size=BS)
+        run_to_completion(rs, _shared_trace(n=12, n_prefixes=2), dt=0.05)
+        runs[routing] = rs.snapshot()["prefix_hit_rate"]
+    assert runs["prefix"] > runs["occupancy"], runs
+
+
+# ---------------------------------------------------------------------------
+# exactness: the router moves requests, never tokens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["occupancy", "prefix"])
+def test_fleet_output_matches_single_engine_greedy(routing):
+    trace = _trace(n=8)
+    base = run_to_completion(_single(), _fresh(trace), dt=0.05)
+    rs = _fleet(replicas=3, routing=routing)
+    out = run_to_completion(rs, _fresh(trace), dt=0.05)
+    assert out == base
+
+
+def test_fleet_output_matches_single_engine_seeded():
+    sp = SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+    trace = _trace(n=8, sampling=sp)
+    base = run_to_completion(_single(), _fresh(trace), dt=0.05)
+    out = run_to_completion(_fleet(replicas=3, routing="prefix"),
+                            _fresh(trace), dt=0.05)
+    assert out == base
+
+
+def test_make_serving_engine_dispatches_on_replica_count():
+    assert isinstance(make_serving_engine(CFG, PARAMS, replicas=1,
+                                          num_slots=2, prompt_len=P,
+                                          max_gen=8, clock=ManualClock()),
+                      ServingEngine)
+    rs = make_serving_engine(CFG, PARAMS, replicas=2, num_slots=2,
+                             prompt_len=P, max_gen=8, clock=ManualClock())
+    assert isinstance(rs, ReplicaSet) and len(rs.replicas) == 2
+
+
+# ---------------------------------------------------------------------------
+# scale-out / drain lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _run_with_rescale(rs, trace, *, up_at=3, up_to=3, down_at=8,
+                      down_to=1, dt=0.05):
+    rs.submit(trace)
+    steps = 0
+    while not rs.drained() and steps < 5000:
+        rs.step()
+        if steps == up_at:
+            rs.reconcile(up_to)
+        if steps == down_at:
+            rs.reconcile(down_to)
+        rs.clock.sleep(dt)
+        steps += 1
+    assert rs.drained()
+    return rs.results()
+
+
+@pytest.mark.parametrize("drain_mode", ["finish", "preempt"])
+def test_scale_up_and_drain_mid_serve_is_bit_identical(drain_mode):
+    trace = _trace(n=12, rate=32.0)
+    base = run_to_completion(_single(), _fresh(trace), dt=0.05)
+    rs = _fleet(replicas=1, routing="prefix", drain_mode=drain_mode)
+    out = _run_with_rescale(rs, _fresh(trace))
+    assert out == base, f"{drain_mode} drain perturbed tokens"
+    assert rs.replica_warmups == 2, "scale-up must spawn cold replicas"
+    assert len(rs.released) >= 2, "scale-down must release drained pools"
+    if drain_mode == "preempt":
+        assert rs.snapshot()["preemptions"] > 0
+
+
+def test_seeded_output_survives_drain_preemption():
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=11)
+    trace = _trace(n=12, rate=32.0, sampling=sp)
+    base = run_to_completion(_single(), _fresh(trace), dt=0.05)
+    rs = _fleet(replicas=1, drain_mode="preempt")
+    out = _run_with_rescale(rs, _fresh(trace))
+    assert out == base
+
+
+def test_draining_replica_accepts_no_new_work_and_releases_clean():
+    rs = _fleet(replicas=2, num_slots=2)
+    trace = burst_trace(6, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=6, seed=3)
+    rs.submit(trace)
+    rs.step()
+    victim = rs.replicas[1]
+    pool = victim.pool
+    rs.reconcile(1)
+    assert victim.draining
+    assert not victim.can_accept(trace[-1])
+    inflight_before = set(victim._inflight)
+    out = run_to_completion(rs, dt=0.05)
+    assert sorted(out) == list(range(6)), "drained requests must finish"
+    # the drained replica was released with its free-list accounting back
+    # to empty: no live blocks, no reservations, every usable block free
+    # or cache-retained, and the device cache dropped
+    assert victim.name in rs.released
+    assert inflight_before, "test needs in-flight work on the victim"
+    assert pool.blocks_in_use == 0
+    assert pool._reserved_total == 0
+    assert (len(pool._free_blocks) + len(pool._reclaim)
+            == pool.usable_blocks)
+    assert pool.caches is None
+
+
+def test_release_raises_on_leaked_blocks():
+    bm = BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                      block_size=BS)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, CFG.vocab_size, (P,), dtype=np.int32)
+    slot = bm.admit(1, 8, prefilling=True, prompt=prompt)
+    with pytest.raises(RuntimeError, match="occupied"):
+        bm.release()
+    bm.evict(slot)
+    bm.release()  # clean after eviction
+    assert bm.caches is None
+
+
+def test_reconcile_prefers_warm_undrain_over_cold_spawn():
+    rs = _fleet(replicas=2)
+    rs.reconcile(1)
+    draining = [r for r in rs.replicas if r.draining]
+    assert len(draining) == 1
+    rs.reconcile(2)  # scale back up before the drain completes
+    assert not draining[0].draining, "warm replica must be un-drained"
+    assert rs.replica_warmups == 0, "no cold spawn was needed"
+    rs.reconcile(4)
+    assert rs.replica_warmups == 2
+    assert len(rs.live_replicas()) == 4
+
+
+def test_router_applies_backpressure_when_fleet_is_full():
+    rs = _fleet(replicas=2, num_slots=1)
+    trace = burst_trace(6, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=8, seed=5)
+    rs.submit(trace)
+    rs.step()
+    assert sum(len(r._inflight) for r in rs.replicas) == 2
+    assert rs.pending() == 4, "over-capacity arrivals must queue"
+    out = run_to_completion(rs, dt=0.05)
+    assert sorted(out) == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: autoscaler plans become replica lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_serve_drives_fleet_lifecycle_and_tombstones():
+    from repro.core import QueueDepthPolicy
+    pol = QueueDepthPolicy(target_per_node=2, min_nodes=1, max_nodes=4)
+    c = VirtualCluster(n_compute=1, policy=pol, cooldown_s=0.3)
+    rs = ReplicaSet(CFG, PARAMS, replicas=1, routing="prefix", num_slots=2,
+                    prompt_len=P, max_gen=8, clock=c.clock)
+    trace = burst_trace(12, prompt_len=P, vocab_size=CFG.vocab_size,
+                        gen_len=8, seed=2)
+    base = run_to_completion(_single(), _fresh(trace), dt=0.05)
+    fleet_sizes = []
+    out = c.serve(rs, _fresh(trace), dt=0.05,
+                  on_step=lambda i, s, cl: fleet_sizes.append(
+                      int(s["replicas_live"])))
+    assert out == base, "the cluster-driven fleet perturbed tokens"
+    assert max(fleet_sizes) > 1, "burst must scale the fleet out"
+    assert fleet_sizes[-1] == 1, "drained queue must scale the fleet in"
+    assert rs.released, "scale-down must have released replicas"
+    # released replicas' metric keys were tombstoned immediately: no
+    # numeric reading under a dead source survives in the aggregates
+    m = c.scaler.read_metrics(c.registry)
+    for name in rs.released:
+        assert not any(k.endswith(f"/{name}") for k in m), (name, m)
+    # live sources still publish (per-replica namespacing works)
+    live = rs.replicas[0].name
+    assert any(k.endswith(f"/{live}") for k in m)
+    c.shutdown()
+
+
+def test_node_drain_tombstones_step_metrics_immediately():
+    """A drained/removed node's registry keys must stop skewing fleet
+    aggregates NOW — not at some later TTL lapse (registry KV never
+    expires, so before this fix a departed straggler pinned the median
+    forever)."""
+    c = VirtualCluster(n_compute=3)
+    nodes = c.compute_nodes()
+    for i, nid in enumerate(nodes):
+        c.sim.nodes[nid].agent.report_step_time(0, 0.1 * (i + 1))
+    m = c.scaler.read_metrics(c.registry)
+    assert len([k for k in m if k.startswith("node_step_time/")]) == 3
+    c.sim.remove_nodes([nodes[2]])  # graceful drain (the slowest node)
+    m = c.scaler.read_metrics(c.registry)
+    times = {k: v for k, v in m.items() if k.startswith("node_step_time/")}
+    assert len(times) == 2, times
+    assert f"node_step_time/{nodes[2]}" not in times
+    assert m["step_time"] == pytest.approx(0.15)  # median of survivors
+    c.shutdown()
+
+
+def test_retire_source_is_idempotent_and_scoped():
+    c = VirtualCluster(n_compute=1)
+    agent = c.sim.nodes[c.head_id].agent
+    agent.report_serving({"tokens_per_s": 5.0}, source="replica-0")
+    agent.report_serving({"tokens_per_s": 7.0}, source="replica-1")
+    assert c.scaler.read_metrics(c.registry)["tokens_per_s"] == 12.0
+    agent.retire_source("replica-0")
+    agent.retire_source("replica-0")  # idempotent
+    m = c.scaler.read_metrics(c.registry)
+    assert m["tokens_per_s"] == 7.0, "only the retired source tombstones"
+    c.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache eviction: hit-count-weighted reclaim + residency cap
+# ---------------------------------------------------------------------------
+
+
+def _prompt(seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (P,), dtype=np.int32)
+
+
+def _prefill(bm, rid, prompt, gen_len=8):
+    slot = bm.admit(rid, gen_len, prefilling=True, prompt=prompt)
+    for pos in range(bm.cached_prefix_len(slot), P):
+        bm.ensure(slot, pos)
+    bm.finish_prefill(slot)
+    return slot
+
+
+def test_hit_weighted_reclaim_keeps_hot_blocks():
+    # pool: room for two retired prompts' blocks (8) + one live request
+    bm = BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                      block_size=BS, num_blocks=1 + 12)
+    hot, cold = _prompt(1), _prompt(2)
+    bm.evict(_prefill(bm, 0, hot))
+    bm.evict(_prefill(bm, 1, cold))
+    for rid in (2, 3):  # two more hits on the hot template
+        bm.evict(_prefill(bm, rid, hot))
+    # a big unique-prompt request must reclaim retained blocks: the COLD
+    # template's, despite the hot one being older (pure LRU would evict
+    # the hot blocks first — that is exactly the policy bug)
+    s = bm.admit(9, 8, prefilling=True, prompt=_prompt(3))
+    for pos in range(P + 7):
+        bm.ensure(s, pos)
+    assert bm.probe_prefix(hot) == P - 1, "hot template must survive"
+    assert bm.probe_prefix(cold) < P - 1, "cold template must be reclaimed"
+
+
+def test_zero_hit_reclaim_degenerates_to_lru():
+    bm = BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                      block_size=BS, num_blocks=1 + 12)
+    older, newer = _prompt(4), _prompt(5)
+    bm.evict(_prefill(bm, 0, older))
+    bm.evict(_prefill(bm, 1, newer))
+    s = bm.admit(9, 8, prefilling=True, prompt=_prompt(6))
+    for pos in range(P + 7):
+        bm.ensure(s, pos)
+    assert bm.probe_prefix(older) < P - 1, "ties must reclaim LRU-first"
+    assert bm.probe_prefix(newer) == P - 1
+
+
+def test_max_shared_fraction_caps_cache_residency():
+    # 28 usable blocks, cap at 0.25 -> at most 7 registered blocks: one
+    # tenant churning distinct templates cannot monopolize the pool
+    bm = BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                      block_size=BS, num_blocks=1 + 28,
+                      max_shared_fraction=0.25)
+    for rid in range(5):  # 5 distinct prompts x 4 full blocks each
+        bm.evict(_prefill(bm, rid, _prompt(100 + rid)))
+    assert len(bm._hash_of) <= 7
+    assert len(bm._reclaim) <= 7
+    # capped-out registration still frees normally (no leak): the pool
+    # releases clean
+    bm.release()
+
+
+def test_max_shared_fraction_validated():
+    with pytest.raises(ValueError):
+        BlockManager(CFG, ENV0, num_slots=2, prompt_len=P, max_gen=8,
+                     block_size=BS, max_shared_fraction=1.5)
+
+
+def test_residency_cap_engine_end_to_end():
+    # the cap flows through make_kv_backend/ServingEngine and the serve
+    # output is unaffected (eviction policy is a capacity policy, never a
+    # correctness policy)
+    trace = _shared_trace(n=8)
+    base = run_to_completion(_single(block_size=BS), _fresh(trace), dt=0.05)
+    eng = _single(block_size=BS, max_shared_fraction=0.25)
+    out = run_to_completion(eng, _fresh(trace), dt=0.05)
+    assert out == base
+    cap = int(0.25 * eng.pool.usable_blocks)
+    assert len(eng.pool._hash_of) <= cap
+
+
+# ---------------------------------------------------------------------------
+# fleet metrics rollup
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_hit_rate_is_count_weighted_not_a_mean_of_ratios():
+    """Affine routing concentrates a template on one replica — idle
+    replicas reporting a 0.0 ratio must not drag the fleet hit rate down
+    in proportion to how well the routing works."""
+    rs = _fleet(replicas=3, routing="prefix", num_slots=2, block_size=BS)
+    # single template at a sequential rate: after the cold miss, every
+    # request hits on ONE replica; the other two never see traffic
+    run_to_completion(rs, _shared_trace(n=6, n_prefixes=1, rate=2.0),
+                      dt=0.05)
+    hits = sum(r.pool.prefix_hit_tokens for r in rs.replicas)
+    lookups = sum(r.pool.prefix_lookup_tokens for r in rs.replicas)
+    fleet = rs.snapshot()["prefix_hit_rate"]
+    assert fleet == pytest.approx(hits / lookups)
+    # at least one replica never saw traffic; its 0.0 ratio must not be
+    # averaged in (the served traffic hits at ~0.5-0.6, so a mean over 3
+    # replicas would sit far below the true rate)
+    ratios = [r.pool.prefix_hit_rate for r in rs.replicas]
+    assert 0.0 in ratios, "test needs an idle replica"
+    assert fleet > sum(ratios) / len(ratios)
+    assert fleet >= 0.5
+
+
+def test_fleet_snapshot_rolls_up_and_stays_monotonic_across_release():
+    rs = _fleet(replicas=2, num_slots=2, drain_mode="preempt")
+    trace = _trace(n=10, rate=32.0)
+    rs.submit(trace)
+    for _ in range(6):
+        rs.step()
+        rs.clock.sleep(0.05)
+    rs.reconcile(1)  # preempt-drain one replica mid-serve
+    pre = rs.snapshot()["preemptions"]
+    assert pre > 0
+    while not rs.drained():
+        rs.step()
+        rs.clock.sleep(0.05)
+    snap = rs.snapshot()
+    assert snap["preemptions"] >= pre, \
+        "released replicas' counters must stay absorbed in fleet totals"
+    assert snap["replicas_live"] == 1.0
+    assert rs.completed_count == 10
+    srcs = rs.metric_sources()
+    assert "router" in srcs and "queue_depth" in srcs["router"]
+    for name, m in srcs.items():
+        if name != "router":
+            assert "queue_depth" not in m, \
+                "replica sources must not multiply the router's depth"

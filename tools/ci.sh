@@ -50,6 +50,17 @@ assert px["sampled_exact"], "prefix caching perturbed seeded sampling"
 assert px["prefill_reduction"] >= 2.0, px
 assert px["prefix_hit_rate"] >= 0.5, px
 assert px["ttft_p95_ms_on"] < px["ttft_p95_ms_off"], px
+# multi-replica floors (ISSUE-5): at an equal total KV byte budget the
+# 4-replica router must beat the single engine on decode tokens/s (the
+# data-parallel speedup is real now, not a dt rescale), prefix-affine
+# routing must beat cache-blind occupancy routing on fleet hit rate, and
+# the router must never perturb tokens — all sim-time deterministic
+rp = r["replicas"]
+assert rp["token_exact"], "the router perturbed greedy tokens"
+assert rp["sampled_exact"], "the router perturbed seeded sampling"
+assert rp["speedup_tokens_per_s"] >= 2.0, rp
+assert rp["affine_hit_rate"] > rp["occupancy_hit_rate"], rp
+assert rp["ttft_p95_ms_4"] < rp["ttft_p95_ms_1"], rp
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
@@ -62,3 +73,6 @@ python -m repro.launch.serve --trace poisson --smoke --verify \
 echo "== serving demo (shared system prompts + prefix cache + verify) =="
 python -m repro.launch.serve --trace sysprompt --smoke --verify \
   --block-size 4
+
+echo "== serving demo (4-replica router + prefix-affine routing + live drain + verify) =="
+python -m repro.launch.serve --replicas 4 --routing prefix --smoke --verify
