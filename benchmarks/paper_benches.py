@@ -201,33 +201,78 @@ def _cache_bytes(caches) -> int:
     return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(caches)))
 
 
+# -- warmup registry ------------------------------------------------------------
+#
+# Every WALL-timed serving section must be warmed with its EXACT timed
+# workload before measurement: step jits are shared across engines
+# (serve/kv.py shared_jit), so a partial warm-up silently compares a pass
+# warmed by earlier benches against one still tracing mid-measurement.
+# Benches register the workload fingerprint they warmed with; the timed
+# run asserts its own fingerprint was registered, and run.py --smoke
+# asserts every wall-reporting section in BENCH_serve.json checked in
+# here. (Sim-time numbers — decode steps x a manual clock — are invariant
+# to compile time and need no warm-up.)
+
+_WARMUPS: dict = {}
+
+
+def _trace_fingerprint(trace) -> str:
+    import hashlib
+    h = hashlib.sha256()
+    for r in trace:
+        h.update(np.asarray(r.prompt, np.int32).tobytes())
+        h.update(repr((r.rid, r.gen_len, r.arrival_t, r.sampling)).encode())
+    return h.hexdigest()[:16]
+
+
+def _register_warmup(section: str, trace) -> str:
+    fp = _trace_fingerprint(trace)
+    _WARMUPS.setdefault(section, set()).add(fp)
+    return fp
+
+
+def _assert_warmed(section: str, trace) -> None:
+    fp = _trace_fingerprint(trace)
+    assert fp in _WARMUPS.get(section, set()), (
+        f"section {section!r}: timed workload {fp} was never run as its "
+        f"own warm-up (registered: {sorted(_WARMUPS.get(section, set()))})")
+
+
+def warmed_sections() -> set:
+    """Sections whose timed workload was warmed exactly (for run.py)."""
+    return set(_WARMUPS)
+
+
 def _serve_engine_bench(eng, mk_trace, *, baseline_streamed: bool,
-                        repeats: int = 3):
+                        repeats: int = 3, section: str = "paged"):
     from repro.launch.serve import serve_batch
     from repro.serve import SERVE_PLAN, ServingMetrics, run_to_completion
 
     cfg = eng.cfg
     trace = mk_trace()
-    # warm every jitted step shape (consecutive lane steps, lane->decode,
-    # pure decode, both prev-token lengths) outside the timed window, then
-    # reset counters
-    warm = [type(trace[0])(rid=-2 - i, prompt=trace[0].prompt.copy(),
-                           gen_len=3) for i in range(4)]
-    run_to_completion(eng, warm, dt=1e-4)
-    wall, out, peak, snap = float("inf"), None, [0], {}
+    # warm with the exact timed workload so EVERY step shape this trace
+    # exercises (consecutive lane steps, lane->decode, pure decode, both
+    # prev-token lengths) compiles outside the timed window
+    run_to_completion(eng, mk_trace(), dt=1e-4)
+    _register_warmup(section, trace)
+    wall, sim, out, peak, snap = float("inf"), 0.0, None, [0], {}
     for _ in range(max(repeats, 1)):  # best-of-N: shields CI noise
         eng.metrics = ServingMetrics(window_s=1e9)
         eng.completed.clear()
         eng.decode_steps = 0
         peak = [0]
+        timed = mk_trace()
+        _assert_warmed(section, timed)
+        c0 = eng.clock.now()
         t0 = time.perf_counter()
         run = run_to_completion(
-            eng, mk_trace(), dt=1e-4,
+            eng, timed, dt=1e-4,
             on_step=lambda i, s: peak.__setitem__(
                 0, max(peak[0], len(eng.pool.occupied_slots()))))
         w = time.perf_counter() - t0
         if w < wall:
-            wall, out, snap = w, run, eng.snapshot()
+            wall, sim, out = w, eng.clock.now() - c0, run
+            snap = eng.snapshot()
     n_tok = sum(len(t) for t in out.values())
     prompts = jnp.asarray(np.stack([r.prompt for r in trace]))
     base = np.asarray(serve_batch(None, cfg, eng.params, prompts,
@@ -240,6 +285,8 @@ def _serve_engine_bench(eng, mk_trace, *, baseline_streamed: bool,
     return {
         "tokens": n_tok,
         "tokens_per_s_wall": round(n_tok / wall, 1),
+        "ms_per_token_wall": round(wall / max(n_tok, 1) * 1e3, 4),
+        "ms_per_token_sim": round(sim / max(n_tok, 1) * 1e3, 4),
         "decode_steps": eng.decode_steps,
         "latency_p95_ms_sim": round(snap.get("latency_p95_ms", 0.0), 2),
         "kv_bytes": kv_bytes,
@@ -280,11 +327,11 @@ def bench_serve_paged(smoke: bool = True):
     mk_trace = lambda: [dataclasses_replace(r) for r in trace]
     res_slot = _serve_engine_bench(
         mk("slot", num_slots=slot_slots), mk_trace,
-        baseline_streamed=False)
+        baseline_streamed=False, section="slot")
     res_paged = _serve_engine_bench(
         mk("paged", num_slots=10, block_size=bs, kv_blocks=kv_blocks,
            prefill_chunk=2 * prompt_len), mk_trace,
-        baseline_streamed=True)
+        baseline_streamed=True, section="paged")
 
     report = {
         "config": {"arch": cfg.name, "prompt_len": prompt_len,
@@ -385,12 +432,15 @@ def bench_serve_sampling(smoke: bool = True):
     sched = {}
     for name, policy in (("fifo", FIFOPolicy()), ("edf", EDFPolicy())):
         eng = mk_engine(policy=policy)
-        run_to_completion(eng, deadline_trace(), dt=0.05)
+        out = run_to_completion(eng, deadline_trace(), dt=0.05)
         n = n_loose + n_tight
+        n_tok = sum(len(t) for t in out.values())
         sched[name] = {
             "requests": n,
             "deadline_misses": eng.metrics.deadline_misses,
             "miss_rate": round(eng.metrics.deadline_misses / n, 3),
+            "ms_per_token_sim": round(eng.clock.now() / max(n_tok, 1) * 1e3,
+                                      4),
         }
 
     # -- sampling: seeded top-k/top-p throughput + reproducibility --------
@@ -404,23 +454,29 @@ def bench_serve_sampling(smoke: bool = True):
                                sampling=sampling, seed=3)
 
         eng = mk_engine(num_slots=4)
-        # warm with the exact timed workload so EVERY step shape compiles
-        # outside the timed window: step jits are shared across engines
-        # (serve/kv.py shared_jit), so a partial warm-up would compare a
-        # greedy pass warmed by earlier benches against a sampled pass
-        # still tracing mid-measurement
+        # warm with the exact timed workload (see the warmup registry note
+        # above _register_warmup) so EVERY step shape compiles outside the
+        # timed window
         run_to_completion(eng, trace(), dt=1e-4)
+        _register_warmup("sampling", trace())
         eng.metrics = ServingMetrics(window_s=1e9)
         eng.completed.clear()
+        timed = trace()
+        _assert_warmed("sampling", timed)
+        c0 = eng.clock.now()
         t0 = time.perf_counter()
-        out = run_to_completion(eng, trace(), dt=1e-4)
+        out = run_to_completion(eng, timed, dt=1e-4)
         wall = time.perf_counter() - t0
+        sim = eng.clock.now() - c0
         toks = sum(len(t) for t in out.values())
-        return out, round(toks / wall, 1)
+        return out, round(toks / wall, 1), {
+            "ms_per_token_wall": round(wall / max(toks, 1) * 1e3, 4),
+            "ms_per_token_sim": round(sim / max(toks, 1) * 1e3, 4),
+        }
 
-    out_a, tps_sampled = run_timed(sp)
-    out_b, _ = run_timed(sp)
-    _, tps_greedy = run_timed(None)
+    out_a, tps_sampled, ms_sampled = run_timed(sp)
+    out_b, _, _ = run_timed(sp)
+    _, tps_greedy, ms_greedy = run_timed(None)
 
     report = {
         "scheduling": {**sched,
@@ -432,6 +488,11 @@ def bench_serve_sampling(smoke: bool = True):
                      "requests": n_req,
                      "tokens_per_s_wall": tps_sampled,
                      "greedy_tokens_per_s_wall": tps_greedy,
+                     **ms_sampled,
+                     "greedy_ms_per_token_wall":
+                         ms_greedy["ms_per_token_wall"],
+                     "greedy_ms_per_token_sim":
+                         ms_greedy["ms_per_token_sim"],
                      # the CI floor is this ratio (machine-speed-proof):
                      # the fused mask+Gumbel must not tank decode rate
                      "sampled_vs_greedy": round(tps_sampled
@@ -486,17 +547,36 @@ def bench_serve_prefix(smoke: bool = True):
                                sampling=sampling, seed=0)
 
     def run(prefix_cache, sampling=None):
-        eng = ServingEngine(cfg, params, num_slots=4, prompt_len=prompt_len,
-                            max_gen=gen, block_size=bs,
-                            prefix_cache=prefix_cache)
+        def mk_engine():
+            return ServingEngine(cfg, params, num_slots=4,
+                                 prompt_len=prompt_len, max_gen=gen,
+                                 block_size=bs, prefix_cache=prefix_cache)
+
+        # warm a THROWAWAY engine with the exact timed workload (warmup
+        # registry note above _register_warmup): compilation lives in the
+        # shared jit cache and survives the engine, while the timed engine
+        # below starts with a cold prefix cache — hit rates and prefill
+        # reductions keep their cold-trace semantics. Same dt as the timed
+        # run so the schedule (and thus every jitted shape) is identical.
+        run_to_completion(mk_engine(), mk_trace(sampling), dt=0.05)
+        _register_warmup("prefix", mk_trace(sampling))
+        eng = mk_engine()
         eng.metrics = ServingMetrics(window_s=1e9)
         peak_shared = [0.0]  # actively-shared occupancy decays by drain
+        timed = mk_trace(sampling)
+        _assert_warmed("prefix", timed)
+        t0 = time.perf_counter()
         out = run_to_completion(
-            eng, mk_trace(sampling), dt=0.05,
+            eng, timed, dt=0.05,
             on_step=lambda i, s: peak_shared.__setitem__(
                 0, max(peak_shared[0], s.get("kv_shared_occupancy", 0.0))))
+        wall = time.perf_counter() - t0
         snap = eng.snapshot()
         snap["kv_shared_occupancy"] = peak_shared[0]
+        n_tok = sum(len(t) for t in out.values())
+        snap["ms_per_token_wall"] = round(wall / max(n_tok, 1) * 1e3, 4)
+        snap["ms_per_token_sim"] = round(
+            eng.clock.now() / max(n_tok, 1) * 1e3, 4)
         return out, snap
 
     out_on, snap_on = run(True)
@@ -527,6 +607,10 @@ def bench_serve_prefix(smoke: bool = True):
             "kv_shared_occupancy": round(snap_on["kv_shared_occupancy"], 3),
             "ttft_p95_ms_on": round(snap_on.get("ttft_p95_ms", 0.0), 2),
             "ttft_p95_ms_off": round(snap_off.get("ttft_p95_ms", 0.0), 2),
+            "ms_per_token_wall_on": snap_on["ms_per_token_wall"],
+            "ms_per_token_wall_off": snap_off["ms_per_token_wall"],
+            "ms_per_token_sim_on": snap_on["ms_per_token_sim"],
+            "ms_per_token_sim_off": snap_off["ms_per_token_sim"],
             "token_exact": bool(out_on == out_off and base_exact),
             "sampled_exact": bool(sam_on == sam_off),
         }
@@ -600,16 +684,30 @@ def bench_serve_replicas(smoke: bool = True):
                                n_prefixes=n_prefixes, sampling=sampling,
                                seed=0)
 
-    def run(engine, sampling=None):
+    def run(mk_engine, sampling=None):
+        # throwaway-engine warm-up with the exact timed workload (warmup
+        # registry note above _register_warmup): jits are shared, cache
+        # and routing state start cold for the timed engine. Same dt as
+        # the timed run so every jitted shape matches.
+        run_to_completion(mk_engine(), mk_trace(sampling), dt=0.05)
+        _register_warmup("replicas", mk_trace(sampling))
+        engine = mk_engine()
         if hasattr(engine, "replicas"):
             for r in engine.replicas:
                 r.metrics = ServingMetrics(window_s=1e9)
         else:
             engine.metrics = ServingMetrics(window_s=1e9)
-        out = run_to_completion(engine, mk_trace(sampling), dt=0.05)
+        timed = mk_trace(sampling)
+        _assert_warmed("replicas", timed)
+        t0 = time.perf_counter()
+        out = run_to_completion(engine, timed, dt=0.05)
+        wall = time.perf_counter() - t0
         snap = engine.snapshot()
         n_tok = sum(len(t) for t in out.values())
         snap["tokens_per_s_sim"] = n_tok / max(engine.clock.now(), 1e-9)
+        snap["ms_per_token_wall"] = round(wall / max(n_tok, 1) * 1e3, 4)
+        snap["ms_per_token_sim"] = round(
+            engine.clock.now() / max(n_tok, 1) * 1e3, 4)
         return out, snap
 
     def single(**kw):
@@ -623,12 +721,12 @@ def bench_serve_replicas(smoke: bool = True):
                           max_gen=gen, block_size=bs,
                           kv_blocks=per_replica_usable + 1, **kw)
 
-    out_1, snap_1 = run(single())
-    out_aff, snap_aff = run(fleet("prefix"))
-    out_occ, snap_occ = run(fleet("occupancy"))
+    out_1, snap_1 = run(single)
+    out_aff, snap_aff = run(lambda: fleet("prefix"))
+    out_occ, snap_occ = run(lambda: fleet("occupancy"))
     sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=17)
-    sam_1, _ = run(single(), sampling=sp)
-    sam_aff, _ = run(fleet("prefix"), sampling=sp)
+    sam_1, _ = run(single, sampling=sp)
+    sam_aff, _ = run(lambda: fleet("prefix"), sampling=sp)
 
     speedup = (snap_aff["tokens_per_s_sim"]
                / max(snap_1["tokens_per_s_sim"], 1e-9))
@@ -643,6 +741,10 @@ def bench_serve_replicas(smoke: bool = True):
             "speedup_tokens_per_s": round(speedup, 2),
             "ttft_p95_ms_1": round(snap_1.get("ttft_p95_ms", 0.0), 2),
             "ttft_p95_ms_4": round(snap_aff.get("ttft_p95_ms", 0.0), 2),
+            "ms_per_token_wall_1": snap_1["ms_per_token_wall"],
+            "ms_per_token_wall_4": snap_aff["ms_per_token_wall"],
+            "ms_per_token_sim_1": snap_1["ms_per_token_sim"],
+            "ms_per_token_sim_4": snap_aff["ms_per_token_sim"],
             "affine_hit_rate": round(snap_aff["prefix_hit_rate"], 3),
             "occupancy_hit_rate": round(snap_occ["prefix_hit_rate"], 3),
             "token_exact": bool(out_aff == out_1 and out_occ == out_1),
@@ -662,6 +764,120 @@ def bench_serve_replicas(smoke: bool = True):
 
 def bench_serve_replicas_full():
     return bench_serve_replicas(smoke=False)
+
+
+# -- speculative decoding: draft/verify lanes on the fused step ------------------
+#
+# Claims recorded per commit (merged into BENCH_serve.json): on the
+# repetitive-suffix trace family the ngram drafter (prompt-lookup, k=4)
+# delivers >= 1.5x decode tokens/s in SIM time — the ratio is a pure
+# decode-step count, machine-speed-proof — and strictly lower ms/token at
+# EQUAL KV bytes (speculation allocates no extra KV: verify rows write
+# into the request's own block reservation and roll back via
+# KVBackend.truncate), with accepted_per_step > 1.0 and output bit-exact
+# vs non-speculative serving, greedy and seeded.
+
+
+def bench_serve_spec(smoke: bool = True):
+    from repro.models import model as Mo
+    from repro.models.env import Env
+    from repro.serve import (SERVE_PLAN, SamplingParams, ServingEngine,
+                             ServingMetrics, repetitive_trace,
+                             run_to_completion)
+
+    cfg = get_smoke("paper-demo")
+    params = Mo.init_params(jax.random.PRNGKey(0), cfg,
+                            Env(mesh=None, plan=SERVE_PLAN))
+    prompt_len, gen, bs, spec_k = 16, 64, 4, 4
+    n_req = 24 if smoke else 48
+    num_slots = 3
+    # both engines get the identical pool: speculation needs no extra KV
+    kv_blocks = num_slots * ((prompt_len + gen) // bs) + 1
+
+    def mk_trace(sampling=None):
+        return repetitive_trace(n_req, 64.0, prompt_len=prompt_len,
+                                vocab_size=cfg.vocab_size, gen_len=gen,
+                                sampling=sampling, seed=0)
+
+    def run(spec, sampling=None):
+        def mk_engine():
+            return ServingEngine(cfg, params, num_slots=num_slots,
+                                 prompt_len=prompt_len, max_gen=gen,
+                                 kv="paged", block_size=bs,
+                                 kv_blocks=kv_blocks, spec=spec,
+                                 spec_k=spec_k)
+
+        # throwaway-engine warm-up with the exact timed workload at the
+        # timed dt (warmup registry note above _register_warmup)
+        run_to_completion(mk_engine(), mk_trace(sampling), dt=0.05)
+        _register_warmup("spec", mk_trace(sampling))
+        eng = mk_engine()
+        eng.metrics = ServingMetrics(window_s=1e9)
+        timed = mk_trace(sampling)
+        _assert_warmed("spec", timed)
+        t0 = time.perf_counter()
+        out = run_to_completion(eng, timed, dt=0.05)
+        wall = time.perf_counter() - t0
+        snap = eng.snapshot()
+        n_tok = sum(len(t) for t in out.values())
+        sim = eng.clock.now()
+        res = {
+            "tokens": n_tok,
+            "decode_steps": eng.decode_steps,
+            "tokens_per_s_sim": round(n_tok / max(sim, 1e-9), 2),
+            "ms_per_token_sim": round(sim / max(n_tok, 1) * 1e3, 4),
+            "ms_per_token_wall": round(wall / max(n_tok, 1) * 1e3, 4),
+            "kv_bytes": _cache_bytes(eng.pool.caches),
+        }
+        if "accepted_per_step" in snap:
+            res["accepted_per_step"] = round(snap["accepted_per_step"], 3)
+            res["spec_acceptance_rate"] = round(
+                snap["spec_acceptance_rate"], 3)
+        return out, res
+
+    out_base, base = run(None)
+    out_ngram, ngram = run("ngram")
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=17)
+    sam_base, _ = run(None, sampling=sp)
+    sam_ngram, _ = run("ngram", sampling=sp)
+
+    report = {
+        "spec": {
+            "requests": n_req, "prompt_len": prompt_len, "gen_len": gen,
+            "drafter": "ngram", "spec_k": spec_k,
+            "baseline": base,
+            "ngram": ngram,
+            # decode-step ratio: machine-speed-proof (same dt both runs)
+            "speedup_decode_tokens_per_s": round(
+                ngram["tokens_per_s_sim"]
+                / max(base["tokens_per_s_sim"], 1e-9), 3),
+            "kv_bytes_equal": bool(base["kv_bytes"] == ngram["kv_bytes"]),
+            "accepted_per_step": ngram.get("accepted_per_step", 0.0),
+            "spec_acceptance_rate": ngram.get("spec_acceptance_rate", 0.0),
+            "token_exact": bool(out_ngram == out_base),
+            "sampled_exact": bool(sam_ngram == sam_base),
+        }
+    }
+    if not smoke:
+        # the model drafter is simulation-grade (per-token host sync) —
+        # record its acceptance on the full tier only
+        out_model, model = run("model")
+        report["spec"]["model"] = model
+        report["spec"]["model_token_exact"] = bool(out_model == out_base)
+    _merge_bench_report(report)
+    spx = report["spec"]
+    return [
+        ("serve_spec_speedup", spx["speedup_decode_tokens_per_s"],
+         f"ngram k={spec_k} accepted/step={spx['accepted_per_step']} "
+         f"exact={spx['token_exact']} sampled_exact={spx['sampled_exact']}"),
+        ("serve_spec_ms_per_token_sim", spx["ngram"]["ms_per_token_sim"],
+         f"baseline={spx['baseline']['ms_per_token_sim']} at equal KV "
+         f"({spx['kv_bytes_equal']})"),
+    ]
+
+
+def bench_serve_spec_full():
+    return bench_serve_spec(smoke=False)
 
 
 # -- per-arch smoke step times (throughput harness) -------------------------------

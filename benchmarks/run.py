@@ -22,9 +22,11 @@ def main() -> None:
                                           bench_serve_replicas_full,
                                           bench_serve_sampling,
                                           bench_serve_sampling_full,
+                                          bench_serve_spec,
+                                          bench_serve_spec_full,
                                           bench_serve_throughput,
                                           bench_serve_throughput_full,
-                                          bench_step_time)
+                                          bench_step_time, warmed_sections)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -34,14 +36,15 @@ def main() -> None:
     if args.smoke:
         benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput,
                    bench_serve_paged, bench_serve_sampling,
-                   bench_serve_prefix, bench_serve_replicas)
+                   bench_serve_prefix, bench_serve_replicas,
+                   bench_serve_spec)
     else:
         benches = (bench_cluster_formation, bench_autoscale_response,
                    bench_mpi_job, bench_env_capture,
                    bench_interconnect_model, bench_serve_throughput_full,
                    bench_step_time, bench_serve_paged_full,
                    bench_serve_sampling_full, bench_serve_prefix_full,
-                   bench_serve_replicas_full)
+                   bench_serve_replicas_full, bench_serve_spec_full)
 
     print("name,us_per_call,derived")
     for bench in benches:
@@ -50,6 +53,32 @@ def main() -> None:
                 print(f"{name},{us},{derived}", flush=True)
         except Exception as e:  # a failed bench must not hide the others
             print(f"{bench.__name__},ERROR,{e!r}", flush=True)
+
+    if args.smoke:
+        # every wall-reporting section of BENCH_serve.json must have been
+        # warmed with its EXACT timed workload (paper_benches warmup
+        # registry) — a partial warm-up silently times compilation
+        import json
+        path = os.path.abspath(os.path.join(_ROOT, "BENCH_serve.json"))
+        with open(path) as f:
+            report = json.load(f)
+        wall_sections = {
+            name for name, sec in report.items()
+            if isinstance(sec, dict)
+            and any("wall" in k for k in _wall_keys(sec))}
+        missing = wall_sections - warmed_sections()
+        assert not missing, (
+            f"wall-timed sections never warmed with their exact workload: "
+            f"{sorted(missing)}")
+        print(f"warmup_registry,OK,{sorted(wall_sections)}", flush=True)
+
+
+def _wall_keys(section: dict):
+    for k, v in section.items():
+        if isinstance(v, dict):
+            yield from _wall_keys(v)
+        else:
+            yield k
 
 
 if __name__ == '__main__':

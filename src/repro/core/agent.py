@@ -64,11 +64,14 @@ class NodeAgent:
         keep skewing the fleet aggregates (the straggler policy's median,
         the summed queue depth) long after the node left the catalog.
 
-        Known limitation: a crash() cannot clean up after itself, and a
-        node partitioned mid-drain loses its tombstone writes — in both
-        cases the ghost's last metrics DO linger (only the service
-        catalog is TTL-reaped, not metrics KV). A liveness-filtered
-        read_metrics / metrics-KV TTL is the open item for that case."""
+        A crash() cannot clean up after itself, and a node partitioned
+        mid-drain loses its tombstone writes — for those cases every
+        report_serving stamps a __ts liveness key and
+        AutoScaler.read_metrics (metrics_ttl_s) skips sources whose stamp
+        went stale, so a ghost's last serving snapshot ages out of the
+        fleet aggregates instead of lingering. Plain step_time /
+        queue_depth keys still rely on the drain tombstones (their
+        publishers die with the node the catalog TTL-reaps)."""
         self._running = False
         self._stop_evt.set()
         try:
@@ -117,17 +120,26 @@ class NodeAgent:
         Keys the snapshot omits (ServingMetrics' "no data in window"
         contract) are tombstoned with an empty value so stale readings
         can't keep driving the policy after their window lapses —
-        AutoScaler.read_metrics skips non-numeric values."""
+        AutoScaler.read_metrics skips non-numeric values.
+
+        Every report also stamps metrics/<source>/__ts with the agent's
+        clock: the liveness signal AutoScaler.read_metrics (metrics_ttl_s)
+        uses to skip sources that stopped reporting without a drain — a
+        crashed replica can't tombstone its own keys, so its last snapshot
+        would otherwise skew fleet aggregates forever."""
         if not self._running:
             return
         src = source or self.node_id
         seen = self._serving_keys.get(src, set())
-        for name in seen - set(metrics):
+        for name in seen - set(metrics) - {"__ts"}:
             self.registry.kv_put(f"metrics/{src}/{name}", "")
         for name, val in metrics.items():
             self.registry.kv_put(f"metrics/{src}/{name}",
                                  f"{float(val):.6f}")
-        self._serving_keys[src] = set(metrics)
+        self.registry.kv_put(f"metrics/{src}/__ts",
+                             f"{self.clock.now():.6f}")
+        # __ts is tracked so drain()/retire_source tombstone it too
+        self._serving_keys[src] = set(metrics) | {"__ts"}
 
     def retire_source(self, source: str) -> None:
         """A serving source left for good (replica drained + released):

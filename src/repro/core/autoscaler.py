@@ -176,14 +176,37 @@ class AutoScaler:
     cooldown_s: float = 0.0
     min_nodes: int = 1
     max_nodes: int = 256
+    # serving-metrics liveness TTL: skip sources whose last report
+    # (metrics/<src>/__ts, stamped by NodeAgent.report_serving) is older
+    # than this many sim seconds — a crashed replica never tombstones its
+    # keys, and without the filter its final snapshot would skew fleet
+    # aggregates forever. None disables the filter; sources without a
+    # stamp (plain step_time / queue_depth publishers) are always fresh.
+    metrics_ttl_s: Optional[float] = None
     clock: Clock = field(default_factory=RealClock)
     _last_action_t: float = field(default=-1e30, init=False)
     history: List[Tuple[float, str]] = field(default_factory=list, init=False)
 
     def read_metrics(self, registry) -> Dict[str, float]:
+        kv = registry.kv_prefix("metrics/")
+        stale = set()
+        if self.metrics_ttl_s is not None:
+            now = self.clock.now()
+            for key, entry in kv.items():
+                _, node, name = key.split("/", 2)
+                if name != "__ts" or not entry.value:
+                    continue
+                try:
+                    ts = float(entry.value)
+                except ValueError:
+                    continue
+                if now - ts > self.metrics_ttl_s:
+                    stale.add(node)
         out: Dict[str, float] = {}
-        for key, entry in registry.kv_prefix("metrics/").items():
+        for key, entry in kv.items():
             _, node, name = key.split("/", 2)
+            if name == "__ts" or node in stale:
+                continue  # liveness stamp itself / source past its TTL
             val = entry.value.split(":")[-1]
             if not val:  # tombstone: metric's window lapsed (report_serving)
                 continue
@@ -216,7 +239,8 @@ class AutoScaler:
             if vals:
                 out[name] = agg(vals)
         for name in ("slot_occupancy", "kv_block_occupancy",
-                     "prefix_hit_rate", "kv_shared_occupancy"):
+                     "prefix_hit_rate", "kv_shared_occupancy",
+                     "accepted_per_step", "spec_acceptance_rate"):
             occ = [v for k, v in out.items()
                    if k.startswith(f"node_{name}/")]
             if occ:

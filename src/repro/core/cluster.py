@@ -29,7 +29,8 @@ class VirtualCluster:
                  clock: Optional[Clock] = None,
                  image: Optional[ClusterImage] = None,
                  policy: Optional[Policy] = None,
-                 cooldown_s: float = 0.0):
+                 cooldown_s: float = 0.0,
+                 metrics_ttl_s: Optional[float] = None):
         self.clock = clock or ManualClock()
         self.registry = ReplicatedRegistry(n_registry_replicas, self.clock)
         self.hub = ImageHub()
@@ -43,7 +44,8 @@ class VirtualCluster:
         self.template = MeshTemplate(self.registry, clock=self.clock)
         self.scaler = AutoScaler(policy or TargetSizePolicy(n_compute),
                                  provisioner=self.sim, clock=self.clock,
-                                 cooldown_s=cooldown_s)
+                                 cooldown_s=cooldown_s,
+                                 metrics_ttl_s=metrics_ttl_s)
         self.head_id = self.sim.add_head()
         self.sim.add_nodes(n_compute)
         self.pump()

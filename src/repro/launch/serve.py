@@ -32,7 +32,8 @@ from repro.models import model as Mo
 from repro.models.env import Env
 from repro.serve import (SERVE_PLAN, SamplingParams, burst_trace,
                          make_scheduler_policy, make_serving_engine,
-                         poisson_trace, run_to_completion, sysprompt_trace)
+                         poisson_trace, repetitive_trace, run_to_completion,
+                         sysprompt_trace)
 
 
 def serve_batch(mesh, cfg, params, prompts, gen_len: int, plan,
@@ -113,6 +114,13 @@ def _trace_of(args, cfg):
                                gen_len_max=args.gen_max,
                                deadline_s=args.deadline, sampling=sampling,
                                seed=args.seed)
+    if args.trace == "repetitive":
+        return repetitive_trace(args.requests, args.rate,
+                                prompt_len=args.prompt_len,
+                                vocab_size=cfg.vocab_size, gen_len=args.gen,
+                                gen_len_max=args.gen_max,
+                                deadline_s=args.deadline, sampling=sampling,
+                                seed=args.seed)
     return poisson_trace(args.requests, args.rate,
                          prompt_len=args.prompt_len,
                          vocab_size=cfg.vocab_size, gen_len=args.gen,
@@ -121,10 +129,11 @@ def _trace_of(args, cfg):
 
 
 def _make_engine(args, cfg, params, *, num_slots=None, replicas=None,
-                 clock=None):
+                 clock=None, spec=None):
     """A ServingEngine (replicas == 1) or a Router + ReplicaSet data
     plane. --kv-blocks is per replica, so a fleet runs at replicas x that
-    total budget — pass total/replicas to compare at equal KV bytes."""
+    total budget — pass total/replicas to compare at equal KV bytes.
+    `spec` overrides --spec (the --verify re-serve passes "off")."""
     sched = {"preemptive": True} if (args.sched == "edf"
                                      and args.edf_preempt) else {}
     return make_serving_engine(
@@ -137,6 +146,8 @@ def _make_engine(args, cfg, params, *, num_slots=None, replicas=None,
         kv_blocks=args.kv_blocks,
         prefix_cache=args.prefix_cache == "on",
         prefill_chunk=args.prefill_chunk,
+        spec=args.spec if spec is None else spec,
+        spec_k=args.spec_k,
         policy=make_scheduler_policy(args.sched, **sched),
         clock=clock)
 
@@ -152,8 +163,11 @@ def run_trace(args, cfg, params) -> int:
     engine = _make_engine(args, cfg, params, clock=cluster.clock)
     multi = args.replicas > 1
     plane = engine.describe() if multi else engine.pool.describe()
+    spec_tag = ("off" if args.spec == "off"
+                else f"{args.spec} k={args.spec_k}")
     print(f"{plane}, chunked prefill="
           f"{engine.prefill_chunk or 'off'}, scheduler={engine.policy.name}, "
+          f"spec={spec_tag}, "
           f"sampling={'greedy' if args.temperature <= 0 else _sampling_of(args)}")
     trace = _trace_of(args, cfg)
 
@@ -204,6 +218,10 @@ def run_trace(args, cfg, params) -> int:
               f"{snap['prefix_hit_rate']:.2f}, prefill tokens computed "
               f"{snap['prefill_tokens']:.0f}, shared occupancy "
               f"{snap['kv_shared_occupancy']:.2f}")
+    if "accepted_per_step" in snap:
+        print(f"speculative ({spec_tag}): accepted/step "
+              f"{snap['accepted_per_step']:.2f}, acceptance rate "
+              f"{snap['spec_acceptance_rate']:.2f}")
 
     rc = 0
     if args.verify:
@@ -219,6 +237,20 @@ def run_trace(args, cfg, params) -> int:
             ok = out == out2
             print(f"verify {args.replicas} replicas "
                   f"({engine.routing.name} routing) vs 1: "
+                  f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
+        elif args.spec != "off":
+            # the speculative acceptance bar: the same trace served with
+            # --spec off on a fresh engine must emit bit-identical tokens
+            # — drafters and verify lanes are invisible in the output
+            # (greedy and seeded alike; token-match acceptance is the
+            # degenerate rejection-sampling residual, serve/spec.py)
+            eng2 = _make_engine(args, cfg, params, spec="off",
+                                clock=ManualClock())
+            out2 = run_to_completion(eng2, _trace_of(args, cfg),
+                                     dt=args.step_time)
+            ok = out == out2
+            print(f"verify --spec {args.spec} (k={args.spec_k}) vs "
+                  f"--spec off: "
                   f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
         elif args.temperature > 0:
             # seeded sampling has no one-shot oracle; verify the v2
@@ -278,7 +310,8 @@ def main() -> int:
     ap.add_argument("--arch", default="paper-demo")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--trace", default="poisson",
-                    choices=("poisson", "burst", "sysprompt", "oneshot"))
+                    choices=("poisson", "burst", "sysprompt", "repetitive",
+                             "oneshot"))
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
@@ -319,6 +352,14 @@ def main() -> int:
     ap.add_argument("--prefix-len", type=int, default=None,
                     help="sysprompt trace: shared system-prompt length "
                     "(default: 3/4 of --prompt-len)")
+    ap.add_argument("--spec", default="off",
+                    choices=("off", "ngram", "model"),
+                    help="speculative decoding drafter: prompt-lookup "
+                    "self-drafting (ngram) or a tiny draft model; the "
+                    "target verifies k drafts per slot in one fused step "
+                    "and output stays bit-identical to --spec off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per slot per step")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,

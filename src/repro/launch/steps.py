@@ -163,6 +163,37 @@ def make_fused_decode_step(cfg: ModelConfig, env: Env, *, prompt_len: int = 0,
     return step
 
 
+def make_spec_decode_step(cfg: ModelConfig, env: Env, *, prompt_len: int = 0,
+                          sample: bool = False):
+    """Contiguous-cache decode step with row->slot indirection.
+
+    The slot-pool analogue of the paged step's block tables: row i writes
+    its K/V into cache slot row_slots[i] at cur_len[i] and attends over
+    that slot at its own depth. Rows with row_slots[i] < 0 are masked —
+    their write lands at the cache's never-attended tail position (the
+    contiguous analogue of the paged null block), so padding rows cannot
+    corrupt live slots. This is what lets speculative verify rows (several
+    rows sharing one slot at consecutive depths) ride the same fused step
+    the decode slots use.
+    """
+    V = cfg.vocab_size
+    sampler = make_sample_fn(cfg, prompt_len) if sample else None
+
+    def step(params, caches, prev_tok, meta_i, meta_f, row_slots):
+        tok = _select_tokens(prev_tok, meta_i)
+        logits, new_caches, _ = Mo.forward(
+            params, tok[:, None], cfg, env, mode="decode", caches=caches,
+            cur_len=meta_i[ROW_CUR_LEN], row_slots=row_slots)
+        lg = logits[:, 0, :]
+        if sampler is None:
+            nxt = jnp.argmax(lg[:, :V], axis=-1).astype(jnp.int32)
+        else:
+            nxt = sampler(lg, meta_i, meta_f)
+        return nxt, new_caches
+
+    return step
+
+
 def make_paged_decode_step(cfg: ModelConfig, env: Env, *, prompt_len: int = 0,
                            sample: bool = False):
     """Fused decode step over a paged (block-table) KV cache.

@@ -416,7 +416,7 @@ def make_paged_read(cfg: ModelConfig):
 def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
                    cache, cur_len, *, window: int = 0, causal: bool = True,
                    x_kv=None, rope: bool = True, cross: bool = False,
-                   block_tables=None):
+                   block_tables=None, row_slots=None):
     """Self/cross attention sub-layer. Returns (out, new_cache_entries)."""
     if mode in ("train", "prefill"):
         q, k, v = L._project_qkv(p, h, h if x_kv is None else x_kv, cfg, env)
@@ -519,6 +519,28 @@ def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
         o = constrain(o @ p["wo"], env, env.dpx, None, None)
         return o, {"k": new_k, "v": new_v}
     Sc = cache["k"].shape[2]
+    if row_slots is not None:
+        if window > 0:
+            raise NotImplementedError(
+                "row-slot indirection over a windowed ring cache")
+        # row->slot indirection over the contiguous cache: T batch rows
+        # write into (and attend over) num_slots cache rows, several rows
+        # may share one slot at distinct depths (speculative verify lanes).
+        # Masked rows (slot < 0) write at (slot 0, Sc-1): a live request's
+        # last real write position is Sc-2 (cur_len = prompt+gen-1 at the
+        # final step) and attention depth never reaches Sc-1, so the tail
+        # position is the contiguous analogue of the paged null block.
+        rs = jnp.asarray(row_slots)
+        live = rs >= 0
+        slot = jnp.where(live, rs, 0)
+        idx = jnp.where(live, cl, Sc - 1)
+        new_k = cache["k"].at[slot, :, idx].set(
+            kc[:, :, 0].astype(cache["k"].dtype))
+        new_v = cache["v"].at[slot, :, idx].set(
+            vc[:, :, 0].astype(cache["v"].dtype))
+        o = L.attention_decode(q, new_k[slot], new_v[slot], cl, cfg, env)
+        o = constrain(o @ p["wo"], env, env.dpx, None, None)
+        return o, {"k": new_k, "v": new_v}
     idx = cl % Sc if window > 0 else cl
     if cl.ndim:  # per-row write positions: masked write along the seq dim
         oh = (jax.lax.broadcasted_iota(jnp.int32, (B, 1, Sc, 1), 2)
@@ -552,7 +574,8 @@ def _sp(h, env: Env, mode: str):
 
 
 def _apply_block(kind: str, p, h, cfg: ModelConfig, env: Env, mode: str,
-                 positions, cache, cur_len, enc_out=None, block_tables=None):
+                 positions, cache, cur_len, enc_out=None, block_tables=None,
+                 row_slots=None):
     """One sub-block. Returns (h, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     eps = cfg.norm_eps
@@ -563,7 +586,8 @@ def _apply_block(kind: str, p, h, cfg: ModelConfig, env: Env, mode: str,
                                mode if kind != "enc" else "train",
                                positions, cache, cur_len,
                                window=window, causal=causal,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               row_slots=row_slots)
         h = _sp(h + a, env, mode)
         hn = L.rms_norm(h, p["ln2"], eps)
         if kind == "moe":
@@ -622,7 +646,8 @@ def _remat_wrap(fn, env: Env):
 
 def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
                positions, caches=None, cur_len=None, enc_out=None,
-               pattern: Optional[Tuple[str, ...]] = None, block_tables=None):
+               pattern: Optional[Tuple[str, ...]] = None, block_tables=None,
+               row_slots=None):
     """Scan the repeating unit, then run the unrolled tail.
 
     Returns (h, new_caches, aux). caches/new_caches structure:
@@ -643,7 +668,7 @@ def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
                 c = None
             hh, nc, a = _apply_block(kind, p_unit[i], hh, cfg, env, mode,
                                      positions, c, cur_len, enc_out,
-                                     block_tables)
+                                     block_tables, row_slots)
             aux = aux + a
             ncs.append(nc)
         return hh, (tuple(ncs) if use_cache else 0), aux
@@ -685,7 +710,7 @@ def _run_stack(stacked, tail, h, cfg: ModelConfig, env: Env, mode: str,
         else:
             c = None
         h, nc, a = _apply_block(kind, tail[i], h, cfg, env, mode, positions, c,
-                                cur_len, enc_out, block_tables)
+                                cur_len, enc_out, block_tables, row_slots)
         aux = aux + a
         new_tail.append(nc)
 
@@ -720,13 +745,16 @@ def math_isqrt(n: int) -> int:
 
 def forward(params, tokens, cfg: ModelConfig, env: Env, mode: str = "train",
             caches=None, cur_len=None, vision_embeds=None, frames=None,
-            block_tables=None):
+            block_tables=None, row_slots=None):
     """tokens: [B,S] int32 (decode: [B,1]).
 
     vision_embeds: [B,Nv,d] (vlm stub), frames: [B,Se,d] (whisper stub).
     block_tables (decode only): {"global": [B,MB], "local": [B,MBw]} int32
     block tables into a paged cache (init_paged_cache); cur_len must then be
-    a [B] vector. Returns (logits [B,S,Vpad], new_caches, aux).
+    a [B] vector. row_slots (decode only, contiguous cache): [B] int32
+    mapping batch rows to cache slot rows (-1 masks the row) — several rows
+    may target one slot at distinct cur_len depths (speculative verify).
+    Returns (logits [B,S,Vpad], new_caches, aux).
     """
     h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
     h = constrain(h, env, env.dpx, None, None)
@@ -757,7 +785,8 @@ def forward(params, tokens, cfg: ModelConfig, env: Env, mode: str = "train",
 
     h, new_caches, aux = _run_stack(params["blocks"], params["tail"], h, cfg,
                                     env, mode, positions, caches, cur_len,
-                                    enc_out, block_tables=block_tables)
+                                    enc_out, block_tables=block_tables,
+                                    row_slots=row_slots)
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = h @ params["unembed"]
     logits = constrain(logits, env, env.dpx, None, env.plan.tp_axis)

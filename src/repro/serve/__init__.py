@@ -23,6 +23,7 @@ from repro.serve.request import (  # noqa: F401
     RequestQueue,
     burst_trace,
     poisson_trace,
+    repetitive_trace,
     sysprompt_trace,
 )
 from repro.serve.router import (  # noqa: F401
@@ -41,3 +42,9 @@ from repro.serve.scheduler import (  # noqa: F401
     run_to_completion,
 )
 from repro.serve.slots import SlotPool  # noqa: F401
+from repro.serve.spec import (  # noqa: F401
+    Drafter,
+    ModelDrafter,
+    NgramDrafter,
+    make_drafter,
+)

@@ -473,6 +473,34 @@ class BlockManager:
             while s.alloc_l < ring_hi // bs + 1:
                 self._alloc(slot, local=True)
 
+    def truncate(self, slot: int, n: int) -> None:
+        """Roll `slot`'s committed KV back to its first `n` positions —
+        the speculative-rejection path. Blocks wholly past position n-1
+        go back through _release (refcounted: a registered block is
+        retained for reclaim, a private one returns to the free list) and
+        their reservation is re-credited, so a rejected draft costs the
+        pool nothing. Junk KV inside the kept boundary block needs no
+        device work: attention depth is cur_len, and the sequential write
+        cursor overwrites it before it could ever be attended.
+
+        Never reaches shared prefix blocks: verify rows only extend
+        generated positions, so n >= prompt_len >= shared_g * block_size
+        (COW has already privatized the boundary block by the time a slot
+        decodes)."""
+        s = self._slots[slot]
+        assert s is not None and not s.prefilling
+        keep = _ceil_div(n, self.block_size)
+        assert keep >= s.shared_g, \
+            f"truncate({n}) would free shared prefix blocks of slot {slot}"
+        for j in range(keep, s.alloc_g):
+            self._release(int(self.table[slot, j]))
+            self.table[slot, j] = 0
+            s.reserved += 1
+            self._reserved_total += 1
+        s.alloc_g = min(s.alloc_g, keep)
+        # local ring tables are untouched: speculative decode is gated off
+        # sliding-window archs (has_local pools never see truncate)
+
     def _tables_of(self, slot: int):
         return (jnp.asarray(self.table[slot]),
                 jnp.asarray(self.table_local[slot]))

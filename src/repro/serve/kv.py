@@ -110,6 +110,16 @@ class KVBackend(Protocol):
                gen_len: int) -> None: ...
     def ensure(self, slot: int, pos: int) -> None: ...
     def finish_prefill(self, slot: int) -> Any: ...
+    def truncate(self, slot: int, n: int) -> None:
+        """Roll the slot's committed KV back to its first `n` positions —
+        the speculative-rejection path. Capacity committed past position
+        n-1 returns to the pool (paged: whole blocks freed back to the
+        free list, reservation re-credited); reservation-style backends
+        (SlotPool) need no device work — junk past the write cursor is
+        never attended and is overwritten sequentially. `n` is never below
+        the prompt length (verify rows only ever extend generated
+        positions), so shared prefix blocks are never in range."""
+        ...
 
     # -- the fused step ----------------------------------------------------
     def decode(self, params: Pytree, prev_tok, meta_i: np.ndarray,

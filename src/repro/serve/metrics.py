@@ -13,6 +13,9 @@ flat metric names AutoScaler.read_metrics() aggregates:
     preemptions       restart-preemptions issued by the scheduler policy
     prefill_tokens    prompt positions actually computed (cumulative;
                       prefix-cache hits are the gap vs tokens submitted)
+    accepted_per_step tokens emitted per speculating slot-step (> 1.0 is
+                      the speculative win; omitted when not speculating)
+    spec_acceptance_rate  accepted / proposed draft tokens (ditto)
 
 plus whatever extra load signals the KVBackend reports (the paged
 BlockManager adds kv_block_occupancy — committed blocks, the signal that
@@ -52,6 +55,12 @@ class ServingMetrics:
         self.deadline_misses = 0
         self.preemptions = 0
         self.prefill_tokens = 0  # prompt positions actually computed
+        # speculative decoding (cumulative; only speculating slot-steps
+        # count — a replica running --spec off reports none of them)
+        self.spec_steps = 0     # slot-steps that carried >= 1 draft
+        self.spec_proposed = 0  # draft tokens submitted to verify rows
+        self.spec_accepted = 0  # draft tokens accepted (prefix-matched)
+        self.spec_emitted = 0   # tokens emitted by speculating slot-steps
 
     # -- recording ----------------------------------------------------------
     def record_tokens(self, now: float, n: int) -> None:
@@ -70,6 +79,16 @@ class ServingMetrics:
 
     def record_preempt(self, now: float) -> None:
         self.preemptions += 1
+
+    def record_spec(self, proposed: int, accepted: int,
+                    emitted: int) -> None:
+        """One speculating slot-step: `proposed` drafts rode verify rows,
+        `accepted` prefix-matched the target, `emitted` tokens came out
+        (accepted + 1 unless a stop token cut the run short)."""
+        self.spec_steps += 1
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
 
     def record_prefill_tokens(self, n: int) -> None:
         """Prompt positions run through prefill (lane rows or classic
@@ -125,6 +144,10 @@ class ServingMetrics:
         }
         if queue_depth is not None:
             out["queue_depth"] = float(queue_depth)
+        if self.spec_steps:  # omitted entirely when not speculating
+            out["accepted_per_step"] = self.spec_emitted / self.spec_steps
+            out["spec_acceptance_rate"] = (self.spec_accepted
+                                           / max(self.spec_proposed, 1))
         for name, val in backend_metrics.items():
             out[name] = float(val)
         lats = [s for _, s in self._latency]

@@ -197,6 +197,35 @@ def sysprompt_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
                              deadline_s=deadline_s, sampling=sampling)
 
 
+def repetitive_trace(n_requests: int, rate_rps: float, *, prompt_len: int,
+                     vocab_size: int, gen_len: int = 16,
+                     gen_len_max: Optional[int] = None, motif_len: int = 1,
+                     deadline_s: float = math.inf,
+                     sampling: Optional[SamplingParams] = None,
+                     seed: int = 0) -> List[Request]:
+    """Poisson arrivals whose prompts are a short random motif tiled to
+    `prompt_len` — templated/boilerplate traffic (form letters, log lines,
+    code scaffolding) whose continuations are themselves highly repetitive.
+    This is the trace family prompt-lookup speculative decoding is built
+    for: the generated stream keeps revisiting n-grams already in the
+    request's own history, so NgramDrafter proposals land. Deterministic
+    for a given seed (the CLI --verify path regenerates it)."""
+    if not 0 < motif_len <= prompt_len:
+        raise ValueError(f"motif_len must be in (0, prompt_len], got "
+                         f"{motif_len} vs prompt_len {prompt_len}")
+    rng = np.random.default_rng(seed)
+
+    def prompt_fn(rid):
+        motif = rng.integers(0, vocab_size, size=(motif_len,),
+                             dtype=np.int32)
+        reps = -(-prompt_len // motif_len)  # ceil
+        return np.tile(motif, reps)[:prompt_len]
+
+    return _poisson_requests(n_requests, rate_rps, prompt_fn, rng,
+                             gen_len=gen_len, gen_len_max=gen_len_max,
+                             deadline_s=deadline_s, sampling=sampling)
+
+
 def burst_trace(n_requests: int, *, prompt_len: int, vocab_size: int,
                 gen_len: int = 16, at: float = 0.0,
                 deadline_s: float = math.inf,

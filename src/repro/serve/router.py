@@ -132,6 +132,10 @@ class _RetiredCounters:
     completed: int = 0
     prefix_hit_tokens: int = 0
     prefix_lookup_tokens: int = 0
+    spec_steps: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_emitted: int = 0
 
     def absorb(self, replica) -> None:
         m = replica.metrics
@@ -143,6 +147,10 @@ class _RetiredCounters:
                                           "prefix_hit_tokens", 0)
         self.prefix_lookup_tokens += getattr(replica.pool,
                                              "prefix_lookup_tokens", 0)
+        self.spec_steps += m.spec_steps
+        self.spec_proposed += m.spec_proposed
+        self.spec_accepted += m.spec_accepted
+        self.spec_emitted += m.spec_emitted
 
 
 class ReplicaSet:
@@ -161,7 +169,8 @@ class ReplicaSet:
                  **replica_kw):
         """`replica_kw` is forwarded to every ReplicaEngine (num_slots,
         prompt_len, max_gen, kv, block_size, kv_blocks, prefix_cache,
-        max_shared_fraction, prefill_chunk, plan, mesh) — kv_blocks is
+        max_shared_fraction, prefill_chunk, spec, spec_k, plan, mesh) —
+        each replica builds its own drafter — and kv_blocks is
         PER REPLICA: a fleet at an equal total KV budget to a single
         engine passes total/N here."""
         if replicas < 1:
@@ -380,6 +389,20 @@ class ReplicaSet:
         for name in ("deadline_misses", "preemptions", "prefill_tokens"):
             out[name] = (sum(s.get(name, 0.0) for s in snaps)
                          + getattr(self._retired, name))
+        # speculative acceptance from summed COUNTS (like the hit rate:
+        # a mean of per-replica ratios would weight idle replicas equally)
+        rt = self._retired
+        steps = rt.spec_steps + sum(r.metrics.spec_steps
+                                    for r in self.replicas)
+        if steps:
+            prop = rt.spec_proposed + sum(r.metrics.spec_proposed
+                                          for r in self.replicas)
+            acc = rt.spec_accepted + sum(r.metrics.spec_accepted
+                                         for r in self.replicas)
+            emit = rt.spec_emitted + sum(r.metrics.spec_emitted
+                                         for r in self.replicas)
+            out["accepted_per_step"] = emit / steps
+            out["spec_acceptance_rate"] = acc / max(prop, 1)
         lats: List[float] = []
         ttfts: List[float] = []
         for r in self.replicas:

@@ -117,6 +117,7 @@ class ReplicaEngine:
                  prefix_cache: bool = True,
                  max_shared_fraction: float = 1.0,
                  prefill_chunk: Optional[int] = None,
+                 spec=None, spec_k: int = 4,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
                  metrics_window_s: float = 10.0):
@@ -147,6 +148,31 @@ class ReplicaEngine:
                 "state is sequential over the prompt; ring writes wrap "
                 "within a chunk; the slot pool has no per-row tables)")
         self.prefill_chunk = int(prefill_chunk)
+        # -- speculative decoding (serve/spec.py) --------------------------
+        # verify rows ride the step like lane rows: several rows share one
+        # slot at consecutive depths. That needs per-row independent math
+        # over a scatter-then-write cache — attention blocks only. Window
+        # ('local') rings wrap within a draft run and recurrent state is
+        # sequential, so both are gated off (exactly the chunked-prefill
+        # gate, for the same reason).
+        self.spec_k = int(spec_k)
+        if isinstance(spec, str) or spec is None:
+            from repro.serve.spec import make_drafter
+            self.drafter = make_drafter(spec, cfg, env,
+                                        num_slots=num_slots,
+                                        prompt_len=prompt_len,
+                                        max_gen=max_gen, spec_k=self.spec_k)
+        else:  # a pre-built Drafter (tests plug deterministic ones in)
+            self.drafter = spec
+        if self.drafter is not None:
+            kinds = set(cfg.block_pattern) | set(cfg.pattern_tail)
+            if not kinds <= {"attn", "moe"}:
+                raise ValueError(
+                    f"{cfg.name}: speculative decoding needs per-row "
+                    "attention blocks (sliding-window rings wrap within a "
+                    "draft; recurrent state is sequential)")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
         self.metrics = ServingMetrics(window_s=metrics_window_s)
         self._prefill = shared_jit(
             ("prefill", cfg, env.plan, env.mesh),
@@ -204,6 +230,8 @@ class ReplicaEngine:
         """Commit one admission (caller already took it off its queue)."""
         req.t_admit = now
         self._inflight[req.rid] = req
+        if self.drafter is not None:
+            self.drafter.admit(req)
         if self.prefill_chunk:
             slot = self.pool.admit(req.rid, req.eff_gen_len,
                                    prefilling=True, prompt=req.prompt)
@@ -279,6 +307,8 @@ class ReplicaEngine:
         self.pool.evict(slot)
         self._row_src.pop(slot, None)
         self._fresh.pop(slot, None)
+        if self.drafter is not None:
+            self.drafter.retire(victim.rid)
         del self._inflight[victim.rid]
         victim.tokens.clear()
         victim.t_admit = None
@@ -343,12 +373,36 @@ class ReplicaEngine:
         self.metrics.record_prefill_tokens(
             sum(lane.take for lane in lanes))
         lane_rows = self.prefill_chunk if lanes else 0
-        T = N + lane_rows
+        # speculative verify rows: a fixed block of num_slots * spec_k rows
+        # stacked after the lane rows (slot s's candidates at spec_base +
+        # s*spec_k + j), present whenever a drafter is configured so the
+        # step shape set stays as bounded as without speculation. Unused
+        # candidate rows stay masked (row_slots -1).
+        spec_rows = N * self.spec_k if self.drafter is not None else 0
+        spec_base = N + lane_rows
+        T = N + lane_rows + spec_rows
         meta_i = np.zeros((St.META_I_ROWS, T), np.int32)
         meta_f = np.zeros((St.META_F_ROWS, T), np.float32)
         meta_i[St.ROW_TOK_SRC, :] = -1
         row_slots = np.full((T,), -1, np.int32)
         sample = False
+        # draft proposals per decoding slot. k is capped so the last
+        # verify row's write position stays inside the request's declared
+        # budget: max accepted emission is gen_len - tokens_done tokens,
+        # i.e. the final-step row never speculates (its write position
+        # prompt_len + gen_len - 2 is the last the reservation covers).
+        drafts: Dict[int, List[int]] = {}
+        if self.drafter is not None:
+            for slot in active:
+                info = self.pool.info(slot)
+                req = self._inflight[info.rid]
+                k_eff = min(self.spec_k,
+                            info.gen_len - info.tokens_done - 1)
+                if k_eff <= 0:
+                    continue
+                d = self.drafter.propose(req, k_eff)[:k_eff]
+                if d:
+                    drafts[slot] = d
         for slot in active:
             info = self.pool.info(slot)
             req = self._inflight[info.rid]
@@ -361,6 +415,19 @@ class ReplicaEngine:
                 meta_i[St.ROW_FRESH, slot] = self._fresh.pop(slot)
             else:
                 meta_i[St.ROW_TOK_SRC, slot] = self._row_src.pop(slot, slot)
+        for slot, d in drafts.items():
+            info = self.pool.info(slot)
+            req = self._inflight[info.rid]
+            # blocks for every candidate write position (rolled back on
+            # rejection via truncate)
+            self.pool.ensure(slot, info.cur_len + len(d))
+            base = spec_base + slot * self.spec_k
+            for j, tok in enumerate(d):
+                r = base + j
+                row_slots[r] = slot
+                meta_i[St.ROW_FRESH, r] = tok
+                meta_i[St.ROW_CUR_LEN, r] = info.cur_len + 1 + j
+                sample |= self._fill_sampling(meta_i, meta_f, r, req)
         row = N
         for lane in lanes:
             if lane.take <= 0:
@@ -384,12 +451,40 @@ class ReplicaEngine:
 
         emitted = 0
         for slot in active:
-            info = self.pool.advance(slot)
+            info = self.pool.info(slot)
             req = self._inflight[info.rid]
-            tok = int(nxt[slot])
-            req.tokens.append(tok)
-            emitted += 1
-            if self.pool.finished(slot) or tok in req.sampling.stop_set:
+            cur = info.cur_len
+            d = drafts.get(slot, [])
+            outs = [int(nxt[slot])]
+            base = spec_base + slot * self.spec_k
+            outs += [int(nxt[base + j]) for j in range(len(d))]
+            # accept the longest prefix where draft j matches the target's
+            # own output for that position (o_{j-1}): verify row j's
+            # logits — and, seeded, its fold_in(seed, position) draw — are
+            # bit-identical to sequential decode's exactly while every
+            # earlier draft matched, so emitting o_0..o_a is bit-exact
+            a = 0
+            while a < len(d) and d[a] == outs[a]:
+                a += 1
+            emit = outs[:a + 1]
+            stop = req.sampling.stop_set
+            cut = next((i for i, t in enumerate(emit) if t in stop), None)
+            if cut is not None:
+                emit = emit[:cut + 1]
+            if d:
+                # roll the rejected suffix's KV capacity back (a no-op
+                # when every draft was accepted) and record acceptance
+                self.pool.truncate(slot, cur + len(emit))
+                self.metrics.record_spec(len(d), len(emit) - 1, len(emit))
+            # next step's input token (the last emitted) sits at the row
+            # that produced it — main row for a=0, else verify row a-1
+            self._row_src[slot] = (slot if len(emit) == 1
+                                   else base + len(emit) - 2)
+            for tok in emit:
+                self.pool.advance(slot)
+                req.tokens.append(tok)
+                emitted += 1
+            if self.pool.finished(slot) or emit[-1] in stop:
                 self._retire(slot, now)
         still_open: List[_Lane] = []
         for lane in lanes:
@@ -435,6 +530,8 @@ class ReplicaEngine:
         self.pool.evict(slot)
         self._row_src.pop(slot, None)
         self._fresh.pop(slot, None)
+        if self.drafter is not None:
+            self.drafter.retire(rid)
 
     # -- reporting ----------------------------------------------------------------
     def load_score(self):
@@ -466,6 +563,7 @@ class ServingEngine:
                  prefix_cache: bool = True,
                  max_shared_fraction: float = 1.0,
                  prefill_chunk: Optional[int] = None,
+                 spec=None, spec_k: int = 4,
                  policy: Optional[SchedulerPolicy] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
@@ -475,7 +573,8 @@ class ServingEngine:
             max_gen=max_gen, kv=kv, block_size=block_size,
             kv_blocks=kv_blocks, prefix_cache=prefix_cache,
             max_shared_fraction=max_shared_fraction,
-            prefill_chunk=prefill_chunk, plan=plan, mesh=mesh, clock=clock,
+            prefill_chunk=prefill_chunk, spec=spec, spec_k=spec_k,
+            plan=plan, mesh=mesh, clock=clock,
             metrics_window_s=metrics_window_s)
         self.policy: SchedulerPolicy = policy or FIFOPolicy()
         self.queue = RequestQueue()
@@ -516,6 +615,14 @@ class ServingEngine:
     @property
     def prefill_chunk(self) -> int:
         return self.replica.prefill_chunk
+
+    @property
+    def drafter(self):
+        return self.replica.drafter
+
+    @property
+    def spec_k(self) -> int:
+        return self.replica.spec_k
 
     @property
     def metrics(self) -> ServingMetrics:

@@ -91,6 +91,16 @@ class SlotPool:
                                                       sample=s),
                 donate_argnums=(1,))
             for s in (False, True)}
+        # row-indirected variant (T != num_slots rows, row_slots maps rows
+        # onto cache slots): what speculative verify rows ride
+        self._decode_spec = {
+            s: shared_jit(
+                ("slot_decode_spec", cfg, env.plan, env.mesh, prompt_len, s),
+                lambda s=s: St.make_spec_decode_step(cfg, env,
+                                                     prompt_len=prompt_len,
+                                                     sample=s),
+                donate_argnums=(1,))
+            for s in (False, True)}
 
     # -- occupancy ---------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -176,6 +186,12 @@ class SlotPool:
     def ensure(self, slot: int, pos: int) -> None:
         """Capacity is reserved wholesale at admission — nothing to grow."""
 
+    def truncate(self, slot: int, n: int) -> None:
+        """Speculative rollback is free on a reserved contiguous cache:
+        positions past the write cursor are never attended (attention
+        depth is cur_len) and the sequential decode overwrites them before
+        the cursor ever reaches them."""
+
     def finish_prefill(self, slot: int) -> SlotInfo:
         raise NotImplementedError("slot pool has no chunked-prefill lanes")
 
@@ -192,8 +208,16 @@ class SlotPool:
     # -- the fused step -------------------------------------------------------
     def decode(self, params, prev_tok, meta_i, meta_f, row_slots, *,
                sample: bool):
-        """One fused step over the contiguous pool; rows address slots
-        directly (row == slot), so row_slots is ignored."""
+        """One fused step over the contiguous pool. The classic shape
+        (T == num_slots rows) addresses slots directly (row == slot) and
+        ignores row_slots; a wider batch — speculative verify rows stacked
+        past the slots — runs the row-indirected step, where row_slots
+        maps each row onto its slot's cache row (-1 masks)."""
+        if meta_i.shape[1] != self.num_slots:
+            nxt, self.caches = self._decode_spec[sample](
+                params, self.caches, prev_tok, jnp.asarray(meta_i),
+                jnp.asarray(meta_f), jnp.asarray(row_slots))
+            return nxt
         del row_slots
         nxt, self.caches = self._decode[sample](
             params, self.caches, prev_tok, jnp.asarray(meta_i),

@@ -1,0 +1,242 @@
+"""Drafters for speculative decoding on the fused step.
+
+A Drafter proposes up to k next tokens for a decoding request; the target
+model verifies all of them in ONE fused step by stacking verify rows onto
+the decode batch (scheduler.py) — row j holds draft d_j at depth
+cur_len + j, exactly the mechanism chunked prefill already rides. The
+target's own per-position outputs o_0..o_m come back in the same [T]
+token download; the engine keeps the longest prefix where d_j == o_{j-1}
+and emits o_0..o_a.
+
+Why token-match acceptance is bit-exact for sampled rows too: the fused
+sample step draws each row from fold_in(PRNGKey(seed), position)
+(launch/steps.py make_sample_fn) — the target's token at a position is a
+deterministic function of (seed, position, logits), and the verify row's
+logits are identical to sequential decode's whenever every earlier draft
+matched. The textbook rejection-sampling residual therefore degenerates
+to exact token match: the "re-draw from the position's own key" IS the
+verify row's output. Greedy rows are the temperature<=0 argmax special
+case of the same argument.
+
+Two drafters ship behind the one protocol:
+
+`NgramDrafter` — prompt-lookup self-drafting (no extra model, no extra
+KV): match the request's trailing n-gram against its own earlier history
+(prompt + generated tokens) and propose the continuation that followed
+the most recent earlier occurrence. Free to run, strong on repetitive /
+templated traffic (system prompts, code, quoting) — the trace family the
+CI floor gates on.
+
+`ModelDrafter` — a tiny qwen2-1.5b-smoke-shaped config (own params from
+PRNGKey(0), vocab shared with the target) decoding greedily one token
+ahead through its own SlotPool. The target's emitted tokens are fed in
+as catch-up before each proposal, so rejected draft KV is overwritten
+sequentially and never attended (depth masking) — rollback is implicit.
+The draft cache is a separate pool: the target's KV blocks hold
+[n_kv_heads, head_dim] rows of the *target* — a different-shaped draft
+model cannot literally share them, so "sharing the KVBackend" here means
+sharing the backend implementation, not the block pool. Each drafter
+step is a T=1 fused step with a host sync — simulation-grade; the CI
+perf floors gate the ngram drafter only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as St
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.serve.kv import shared_jit
+from repro.serve.request import Request
+
+Pytree = Any
+
+
+class Drafter:
+    """Base drafter: propose() is the contract; admit/retire are optional
+    lifecycle hooks (stateful drafters keep per-request caches)."""
+
+    name = "none"
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        """Up to k draft tokens continuing req's history (prompt + tokens).
+        May return fewer, or [] to skip speculation this step."""
+        raise NotImplementedError
+
+    def admit(self, req: Request) -> None:
+        """The engine admitted req (it may re-admit after a preemption)."""
+
+    def retire(self, rid: int) -> None:
+        """req finished or was preempted: drop any per-request state."""
+
+    def describe(self) -> str:
+        return self.name
+
+
+def _history(req: Request) -> List[int]:
+    return [int(t) for t in req.prompt] + [int(t) for t in req.tokens]
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup decoding: the request's own history is the draft
+    model. Match the longest trailing n-gram (n = max_n..1) at its most
+    recent earlier occurrence and propose the k tokens that followed it."""
+
+    name = "ngram"
+
+    def __init__(self, *, max_n: int = 3):
+        self.max_n = max_n
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        hist = _history(req)
+        L = len(hist)
+        for n in range(min(self.max_n, L - 1), 0, -1):
+            suffix = hist[L - n:]
+            best: List[int] = []
+            for i in range(L - n - 1, -1, -1):  # most recent match first
+                if hist[i:i + n] == suffix:
+                    # i + n <= L - 1, so at least one continuation token
+                    cont = hist[i + n:i + n + k]
+                    if len(cont) >= k:
+                        return cont
+                    if len(cont) > len(best):
+                        # matches near the end of history truncate the
+                        # continuation (a constant run's most recent match
+                        # is its own tail) — keep scanning for one that
+                        # can supply all k tokens, fall back to the
+                        # longest otherwise
+                        best = cont
+            if best:
+                return best
+        return []
+
+
+@dataclasses.dataclass
+class _DraftState:
+    slot: int
+    committed: int  # history positions whose KV the draft cache holds
+
+
+def draft_config(target: ModelConfig) -> ModelConfig:
+    """The tiny draft config: qwen2-1.5b-smoke shapes with the target's
+    vocabulary (draft tokens must be target token ids)."""
+    return ModelConfig(
+        name=f"draft-of-{target.name}",
+        family="dense",
+        n_layers=2,
+        d_model=48,
+        n_heads=3,
+        n_kv_heads=1,
+        d_ff=128,
+        vocab_size=target.vocab_size,
+        head_dim=16,
+        qkv_bias=True,
+        block_pattern=("attn",),
+    )
+
+
+class ModelDrafter(Drafter):
+    """A small greedy draft model with its own SlotPool-backed KV.
+
+    Per request: admit() prefills the prompt into a draft slot; propose()
+    first catches the draft KV up with the target-emitted tokens (the
+    committed cursor), then chains k greedy T=1 steps feeding its own
+    predictions. Draft-phase KV writes past the committed cursor are junk
+    the moment the target rejects — the next catch-up overwrites them
+    sequentially, and depth-masked attention never looked at them."""
+
+    name = "model"
+
+    def __init__(self, target: ModelConfig, env: Env, *, num_slots: int,
+                 prompt_len: int, max_gen: int, spec_k: int):
+        from repro.serve.slots import SlotPool
+        self.cfg = draft_config(target)
+        self.env = env
+        self.prompt_len = prompt_len
+        # + spec_k headroom: draft-phase writes run past the committed
+        # history by up to k-1 positions
+        self.pool = SlotPool(self.cfg, env, num_slots=num_slots,
+                             prompt_len=prompt_len,
+                             max_gen=max_gen + spec_k)
+        self.params = Mo.init_params(jax.random.PRNGKey(0), self.cfg, env)
+        self._prefill = shared_jit(
+            ("prefill", self.cfg, env.plan, env.mesh),
+            lambda: St.make_prefill_step(self.cfg, env))
+        self._state: Dict[int, _DraftState] = {}
+        self._tok_prev = jnp.zeros((1,), jnp.int32)
+
+    def admit(self, req: Request) -> None:
+        if req.rid in self._state or not self.pool.can_admit(0):
+            return
+        slot = self.pool.admit(req.rid, req.eff_gen_len)
+        _, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+        self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
+        self._state[req.rid] = _DraftState(slot=slot,
+                                           committed=self.prompt_len)
+
+    def retire(self, rid: int) -> None:
+        st = self._state.pop(rid, None)
+        if st is not None:
+            self.pool.evict(st.slot)
+
+    def _step(self, tok: int, pos: int, slot: int) -> int:
+        """One greedy T=1 fused step: write tok's KV at pos, return the
+        draft model's argmax for pos+1."""
+        mi = np.zeros((St.META_I_ROWS, 1), np.int32)
+        mi[St.ROW_TOK_SRC, 0] = -1
+        mi[St.ROW_FRESH, 0] = tok
+        mi[St.ROW_CUR_LEN, 0] = pos
+        mf = np.zeros((St.META_F_ROWS, 1), np.float32)
+        nxt = self.pool.decode(self.params, self._tok_prev, mi, mf,
+                               np.asarray([slot], np.int32), sample=False)
+        return int(np.asarray(nxt)[0])
+
+    def propose(self, req: Request, k: int) -> List[int]:
+        if req.rid not in self._state:
+            self.admit(req)  # lazy (re-)admission after preemption
+        st = self._state.get(req.rid)
+        if st is None:  # draft pool exhausted: skip speculation
+            return []
+        hist = _history(req)
+        if st.committed >= len(hist):
+            return []  # nothing new to ingest (engine never gets here)
+        # catch-up: commit the target's emitted tokens into the draft KV;
+        # the final step's output is the draft for position len(hist)
+        nxt = 0
+        for pos in range(st.committed, len(hist)):
+            nxt = self._step(hist[pos], pos, st.slot)
+        st.committed = len(hist)
+        out = [nxt]
+        pos = len(hist)
+        for _ in range(k - 1):  # draft phase: junk KV past committed
+            nxt = self._step(nxt, pos, st.slot)
+            out.append(nxt)
+            pos += 1
+        return out[:k]
+
+    def describe(self) -> str:
+        return (f"model ({self.cfg.name}: {self.cfg.n_layers}L "
+                f"d{self.cfg.d_model})")
+
+
+def make_drafter(kind: Optional[str], cfg: ModelConfig, env: Env, *,
+                 num_slots: int, prompt_len: int, max_gen: int,
+                 spec_k: int) -> Optional[Drafter]:
+    """The one drafter-kind dispatch (mirrors make_kv_backend)."""
+    if kind is None or kind == "off":
+        return None
+    if kind == "ngram":
+        return NgramDrafter()
+    if kind == "model":
+        return ModelDrafter(cfg, env, num_slots=num_slots,
+                            prompt_len=prompt_len, max_gen=max_gen,
+                            spec_k=spec_k)
+    raise ValueError(f"unknown drafter {kind!r} "
+                     "(expected 'off', 'ngram' or 'model')")

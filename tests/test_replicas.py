@@ -326,6 +326,62 @@ def test_retire_source_is_idempotent_and_scoped():
     c.shutdown()
 
 
+def test_metrics_ttl_ages_out_killed_replica_without_drain():
+    """A replica killed WITHOUT start_drain never tombstones its keys —
+    its last snapshot would skew the fleet p95 forever. report_serving
+    stamps metrics/<src>/__ts; with metrics_ttl_s set the autoscaler
+    skips sources whose stamp went stale, so the fleet snapshot converges
+    to the survivors."""
+    c = VirtualCluster(n_compute=1, metrics_ttl_s=1.0)
+    agent = c.sim.nodes[c.head_id].agent
+    agent.report_serving({"tokens_per_s": 5.0, "latency_p95_ms": 900.0},
+                         source="replica-0")
+    agent.report_serving({"tokens_per_s": 7.0, "latency_p95_ms": 40.0},
+                         source="replica-1")
+    m = c.scaler.read_metrics(c.registry)
+    assert m["tokens_per_s"] == 12.0 and m["latency_p95_ms"] == 900.0
+    # replica-0 is killed (no drain, no tombstones); replica-1 lives on
+    c.clock.advance(0.6)
+    agent.report_serving({"tokens_per_s": 7.0, "latency_p95_ms": 40.0},
+                         source="replica-1")
+    m = c.scaler.read_metrics(c.registry)
+    assert m["tokens_per_s"] == 12.0, "inside the TTL the ghost lingers"
+    c.clock.advance(0.6)  # replica-0's stamp is now 1.2s old (> TTL)
+    agent.report_serving({"tokens_per_s": 7.0, "latency_p95_ms": 40.0},
+                         source="replica-1")
+    m = c.scaler.read_metrics(c.registry)
+    assert m["tokens_per_s"] == 7.0
+    assert m["latency_p95_ms"] == 40.0, "ghost p95 no longer pins the max"
+    assert not any(k.endswith("/replica-0") for k in m), m
+    # the liveness stamp never leaks into the aggregates as a metric
+    assert not any("__ts" in k for k in m), m
+    c.shutdown()
+
+
+def test_metrics_ttl_spares_plain_and_fresh_sources():
+    """Sources without a __ts stamp (step_time/queue_depth publishers —
+    their keys die with the node via drain tombstones) are always fresh,
+    and the filter is off entirely when metrics_ttl_s is None."""
+    c = VirtualCluster(n_compute=1, metrics_ttl_s=1.0)
+    node = c.compute_nodes()[0]
+    agent = c.sim.nodes[node].agent
+    agent.report_step_time(0, 0.25)
+    head = c.sim.nodes[c.head_id].agent
+    head.report_serving({"tokens_per_s": 5.0}, source="replica-0")
+    c.clock.advance(5.0)
+    m = c.scaler.read_metrics(c.registry)
+    assert m["step_time"] == pytest.approx(0.25), "no stamp == always fresh"
+    assert "tokens_per_s" not in m, "stale serving source dropped"
+    c.shutdown()
+
+    c2 = VirtualCluster(n_compute=1)  # TTL disabled (default None)
+    head2 = c2.sim.nodes[c2.head_id].agent
+    head2.report_serving({"tokens_per_s": 5.0}, source="replica-0")
+    c2.clock.advance(1e6)
+    assert c2.scaler.read_metrics(c2.registry)["tokens_per_s"] == 5.0
+    c2.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # prefix-cache eviction: hit-count-weighted reclaim + residency cap
 # ---------------------------------------------------------------------------

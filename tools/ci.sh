@@ -61,6 +61,22 @@ assert rp["sampled_exact"], "the router perturbed seeded sampling"
 assert rp["speedup_tokens_per_s"] >= 2.0, rp
 assert rp["affine_hit_rate"] > rp["occupancy_hit_rate"], rp
 assert rp["ttft_p95_ms_4"] < rp["ttft_p95_ms_1"], rp
+# speculative-decoding floors (ISSUE-6): ngram drafting (k>=3) on the
+# repetitive-suffix trace must emit >1 token per decode step, reach
+# >=1.5x decode tokens/s AND strictly lower ms/token than the
+# non-speculative baseline at an equal KV byte budget, while staying
+# bit-identical to --spec off (greedy and seeded) — sim-time ratios,
+# machine-speed-proof
+sx = r["spec"]
+assert sx["token_exact"], "speculation perturbed greedy tokens"
+assert sx["sampled_exact"], "speculation perturbed seeded sampling"
+assert sx["kv_bytes_equal"], "spec ran with a different KV budget"
+assert sx["spec_k"] >= 3, sx
+assert sx["speedup_decode_tokens_per_s"] >= 1.5, sx
+assert sx["accepted_per_step"] > 1.0, sx
+assert sx["spec_acceptance_rate"] > 0.0, sx
+assert (sx["ngram"]["ms_per_token_sim"]
+        < sx["baseline"]["ms_per_token_sim"]), sx
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
@@ -76,3 +92,6 @@ python -m repro.launch.serve --trace sysprompt --smoke --verify \
 
 echo "== serving demo (4-replica router + prefix-affine routing + live drain + verify) =="
 python -m repro.launch.serve --replicas 4 --routing prefix --smoke --verify
+
+echo "== serving demo (speculative decoding, ngram drafter + verify vs --spec off) =="
+python -m repro.launch.serve --spec ngram --smoke --verify
