@@ -880,6 +880,142 @@ def bench_serve_spec_full():
     return bench_serve_spec(smoke=False)
 
 
+# -- tiered KV: int8 quant backend + host swap-out preemption -------------------
+#
+# Two claims recorded per commit (merged into BENCH_serve.json):
+#   capacity: at EQUAL pool bytes the int8 backend admits >= 1.8x the
+#     peak concurrency of the bf16 paged backend (per-block ratio is
+#     (hd + 4) / (2 * hd), so head_dim=64 -> 1.88x more blocks), with
+#     ms/token for slot / paged / quant on the same burst recorded.
+#   swap: a preemption with the host tier on resumes with
+#     recomputed_tokens == 0 where the restart path replays the victim's
+#     prompt + generated prefix — same tokens either way.
+
+
+def bench_serve_tiered(smoke: bool = True):
+    import dataclasses
+
+    from repro.models import model as Mo
+    from repro.models.env import Env
+    from repro.serve import (SERVE_PLAN, EDFPolicy, SamplingParams,
+                             ServingEngine, burst_trace, run_to_completion)
+
+    # the smoke arch's head_dim=16 would only buy (16+4)/32 = 1.6x blocks
+    # — below the paper-scale claim. head_dim=64 (the full paper-demo
+    # width) gives the per-block byte ratio the tier actually ships with.
+    cfg = dataclasses.replace(get_smoke("paper-demo"),
+                              name="paper-demo-tiered", head_dim=64)
+    params = Mo.init_params(jax.random.PRNGKey(0), cfg,
+                            Env(mesh=None, plan=SERVE_PLAN))
+    prompt_len, max_gen, bs = 16, 16, 8
+    n_req = 48 if smoke else 96
+    blocks_per_req = (prompt_len + max_gen) // bs  # 4
+    fp_blocks = 21  # incl. null: 20 usable -> 5 concurrent requests
+    # equal device bytes: quant blocks cost (hd+4)/(2*hd) of bf16 blocks
+    quant_blocks = int(fp_blocks * 2 * cfg.head_dim // (cfg.head_dim + 4))
+    slot_slots = fp_blocks * bs // (prompt_len + max_gen)  # same token budget
+    trace = burst_trace(n_req, prompt_len=prompt_len,
+                        vocab_size=cfg.vocab_size, gen_len=max_gen, seed=0)
+    mk_trace = lambda: [dataclasses_replace(r) for r in trace]
+
+    def mk(kv, **kw):
+        return ServingEngine(cfg, params, prompt_len=prompt_len,
+                             max_gen=max_gen, kv=kv, **kw)
+
+    res = {}
+    res["slot"] = _serve_engine_bench(
+        mk("slot", num_slots=slot_slots), mk_trace,
+        baseline_streamed=False, section="tiered")
+    res["paged"] = _serve_engine_bench(
+        mk("paged", num_slots=12, block_size=bs, kv_blocks=fp_blocks),
+        mk_trace, baseline_streamed=True, section="tiered")
+    res["quant"] = _serve_engine_bench(
+        mk("quant", num_slots=12, block_size=bs, kv_blocks=quant_blocks),
+        mk_trace, baseline_streamed=True, section="tiered")
+    bytes_ratio = res["quant"]["kv_bytes"] / max(res["paged"]["kv_bytes"], 1)
+    assert bytes_ratio <= 1.01, \
+        f"quant pool must fit the fp byte budget, got {bytes_ratio}"
+    conc_ratio = (res["quant"]["peak_concurrent"]
+                  / max(res["paged"]["peak_concurrent"], 1))
+
+    # swap vs restart: EDF preempts a deadline-free runner for an urgent
+    # arrival; with the host tier on, the victim resumes where it stopped
+    sp = SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+
+    def preempt_run(swap):
+        # prefix_cache off so the restart path's recompute bill is not
+        # masked by warm prompt blocks — the delta isolates the host tier
+        eng = mk("paged", num_slots=1, block_size=bs, kv_blocks=fp_blocks,
+                 policy=EDFPolicy(preemptive=True, min_slack_s=1.0),
+                 swap=swap, prefix_cache=False)
+        reqs = burst_trace(2, prompt_len=prompt_len,
+                           vocab_size=cfg.vocab_size, gen_len=8, seed=1)
+        reqs[0] = dataclasses.replace(reqs[0], sampling=sp)
+        reqs[1] = dataclasses.replace(reqs[1], gen_len=2, arrival_t=0.12,
+                                      deadline_s=0.4)
+        out = run_to_completion(eng, reqs, dt=0.05)
+        snap = eng.snapshot()
+        return out, {
+            "preemptions": int(snap["preemptions"]),
+            "recomputed_tokens": int(snap["recomputed_tokens"]),
+            "swapped_blocks": int(snap.get("swapped_blocks", 0)),
+            "swap_in_bytes": int(snap.get("swap_in_bytes", 0)),
+        }
+
+    out_restart, restart = preempt_run(swap=False)
+    out_swap, swap = preempt_run(swap=True)
+
+    div_eng = mk("quant", num_slots=2, block_size=bs,
+                 kv_blocks=quant_blocks)
+    kv_quant_div = div_eng.pool.metrics()["kv_quant_divergence"]
+    div_eng.replica.release()
+
+    report = {
+        "tiered": {
+            "config": {"arch": cfg.name, "head_dim": cfg.head_dim,
+                       "prompt_len": prompt_len, "max_gen": max_gen,
+                       "block_size": bs, "requests": n_req,
+                       "fp_kv_blocks": fp_blocks,
+                       "quant_kv_blocks": quant_blocks,
+                       "blocks_per_request": blocks_per_req},
+            "slot": res["slot"],
+            "paged": res["paged"],
+            "quant": res["quant"],
+            "kv_bytes_ratio_quant_vs_fp": round(bytes_ratio, 4),
+            "quant_concurrency_ratio": round(conc_ratio, 3),
+            "kv_quant_divergence": round(kv_quant_div, 5),
+            "swap": {
+                "restart": restart,
+                "swap": swap,
+                "tokens_identical": bool(out_restart == out_swap),
+                "recomputed_tokens_saved":
+                    restart["recomputed_tokens"] - swap["recomputed_tokens"],
+            },
+        }
+    }
+    _merge_bench_report(report)
+    t = report["tiered"]
+    return [
+        ("serve_tiered_concurrency_ratio", t["quant_concurrency_ratio"],
+         f"quant={res['quant']['peak_concurrent']} "
+         f"fp={res['paged']['peak_concurrent']} at "
+         f"{t['kv_bytes_ratio_quant_vs_fp']}x kv bytes "
+         f"divergence={t['kv_quant_divergence']}"),
+        ("serve_tiered_ms_per_token_wall",
+         res["quant"]["ms_per_token_wall"],
+         f"paged={res['paged']['ms_per_token_wall']} "
+         f"slot={res['slot']['ms_per_token_wall']}"),
+        ("serve_tiered_swap_recompute", swap["recomputed_tokens"],
+         f"restart={restart['recomputed_tokens']} "
+         f"swapped_blocks={swap['swapped_blocks']} "
+         f"identical={t['swap']['tokens_identical']}"),
+    ]
+
+
+def bench_serve_tiered_full():
+    return bench_serve_tiered(smoke=False)
+
+
 # -- per-arch smoke step times (throughput harness) -------------------------------
 
 

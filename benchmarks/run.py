@@ -24,6 +24,8 @@ def main() -> None:
                                           bench_serve_sampling_full,
                                           bench_serve_spec,
                                           bench_serve_spec_full,
+                                          bench_serve_tiered,
+                                          bench_serve_tiered_full,
                                           bench_serve_throughput,
                                           bench_serve_throughput_full,
                                           bench_step_time, warmed_sections)
@@ -37,14 +39,15 @@ def main() -> None:
         benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput,
                    bench_serve_paged, bench_serve_sampling,
                    bench_serve_prefix, bench_serve_replicas,
-                   bench_serve_spec)
+                   bench_serve_spec, bench_serve_tiered)
     else:
         benches = (bench_cluster_formation, bench_autoscale_response,
                    bench_mpi_job, bench_env_capture,
                    bench_interconnect_model, bench_serve_throughput_full,
                    bench_step_time, bench_serve_paged_full,
                    bench_serve_sampling_full, bench_serve_prefix_full,
-                   bench_serve_replicas_full, bench_serve_spec_full)
+                   bench_serve_replicas_full, bench_serve_spec_full,
+                   bench_serve_tiered_full)
 
     print("name,us_per_call,derived")
     for bench in benches:

@@ -67,6 +67,57 @@ def _pd_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             o_ref.dtype).reshape(o_ref.shape)
 
 
+def _pd_quant_kernel(tbl_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                     o_ref, m_sc, l_sc, acc_sc, *, scale: float, bs: int,
+                     g: int):
+    """Quantized variant: K/V blocks arrive as int8 and are dequantized in
+    registers right after the DMA lands — the per-row scales ([NB,Hkv,bs]
+    f32) ride scalar prefetch next to the block table, so the dequant
+    multiply is fused into the same pipeline step as the attention math
+    (no fp copy of the pool ever exists)."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    cur_len = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    k_start = j * bs
+
+    @pl.when(k_start <= cur_len)
+    def _compute():
+        # same clamp as the BlockSpec index map: dead blocks re-read the
+        # last live one, so the scales must be looked up the same way
+        j_live = jnp.maximum(jnp.minimum(j, cur_len // bs), 0)
+        blk = tbl_ref[b, j_live]
+        ks = ks_ref[blk, h // g, :]  # [bs] f32, from SMEM
+        vs = vs_ref[blk, h // g, :]
+        q = q_ref[...].reshape(1, -1).astype(jnp.float32)  # [1, hd]
+        k = k_ref[0, 0].astype(jnp.float32) * ks[:, None]  # [bs, hd]
+        v = v_ref[0, 0].astype(jnp.float32) * vs[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(kpos <= cur_len, s, NEG_INF)
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(
+            o_ref.dtype).reshape(o_ref.shape)
+
+
 def paged_flash_decode_kernel(q, k_pool, v_pool, tables, lengths, *,
                               interpret: bool = False):
     """q: [B,Hq,hd]; k_pool/v_pool: [NB,Hkv,bs,hd]; tables: [B,MB] int32
@@ -113,4 +164,58 @@ def paged_flash_decode_kernel(q, k_pool, v_pool, tables, lengths, *,
         ),
         interpret=interpret,
     )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q, k_pool, v_pool)
+
+
+def paged_flash_decode_quant_kernel(q, k_pool, v_pool, k_scale, v_scale,
+                                    tables, lengths, *,
+                                    interpret: bool = False):
+    """Quantized paged decode. q: [B,Hq,hd]; k_pool/v_pool: [NB,Hkv,bs,hd]
+    int8; k_scale/v_scale: [NB,Hkv,bs] f32 per-row dequant scales; tables:
+    [B,MB] int32; lengths: [B] int32 (-1 = fully masked).
+
+    Scales ride scalar prefetch (SMEM) with the table/lengths; int8 blocks
+    ride the same BlockSpec DMA schedule as the fp kernel and are
+    dequantized in-register. Returns o [B,Hq,hd] f32.
+    """
+    B, Hq, hd = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    MB = tables.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_pd_quant_kernel, scale=scale, bs=bs, g=g)
+
+    def kv_index(b, h, j, tbl, L, ks, vs, g=g):
+        j_live = jnp.maximum(jnp.minimum(j, L[b] // bs), 0)
+        return (tbl[b, j_live], h // g, 0, 0)
+
+    def q_index(b, h, j, tbl, L, ks, vs):
+        return (b, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # table, lengths, k_scale, v_scale -> SMEM
+        grid=(B, Hq, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), q_index),
+            pl.BlockSpec((1, 1, bs, hd), kv_index),
+            pl.BlockSpec((1, 1, bs, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      jnp.asarray(k_scale, jnp.float32), jnp.asarray(v_scale, jnp.float32),
       q, k_pool, v_pool)

@@ -30,3 +30,13 @@ def paged_decode_ref(q, k_pool, v_pool, tables, lengths):
     a = jnp.where(jnp.isfinite(a), a, 0.0)  # fully-masked rows -> zeros
     o = jnp.einsum("bhgk,bhkd->bhgd", a, vg.astype(jnp.float32))
     return o.reshape(B, Hq, hd)
+
+
+def paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale, tables,
+                           lengths):
+    """Quantized oracle: dequantize the whole int8 pool up front
+    (values * per-row scales), then run the fp reference. k_pool/v_pool
+    [NB,Hkv,bs,hd] int8; k_scale/v_scale [NB,Hkv,bs] f32."""
+    kf = k_pool.astype(jnp.float32) * k_scale[..., None]
+    vf = v_pool.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_ref(q, kf, vf, tables, lengths)

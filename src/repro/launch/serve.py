@@ -148,6 +148,8 @@ def _make_engine(args, cfg, params, *, num_slots=None, replicas=None,
         prefill_chunk=args.prefill_chunk,
         spec=args.spec if spec is None else spec,
         spec_k=args.spec_k,
+        swap=args.swap == "on",
+        swap_budget_blocks=args.swap_budget_blocks,
         policy=make_scheduler_policy(args.sched, **sched),
         clock=clock)
 
@@ -222,6 +224,14 @@ def run_trace(args, cfg, params) -> int:
         print(f"speculative ({spec_tag}): accepted/step "
               f"{snap['accepted_per_step']:.2f}, acceptance rate "
               f"{snap['spec_acceptance_rate']:.2f}")
+    if args.swap == "on":
+        print(f"swap tier: {snap.get('swapped_blocks', 0.0):.0f} blocks "
+              f"out ({snap.get('swap_out_bytes', 0.0):.0f}B), "
+              f"{snap.get('swap_in_bytes', 0.0):.0f}B restored, "
+              f"recomputed tokens {snap.get('recomputed_tokens', 0.0):.0f}")
+    if "kv_quant_divergence" in snap:
+        print(f"quant KV: calibrated divergence "
+              f"{snap['kv_quant_divergence']:.4f} relative RMS")
 
     rc = 0
     if args.verify:
@@ -251,6 +261,22 @@ def run_trace(args, cfg, params) -> int:
             ok = out == out2
             print(f"verify --spec {args.spec} (k={args.spec_k}) vs "
                   f"--spec off: "
+                  f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
+        elif args.kv == "quant" and args.temperature <= 0:
+            # the quantized cache is bounded-divergence, not bit-exact, so
+            # the fp one-shot is no oracle. Verify the invariance contract
+            # it DOES keep: the same trace on a fresh quant engine with a
+            # different slot count (different lane placements, batch
+            # compositions — and swap/preemption events, if any) must emit
+            # bit-identical tokens. tests/test_tiered_kv.py pins the
+            # divergence bound against the fp engine separately.
+            alt = args.slots // 2 if args.slots > 1 else args.slots + 1
+            eng2 = _make_engine(args, cfg, params, num_slots=alt,
+                                clock=ManualClock())
+            out2 = run_to_completion(eng2, _trace_of(args, cfg),
+                                     dt=args.step_time)
+            ok = out == out2
+            print(f"verify quant KV ({args.slots} vs {alt} slots): "
                   f"{'bit-identical MATCH' if ok else 'MISMATCH'}")
         elif args.temperature > 0:
             # seeded sampling has no one-shot oracle; verify the v2
@@ -337,8 +363,19 @@ def main() -> int:
                     help="scale-down drain mode: let a draining replica's "
                     "requests finish, or restart-preempt them back to the "
                     "router queue (bit-identical either way)")
-    ap.add_argument("--kv", default="paged", choices=("paged", "slot"),
-                    help="paged block-table cache vs PR-1 slot reservation")
+    ap.add_argument("--kv", default="paged",
+                    choices=("paged", "quant", "slot"),
+                    help="paged block-table cache, int8-quantized paged "
+                    "cache (~2x blocks per byte, bounded divergence), or "
+                    "PR-1 slot reservation")
+    ap.add_argument("--swap", default="off", choices=("on", "off"),
+                    help="host swap tier for paged/quant KV: preemptions "
+                    "copy victim blocks to host RAM and resume "
+                    "bit-identically with zero recompute")
+    ap.add_argument("--swap-budget-blocks", type=int, default=None,
+                    help="host swap residency cap in blocks (default: "
+                    "unbounded); a full budget falls back to restart "
+                    "preemption")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV: tokens per block")
     ap.add_argument("--kv-blocks", type=int, default=None,
@@ -358,8 +395,10 @@ def main() -> int:
                     "self-drafting (ngram) or a tiny draft model; the "
                     "target verifies k drafts per slot in one fused step "
                     "and output stays bit-identical to --spec off")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens proposed per slot per step")
+    ap.add_argument("--spec-k", default="4",
+                    help="draft tokens proposed per slot per step, or "
+                    "'auto': adapt each request's draft depth from its own "
+                    "acceptance feedback (AIMD, floor 1)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -391,6 +430,8 @@ def main() -> int:
     ap.add_argument("--verify", action="store_true",
                     help="check tokens against the one-shot baseline")
     args = ap.parse_args()
+    if args.spec_k != "auto":
+        args.spec_k = int(args.spec_k)
     if args.gen_max is None:
         args.gen_max = args.gen
     if args.prefix_len is None:

@@ -342,6 +342,24 @@ def attention_paged_decode(q, k_pool, v_pool, tables, lengths,
                             gather_blocks(v_pool, tables), lengths, cfg, env)
 
 
+def attention_paged_decode_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                 tables, lengths, cfg: ModelConfig, env: Env):
+    """attention_paged_decode over an int8 quant pool: gather the int8
+    blocks and their per-row scales, dequantize to f32, then the same
+    masked-softmax math. k_pool/v_pool: [NB,Hkv,bs,hd] int8; k_scale/
+    v_scale: [NB,Hkv,bs] f32."""
+    from repro.kernels.paged_decode.ops import (gather_block_scales,
+                                                gather_blocks)
+    kg = (gather_blocks(k_pool, tables).astype(jnp.float32)
+          * gather_block_scales(k_scale, tables)[..., None])
+    vg = (gather_blocks(v_pool, tables).astype(jnp.float32)
+          * gather_block_scales(v_scale, tables)[..., None])
+    # back to the activation dtype: the fp pool stores bf16, so its read
+    # path hands attention bf16 — the dequantized pool must not leak f32
+    # into the residual stream (the layer-scan carry dtype is pinned)
+    return attention_decode(q, kg, vg, lengths, cfg, env).astype(q.dtype)
+
+
 def attention(p, x, cfg: ModelConfig, env: Env, *, positions, causal: bool = True,
               window: int = 0, x_kv=None, rope: bool = True):
     """Full-sequence attention (train/prefill). Returns [B,S,d]."""

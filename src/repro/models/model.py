@@ -256,13 +256,28 @@ PAGEABLE_KINDS = ("attn", "moe", "local")
 
 
 def init_paged_cache(cfg: ModelConfig, env: Env, num_rows: int,
-                     num_blocks: int, block_size: int) -> Pytree:
+                     num_blocks: int, block_size: int,
+                     quant: bool = False) -> Pytree:
     """Block-pooled decode cache (same {"blocks","tail"} structure as
-    init_cache, so the decode scan consumes it unchanged)."""
+    init_cache, so the decode scan consumes it unchanged).
+
+    With quant=True, k/v blocks store int8 values plus per-row f32 dequant
+    scales ([NB, hkv, bs] — one scale per (block, head, token) over the
+    head dim). Roughly half the bytes per token of the bf16 pool; the
+    decode path dispatches on the presence of "k_scale"."""
     hkv, hd = kv_head_pad(cfg, env), cfg.head_dim
 
     def blk(kind):
         if kind in PAGEABLE_KINDS:
+            if quant:
+                return {"k": jnp.zeros((num_blocks, hkv, block_size, hd),
+                                       jnp.int8),
+                        "v": jnp.zeros((num_blocks, hkv, block_size, hd),
+                                       jnp.int8),
+                        "k_scale": jnp.zeros((num_blocks, hkv, block_size),
+                                             jnp.float32),
+                        "v_scale": jnp.zeros((num_blocks, hkv, block_size),
+                                             jnp.float32)}
             return {"k": jnp.zeros((num_blocks, hkv, block_size, hd),
                                    jnp.bfloat16),
                     "v": jnp.zeros((num_blocks, hkv, block_size, hd),
@@ -282,14 +297,17 @@ def init_paged_cache(cfg: ModelConfig, env: Env, num_rows: int,
 
 def _paged_kv_op(pool, cfg: ModelConfig, kv_fn, state_fn):
     """tree-map a paged pool, dispatching k/v leaves (with their table kind)
-    vs row-addressed state leaves. kv_fn(dst, is_local, axis), state_fn(dst,
-    axis) where axis is the leading stacked-layer offset (1 under "blocks",
-    0 under "tail")."""
+    vs row-addressed state leaves. kv_fn(dst, is_local, is_scale, axis),
+    state_fn(dst, axis) where axis is the leading stacked-layer offset (1
+    under "blocks", 0 under "tail") and is_scale marks the quant pool's
+    [NB,H,bs] scale leaves (no head_dim axis)."""
     def f(path, dst, *rest):
         kind = _unit_kind(path, cfg)
         axis = 1 if str(path[0].key) == "blocks" else 0
         if kind in PAGEABLE_KINDS:
-            return kv_fn(dst, kind == "local", axis, *rest)
+            leaf = str(getattr(path[-1], "key", ""))
+            return kv_fn(dst, kind == "local", leaf.endswith("_scale"),
+                         axis, *rest)
         return state_fn(dst, axis, *rest)
 
     return f
@@ -306,13 +324,22 @@ def make_paged_insert(cfg: ModelConfig, block_size: int):
     block."""
     bs = block_size
 
-    def kv(dst, is_local, axis, src, slot, tables, tables_local):
+    def kv(dst, is_local, is_scale, axis, src, slot, tables, tables_local):
         tbl = tables_local if is_local else tables
-        S = src.shape[-2]
+        sdim = -1 if is_scale else -2  # scale leaves: seq is the last axis
+        S = src.shape[sdim]
         nb = -(-S // bs)
         pad = [(0, 0)] * src.ndim
-        pad[-2] = (0, nb * bs - S)
+        pad[sdim] = (0, nb * bs - S)
         src = jnp.pad(src, pad).astype(dst.dtype)
+        if is_scale:
+            if axis == 1:  # [L,1,H,nb*bs] -> chunks [L,nb,H,bs]
+                L, _, H, _ = src.shape
+                chunks = src.reshape(L, H, nb, bs).transpose(0, 2, 1, 3)
+                return dst.at[:, tbl[:nb]].set(chunks)
+            _, H, _ = src.shape
+            chunks = src.reshape(H, nb, bs).transpose(1, 0, 2)
+            return dst.at[tbl[:nb]].set(chunks)
         if axis == 1:  # [L,1,H,nb*bs,hd] -> chunks [L,nb,H,bs,hd]
             L, _, H, _, hd = src.shape
             chunks = src.reshape(L, H, nb, bs, hd).transpose(0, 2, 1, 3, 4)
@@ -340,7 +367,7 @@ def make_paged_copy(cfg: ModelConfig):
     prefix sharing (serve/blocks.py): the first divergent write into a
     shared block lands in a fresh copy instead. Row-addressed recurrent
     state has no block dim and is untouched."""
-    def kv(dst_pool, is_local, axis, src, dst):
+    def kv(dst_pool, is_local, is_scale, axis, src, dst):
         if axis == 1:
             return dst_pool.at[:, dst].set(dst_pool[:, src])
         return dst_pool.at[dst].set(dst_pool[src])
@@ -359,7 +386,7 @@ def make_paged_copy(cfg: ModelConfig):
 def make_paged_evict(cfg: ModelConfig):
     """Zero a slot's blocks (and state row) in a paged pool — hygiene only;
     allocation hygiene lives in the BlockManager free list."""
-    def kv(dst, is_local, axis, slot, tables, tables_local):
+    def kv(dst, is_local, is_scale, axis, slot, tables, tables_local):
         tbl = tables_local if is_local else tables
         if axis == 1:
             return dst.at[:, tbl].set(jnp.zeros((), dst.dtype))
@@ -384,9 +411,18 @@ def make_paged_read(cfg: ModelConfig):
     (inverse of insert, introspection/tests). `valid`/`valid_local` mask
     unallocated table entries so freed slots read as zeros regardless of
     what masked-row writes left in the null block."""
-    def kv(dst, is_local, axis, slot, tables, tables_local, valid, valid_l):
+    def kv(dst, is_local, is_scale, axis, slot, tables, tables_local,
+           valid, valid_l):
         tbl = tables_local if is_local else tables
         ok = (valid_l if is_local else valid).astype(dst.dtype)
+        if is_scale:
+            if axis == 1:
+                g = dst[:, tbl] * ok[None, :, None, None]  # [L,MB,H,bs]
+                L, MB, H, bs = g.shape
+                return g.transpose(0, 2, 1, 3).reshape(L, 1, H, MB * bs)
+            g = dst[tbl] * ok[:, None, None]  # [MB,H,bs]
+            MB, H, bs = g.shape
+            return g.transpose(1, 0, 2).reshape(1, H, MB * bs)
         if axis == 1:
             g = dst[:, tbl]  # [L,MB,H,bs,hd]
             g = g * ok[None, :, None, None, None]
@@ -406,6 +442,45 @@ def make_paged_read(cfg: ModelConfig):
                            valid_local), pool)
 
     return read
+
+
+def quantize_paged_request(cfg: ModelConfig, request: Pytree) -> Pytree:
+    """Expand a batch-1 fp prefill cache ({"k","v"} per pageable unit) into
+    the quant pool structure ({"k","v","k_scale","v_scale"}): symmetric
+    int8 over the head dim, one f32 scale per (head, position). Makes the
+    fp prefill output insertable into a quant pool via the generic
+    make_paged_insert (structures become congruent)."""
+    from repro.kernels.paged_decode.ops import quantize_kv
+
+    def unit(kind, d):
+        if kind in PAGEABLE_KINDS:
+            kq, ks = quantize_kv(d["k"])
+            vq, vs = quantize_kv(d["v"])
+            return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return d
+
+    return {"blocks": tuple(unit(k, d) for k, d in
+                            zip(cfg.block_pattern, request["blocks"])),
+            "tail": tuple(unit(k, d) for k, d in
+                          zip(cfg.pattern_tail, request["tail"]))}
+
+
+def dequantize_paged_request(cfg: ModelConfig, request: Pytree) -> Pytree:
+    """Inverse of quantize_paged_request (up to quantization error): fold
+    the scales back into bf16 {"k","v"} units — what make_paged_read
+    returns from a quant pool becomes comparable to an fp read."""
+    def unit(kind, d):
+        if kind in PAGEABLE_KINDS:
+            return {"k": (d["k"].astype(jnp.float32)
+                          * d["k_scale"][..., None]).astype(jnp.bfloat16),
+                    "v": (d["v"].astype(jnp.float32)
+                          * d["v_scale"][..., None]).astype(jnp.bfloat16)}
+        return d
+
+    return {"blocks": tuple(unit(k, d) for k, d in
+                            zip(cfg.block_pattern, request["blocks"])),
+            "tail": tuple(unit(k, d) for k, d in
+                          zip(cfg.pattern_tail, request["tail"]))}
 
 
 # ---------------------------------------------------------------------------
@@ -505,11 +580,31 @@ def _attn_sublayer(p, h, cfg: ModelConfig, env: Env, mode: str, positions,
         idx = cl % window if window > 0 else cl  # [B] write position
         phys = jnp.take_along_axis(tbl, (idx // bs)[:, None], axis=1)[:, 0]
         off = idx % bs
+        eff = jnp.minimum(cl, window - 1) if window > 0 else cl
+        if "k_scale" in cache:
+            # quant pool: quantize-on-insert (this token's K/V row goes in
+            # as int8 + per-row scale), dequant fused into the read path
+            from repro.kernels.paged_decode import ops as pd_ops
+            kq, ks = pd_ops.quantize_kv(kc[:, :, 0])  # [B,Hkv,hd] -> int8
+            vq, vs = pd_ops.quantize_kv(vc[:, :, 0])
+            new_k = cache["k"].at[phys, :, off].set(kq)
+            new_v = cache["v"].at[phys, :, off].set(vq)
+            new_ks = cache["k_scale"].at[phys, :, off].set(ks)
+            new_vs = cache["v_scale"].at[phys, :, off].set(vs)
+            if env.plan.attn_impl == "pallas":
+                o = pd_ops.paged_flash_decode_quant(
+                    q[:, 0], new_k, new_v, new_ks, new_vs, tbl, eff)
+                o = o.reshape(B, 1, -1).astype(h.dtype)
+            else:
+                o = L.attention_paged_decode_quant(
+                    q, new_k, new_v, new_ks, new_vs, tbl, eff, cfg, env)
+            o = constrain(o @ p["wo"], env, env.dpx, None, None)
+            return o, {"k": new_k, "v": new_v,
+                       "k_scale": new_ks, "v_scale": new_vs}
         new_k = cache["k"].at[phys, :, off].set(
             kc[:, :, 0].astype(cache["k"].dtype))
         new_v = cache["v"].at[phys, :, off].set(
             vc[:, :, 0].astype(cache["v"].dtype))
-        eff = jnp.minimum(cl, window - 1) if window > 0 else cl
         if env.plan.attn_impl == "pallas":
             from repro.kernels.paged_decode import ops as pd_ops
             o = pd_ops.paged_flash_decode(q[:, 0], new_k, new_v, tbl, eff)

@@ -9,7 +9,11 @@ AutoScaler policies -> cluster size.
 See docs/serving.md for the full loop, the one-command demo, and the
 migration table from the PR-2 surface.
 """
-from repro.serve.blocks import BlockManager  # noqa: F401
+from repro.serve.blocks import (  # noqa: F401
+    BlockManager,
+    HostSwapPool,
+    QuantBlockManager,
+)
 from repro.serve.kv import KVBackend, make_kv_backend  # noqa: F401
 from repro.serve.metrics import ServingMetrics, percentile  # noqa: F401
 from repro.serve.policy import (  # noqa: F401
@@ -43,6 +47,7 @@ from repro.serve.scheduler import (  # noqa: F401
 )
 from repro.serve.slots import SlotPool  # noqa: F401
 from repro.serve.spec import (  # noqa: F401
+    AdaptiveSpecK,
     Drafter,
     ModelDrafter,
     NgramDrafter,

@@ -92,14 +92,102 @@ class PagedSlot:
     hashes: Tuple[bytes, ...] = ()  # prompt block hash chain (full blocks)
 
 
+@dataclass
+class SwapRecord:
+    """One swapped-out request: its block KV pulled to host numpy plus the
+    PagedSlot bookkeeping needed to rebuild the slot on swap-in."""
+    rid: int
+    payload: Any  # numpy pytree congruent to the device pool, block dim = n
+    n_blocks: int
+    nbytes: int
+    cur_len: int
+    tokens_done: int
+    gen_len: int
+    reserved: int
+    cached_len: int
+    alloc_g: int
+    alloc_l: int
+
+
+class HostSwapPool:
+    """Host-side (numpy) KV block pool — the swap tier under the device
+    pool. Preemption copies a victim's blocks out instead of discarding
+    them; re-admission scatters them back and decoding resumes from the
+    swap point bit-identically (no recompute). One pool is shared across a
+    ReplicaSet's replicas (host RAM is node-local), so a request drained
+    off one replica can restore on another.
+
+    Accounting mirrors the device pool's: `budget_blocks` caps host
+    residency (a full budget makes swap_out fall back to restart
+    preemption), and the last backend to detach leak-checks that every
+    swapped request was either restored or dropped."""
+
+    def __init__(self, budget_blocks: Optional[int] = None):
+        if budget_blocks is not None and budget_blocks < 0:
+            raise ValueError(f"budget_blocks must be >= 0 or None, got "
+                             f"{budget_blocks}")
+        self.budget_blocks = budget_blocks  # None = unbounded
+        self._records: Dict[int, SwapRecord] = {}
+        self._attached = 0
+
+    @property
+    def blocks_resident(self) -> int:
+        return sum(r.n_blocks for r in self._records.values())
+
+    @property
+    def bytes_resident(self) -> int:
+        return sum(r.nbytes for r in self._records.values())
+
+    def can_store(self, n_blocks: int) -> bool:
+        return (self.budget_blocks is None
+                or self.blocks_resident + n_blocks <= self.budget_blocks)
+
+    def store(self, rec: SwapRecord) -> None:
+        assert rec.rid not in self._records, \
+            f"rid {rec.rid} is already swapped out"
+        assert self.can_store(rec.n_blocks), "host swap budget exhausted"
+        self._records[rec.rid] = rec
+
+    def has(self, rid: int) -> bool:
+        return rid in self._records
+
+    def peek(self, rid: int) -> SwapRecord:
+        return self._records[rid]
+
+    def take(self, rid: int) -> SwapRecord:
+        """Remove and return `rid`'s record (swap-in frees host residency)."""
+        return self._records.pop(rid)
+
+    def drop(self, rid: int) -> None:
+        """Discard a swapped request (cancelled / restarted): its host
+        blocks free without a restore."""
+        self._records.pop(rid, None)
+
+    def attach(self) -> None:
+        self._attached += 1
+
+    def detach(self) -> None:
+        """A backend released its device pool. When the last one detaches,
+        the host pool must be empty — a swapped request nobody can ever
+        restore is a leak, same class of bug as a lost device block."""
+        self._attached -= 1
+        if self._attached <= 0 and self._records:
+            held = sorted(self._records)
+            raise RuntimeError(
+                f"host swap pool leaked {len(held)} swapped request(s) "
+                f"{held} ({self.blocks_resident} blocks) at last detach")
+
+
 class BlockManager:
     kind = "paged"
+    _quant = False  # QuantBlockManager flips this: int8 pool + scales
 
     def __init__(self, cfg: ModelConfig, env: Env, *, num_slots: int,
                  prompt_len: int, max_gen: int, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 max_shared_fraction: float = 1.0):
+                 max_shared_fraction: float = 1.0,
+                 swap_pool: Optional[HostSwapPool] = None):
         if cfg.family == "vlm" or cfg.is_encdec:
             raise ValueError(
                 f"{cfg.name}: continuous batching supports decoder-only "
@@ -137,7 +225,15 @@ class BlockManager:
                 f"num_blocks={self.num_blocks} cannot hold even one request "
                 f"({self.mb_global}+{self.mb_local} blocks + null)")
         self.caches: Pytree = Mo.init_paged_cache(
-            cfg, env, num_slots, self.num_blocks, bs)
+            cfg, env, num_slots, self.num_blocks, bs, quant=self._quant)
+        # -- host swap tier (tentpole b): preemption copies victim blocks
+        # out instead of discarding; the pool may be shared fleet-wide
+        self.swap_pool = swap_pool
+        if swap_pool is not None:
+            swap_pool.attach()
+        self._swap_out_bytes = 0
+        self._swap_in_bytes = 0
+        self._swapped_blocks = 0  # cumulative blocks this backend swapped
         # host-side tables: row per slot, 0 = unallocated (null block)
         self.table = np.zeros((num_slots, max(self.mb_global, 1)), np.int32)
         self.table_local = np.zeros((num_slots, max(self.mb_local, 1)),
@@ -320,6 +416,12 @@ class BlockManager:
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self._free_slots) / max(self.num_slots, 1)
+
+    @property
+    def free_capacity(self) -> int:
+        """Absolute admission headroom: unreserved blocks (slots are
+        rarely the binding constraint on a paged pool)."""
+        return max(self.free_unreserved, 0)
 
     @property
     def blocks_in_use(self) -> int:
@@ -654,6 +756,118 @@ class BlockManager:
         self._slots[slot] = None
         self._free_slots.append(slot)
 
+    # -- host swap tier ------------------------------------------------------
+    def _swap_gather(self, slot: int, gids, lids) -> Pytree:
+        """Pull `slot`'s named blocks (and state row) off the device as one
+        pytree congruent to the pool with the block dim shrunk to n —
+        quant scale leaves ride along automatically."""
+        gi = jnp.asarray(np.asarray(gids, np.int32))
+        li = jnp.asarray(np.asarray(lids, np.int32))
+
+        def kv(dst, is_local, is_scale, axis):
+            ids = li if is_local else gi
+            return dst[:, ids] if axis == 1 else dst[ids]
+
+        def state(dst, axis):
+            return jax.lax.dynamic_slice_in_dim(dst, slot, 1, axis=axis)
+
+        f = Mo._paged_kv_op(self.caches, self.cfg, kv, state)
+        return jax.tree_util.tree_map_with_path(f, self.caches)
+
+    def _swap_scatter(self, slot: int, gids, lids, payload: Pytree) -> None:
+        """Scatter a host payload back into freshly allocated blocks (the
+        inverse of _swap_gather, new physical ids)."""
+        gi = jnp.asarray(np.asarray(gids, np.int32))
+        li = jnp.asarray(np.asarray(lids, np.int32))
+
+        def kv(dst, is_local, is_scale, axis, src):
+            ids = li if is_local else gi
+            src = jnp.asarray(src).astype(dst.dtype)
+            if axis == 1:
+                return dst.at[:, ids].set(src)
+            return dst.at[ids].set(src)
+
+        def state(dst, axis, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, jnp.asarray(src).astype(dst.dtype), slot, axis=axis)
+
+        f = Mo._paged_kv_op(self.caches, self.cfg, kv, state)
+        self.caches = jax.tree_util.tree_map_with_path(
+            f, self.caches, payload)
+
+    def swap_out(self, slot: int) -> bool:
+        """Copy `slot`'s live KV (every allocated block + state row) to the
+        host pool, then evict the slot. Returns False — caller falls back
+        to restart preemption — when no host pool is attached, the budget
+        is exhausted, or the slot is still prefilling (partial-prompt lane
+        state doesn't restore; restart is the correct path there). Shared
+        prefix blocks are copied too: the restore allocates private blocks,
+        trading dedup for zero recompute (the index keeps the originals)."""
+        if self.swap_pool is None:
+            return False
+        s = self._slots[slot]
+        assert s is not None
+        if s.prefilling:
+            return False
+        n_blocks = s.alloc_g + s.alloc_l
+        if not self.swap_pool.can_store(n_blocks):
+            return False
+        gids = self.table[slot, :s.alloc_g].copy()
+        lids = self.table_local[slot, :s.alloc_l].copy()
+        payload = jax.device_get(self._swap_gather(slot, gids, lids))
+        nbytes = int(sum(x.nbytes for x in jax.tree.leaves(payload)))
+        self.swap_pool.store(SwapRecord(
+            rid=s.rid, payload=payload, n_blocks=n_blocks, nbytes=nbytes,
+            cur_len=s.cur_len, tokens_done=s.tokens_done, gen_len=s.gen_len,
+            reserved=s.reserved, cached_len=s.cached_len,
+            alloc_g=s.alloc_g, alloc_l=s.alloc_l))
+        self.evict(slot)
+        self._swap_out_bytes += nbytes
+        self._swapped_blocks += n_blocks
+        return True
+
+    def has_swapped(self, rid: int) -> bool:
+        return self.swap_pool is not None and self.swap_pool.has(rid)
+
+    def can_resume(self, rid: int) -> bool:
+        """Swap-in admission math: a free slot plus the request's allocated
+        blocks AND its unspent reservation (it must still be able to finish
+        its declared gen_len without deadlocking mid-decode)."""
+        if not self.has_swapped(rid) or not self._free_slots:
+            return False
+        rec = self.swap_pool.peek(rid)
+        return rec.n_blocks + rec.reserved <= self.free_unreserved
+
+    def swap_in(self, rid: int) -> int:
+        """Restore a swapped request: allocate fresh blocks, scatter the
+        host payload back, rebuild the PagedSlot at its swap-point cursor.
+        The restored KV is byte-identical to what swap_out pulled (numpy
+        round-trips bf16/int8 losslessly), so decoding resumes bit-
+        identically; restored blocks are private (shared_g=0, no hashes —
+        re-registration would alias the index's live originals)."""
+        assert self.can_resume(rid), f"cannot resume swapped rid {rid}"
+        rec = self.swap_pool.take(rid)
+        slot = self._free_slots.popleft()
+        need = rec.reserved + rec.alloc_g + rec.alloc_l
+        s = PagedSlot(rid=rid, cur_len=rec.cur_len,
+                      tokens_done=rec.tokens_done, gen_len=rec.gen_len,
+                      reserved=need, cached_len=rec.cached_len)
+        self._slots[slot] = s
+        self._reserved_total += need
+        for _ in range(rec.alloc_g):  # _alloc draws the reservation down
+            self._alloc(slot, local=False)
+        for _ in range(rec.alloc_l):
+            self._alloc(slot, local=True)
+        self._swap_scatter(slot, self.table[slot, :rec.alloc_g],
+                           self.table_local[slot, :rec.alloc_l], rec.payload)
+        self._swap_in_bytes += rec.nbytes
+        return slot
+
+    def drop_swapped(self, rid: int) -> None:
+        """Discard `rid`'s host copy (restart fallback / cancellation)."""
+        if self.swap_pool is not None:
+            self.swap_pool.drop(rid)
+
     def cached_prefix_len(self, slot: int) -> int:
         """Prompt positions this slot serves from the prefix cache — the
         engine starts the request's prefill lanes here."""
@@ -691,6 +905,10 @@ class BlockManager:
             held = np.flatnonzero(self._ref).tolist()
             raise RuntimeError(f"release with referenced blocks {held}")
         self.caches = None
+        if self.swap_pool is not None:
+            # last backend off a shared pool leak-checks host residency
+            pool, self.swap_pool = self.swap_pool, None
+            pool.detach()
 
     # -- reporting ----------------------------------------------------------
     @property
@@ -729,15 +947,25 @@ class BlockManager:
     def metrics(self) -> Dict[str, float]:
         """Backend load signals merged into the engine snapshot: committed
         blocks are the signal that actually gates admission; the prefix
-        signals feed the autoscaler's scale-hold (core/autoscaler.py)."""
-        return {"kv_block_occupancy": self.block_occupancy,
-                "prefix_hit_rate": self.prefix_hit_rate,
-                "kv_shared_occupancy": self.shared_occupancy}
+        signals feed the autoscaler's scale-hold (core/autoscaler.py).
+        Swap counters are cumulative and per-backend (each replica reports
+        its own traffic even when the host pool is shared), so the fleet
+        rollup can sum them without double counting."""
+        m = {"kv_block_occupancy": self.block_occupancy,
+             "prefix_hit_rate": self.prefix_hit_rate,
+             "kv_shared_occupancy": self.shared_occupancy}
+        if self.swap_pool is not None:
+            m.update(swapped_blocks=float(self._swapped_blocks),
+                     swap_out_bytes=float(self._swap_out_bytes),
+                     swap_in_bytes=float(self._swap_in_bytes))
+        return m
 
     def describe(self) -> str:
+        swap = ("" if self.swap_pool is None else
+                ", host swap on")
         return (f"paged KV: {self.num_blocks} blocks x "
                 f"{self.block_size} tokens, prefix cache "
-                f"{'on' if self.prefix_cache else 'off'}")
+                f"{'on' if self.prefix_cache else 'off'}{swap}")
 
     # -- introspection (tests) ----------------------------------------------
     def read_slot(self, slot: int) -> Pytree:
@@ -751,3 +979,62 @@ class BlockManager:
         valid_l = (np.arange(max(self.mb_local, 1)) < al)
         return self._read(self.caches, jnp.asarray(slot, jnp.int32), tg, tl,
                           jnp.asarray(valid), jnp.asarray(valid_l))
+
+
+class QuantBlockManager(BlockManager):
+    """The third KV backend (`--kv quant`): BlockManager bookkeeping over
+    an int8 block pool with per-row f32 dequant scales ([NB,Hkv,bs] — one
+    scale per (block, head, token) across the head dim).
+
+    Everything host-side (tables, refcounts, prefix hashing, reservation
+    math, swap) is inherited unchanged; the deltas are device-side:
+    the pool layout (Mo.init_paged_cache quant=True), quantize-on-insert
+    (prefill caches expand through Mo.quantize_paged_request inside the
+    insert jit; the fused decode step quantizes each new token's K/V row
+    in models/model.py, dispatching on the "k_scale" cache leaf), and
+    dequant fused into the read path (Pallas kernel with scalar-prefetched
+    scales on TPU, gather+multiply XLA fallback on CPU).
+
+    At ~(hd+4)/(2*hd) the bytes per token of the bf16 pool, an equal-byte
+    budget holds ~2x the blocks — ~2x admitted concurrency — with
+    bit-exactness relaxed to a bounded-divergence contract (see
+    docs/serving.md): `kv_quant_divergence` below is the scheme's
+    calibrated relative RMS quantization error."""
+
+    kind = "quant"
+    _quant = True
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        cfg, bs = self.cfg, self.block_size
+        base_insert = Mo.make_paged_insert(cfg, bs)
+
+        def quant_insert(pool, request, slot, tg, tl):
+            return base_insert(pool, Mo.quantize_paged_request(cfg, request),
+                               slot, tg, tl)
+
+        self._insert = shared_jit(("quant_insert", cfg, bs),
+                                  lambda: quant_insert, donate_argnums=(0,))
+        # calibrated divergence: relative RMS error of the int8 scheme on a
+        # unit-normal sample (the per-write measurement would sync the hot
+        # path; the bounded-divergence test pins the end-to-end bound)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(1024, cfg.head_dim)), jnp.float32)
+        from repro.kernels.paged_decode.ops import quantize_kv
+        q, s = quantize_kv(x)
+        deq = q.astype(jnp.float32) * s[..., None]
+        self.quant_divergence = float(
+            jnp.sqrt(jnp.mean((deq - x) ** 2) / jnp.mean(x ** 2)))
+
+    def metrics(self) -> Dict[str, float]:
+        m = super().metrics()
+        m["kv_quant_divergence"] = self.quant_divergence
+        return m
+
+    def describe(self) -> str:
+        return "int8 " + super().describe().replace("paged KV", "quant KV", 1)
+
+    def read_slot(self, slot: int) -> Pytree:
+        """Introspection reads dequantize (int8 * scales -> bf16) so the
+        result is directly comparable to an fp pool's read."""
+        return Mo.dequantize_paged_request(self.cfg, super().read_slot(slot))

@@ -137,6 +137,20 @@ class KVBackend(Protocol):
     def finished(self, slot: int) -> bool: ...
     def evict(self, slot: int, *, zero: bool = False) -> None: ...
 
+    # -- host swap tier (optional; no-ops on backends without one) ---------
+    def swap_out(self, slot: int) -> bool:
+        """Copy the slot's live KV to a host pool and evict it. False means
+        the backend cannot swap (no pool / budget full / mid-prefill) and
+        the caller should restart-preempt instead."""
+        ...
+    def has_swapped(self, rid: int) -> bool: ...
+    def can_resume(self, rid: int) -> bool: ...
+    def swap_in(self, rid: int) -> int:
+        """Restore a swapped request into a fresh slot (inverse of
+        swap_out); decoding resumes from the swap point bit-identically."""
+        ...
+    def drop_swapped(self, rid: int) -> None: ...
+
     # -- introspection ------------------------------------------------------
     def info(self, slot: int) -> Any: ...
     def rid_of(self, slot: int) -> int: ...
@@ -146,6 +160,13 @@ class KVBackend(Protocol):
     def free_slot_count(self) -> int: ...
     @property
     def occupancy(self) -> float: ...
+    @property
+    def free_capacity(self) -> int:
+        """Admission capacity still available, in the backend's own units
+        (paged: unreserved blocks; slot: free slots). Absolute, not a
+        fraction — the router's load key uses it to break occupancy ties
+        across heterogeneous pool sizes."""
+        ...
     def metrics(self) -> Dict[str, float]: ...
     def describe(self) -> str: ...
 
@@ -154,19 +175,34 @@ def make_kv_backend(kind: str, cfg: ModelConfig, env: Env, *, num_slots: int,
                     prompt_len: int, max_gen: int, block_size: int = 16,
                     kv_blocks: Optional[int] = None,
                     prefix_cache: bool = True,
-                    max_shared_fraction: float = 1.0) -> KVBackend:
-    """The one cache-kind dispatch in the serving plane."""
-    from repro.serve.blocks import BlockManager
+                    max_shared_fraction: float = 1.0,
+                    swap: bool = False,
+                    swap_budget_blocks: Optional[int] = None,
+                    swap_pool=None) -> KVBackend:
+    """The one cache-kind dispatch in the serving plane.
+
+    swap=True attaches a host swap tier (serve/blocks.py HostSwapPool):
+    pass a prebuilt `swap_pool` to share one across a fleet's replicas
+    (ReplicaSet does), else a private pool is created with
+    `swap_budget_blocks` capacity (None = unbounded)."""
+    from repro.serve.blocks import (BlockManager, HostSwapPool,
+                                    QuantBlockManager)
     from repro.serve.slots import SlotPool
 
-    if kind == "paged":
-        return BlockManager(cfg, env, num_slots=num_slots,
-                            prompt_len=prompt_len, max_gen=max_gen,
-                            block_size=block_size, num_blocks=kv_blocks,
-                            prefix_cache=prefix_cache,
-                            max_shared_fraction=max_shared_fraction)
+    if swap and swap_pool is None:
+        swap_pool = HostSwapPool(swap_budget_blocks)
+    elif not swap:
+        swap_pool = None
+    if kind in ("paged", "quant"):
+        cls = QuantBlockManager if kind == "quant" else BlockManager
+        return cls(cfg, env, num_slots=num_slots,
+                   prompt_len=prompt_len, max_gen=max_gen,
+                   block_size=block_size, num_blocks=kv_blocks,
+                   prefix_cache=prefix_cache,
+                   max_shared_fraction=max_shared_fraction,
+                   swap_pool=swap_pool)
     if kind == "slot":
         return SlotPool(cfg, env, num_slots=num_slots, prompt_len=prompt_len,
                         max_gen=max_gen)
     raise ValueError(f"unknown KV backend {kind!r} "
-                     "(expected 'paged' or 'slot')")
+                     "(expected 'paged', 'quant', or 'slot')")

@@ -13,6 +13,8 @@ flat metric names AutoScaler.read_metrics() aggregates:
     preemptions       restart-preemptions issued by the scheduler policy
     prefill_tokens    prompt positions actually computed (cumulative;
                       prefix-cache hits are the gap vs tokens submitted)
+    recomputed_tokens prompt positions computed a second time after a
+                      restart preemption discarded them (swap keeps it 0)
     accepted_per_step tokens emitted per speculating slot-step (> 1.0 is
                       the speculative win; omitted when not speculating)
     spec_acceptance_rate  accepted / proposed draft tokens (ditto)
@@ -55,6 +57,10 @@ class ServingMetrics:
         self.deadline_misses = 0
         self.preemptions = 0
         self.prefill_tokens = 0  # prompt positions actually computed
+        # prompt positions computed a SECOND time because a restart
+        # preemption discarded them (split out of prefill_tokens so
+        # swap-out's savings are measurable: with swap this stays 0)
+        self.recomputed_tokens = 0
         # speculative decoding (cumulative; only speculating slot-steps
         # count — a replica running --spec off reports none of them)
         self.spec_steps = 0     # slot-steps that carried >= 1 draft
@@ -90,12 +96,18 @@ class ServingMetrics:
         self.spec_accepted += accepted
         self.spec_emitted += emitted
 
-    def record_prefill_tokens(self, n: int) -> None:
+    def record_prefill_tokens(self, n: int, *, recompute: bool = False) -> None:
         """Prompt positions run through prefill (lane rows or classic
         batch-1) — prefix-cache hits never get here, so this cumulative
-        counter is the denominator bench_serve_prefix compares."""
+        counter is the denominator bench_serve_prefix compares.
+        `recompute=True` routes the count to recomputed_tokens instead:
+        the positions were already paid for once, and a restart preemption
+        threw them away (host swap-out exists to keep this at 0)."""
         if n > 0:
-            self.prefill_tokens += n
+            if recompute:
+                self.recomputed_tokens += n
+            else:
+                self.prefill_tokens += n
 
     def _trim(self, now: float) -> None:
         horizon = now - self.window_s
@@ -141,6 +153,7 @@ class ServingMetrics:
             "deadline_misses": float(self.deadline_misses),
             "preemptions": float(self.preemptions),
             "prefill_tokens": float(self.prefill_tokens),
+            "recomputed_tokens": float(self.recomputed_tokens),
         }
         if queue_depth is not None:
             out["queue_depth"] = float(queue_depth)

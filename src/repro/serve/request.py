@@ -35,6 +35,11 @@ class Request:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     tokens: List[int] = field(default_factory=list)
+    # restart preemptions suffered: a re-admission with restarts > 0 is
+    # recomputing prompt positions it already paid for once — the engine
+    # books those into recomputed_tokens, not prefill_tokens. A swap-out
+    # preemption keeps progress on the host tier and does NOT count.
+    restarts: int = 0
 
     @property
     def done(self) -> bool:

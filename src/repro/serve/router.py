@@ -129,6 +129,10 @@ class _RetiredCounters:
     deadline_misses: float = 0.0
     preemptions: float = 0.0
     prefill_tokens: float = 0.0
+    recomputed_tokens: float = 0.0
+    swapped_blocks: float = 0.0
+    swap_out_bytes: float = 0.0
+    swap_in_bytes: float = 0.0
     completed: int = 0
     prefix_hit_tokens: int = 0
     prefix_lookup_tokens: int = 0
@@ -142,6 +146,11 @@ class _RetiredCounters:
         self.deadline_misses += m.deadline_misses
         self.preemptions += m.preemptions
         self.prefill_tokens += m.prefill_tokens
+        self.recomputed_tokens += m.recomputed_tokens
+        pm = replica.pool.metrics()  # absorb runs before release()
+        self.swapped_blocks += pm.get("swapped_blocks", 0.0)
+        self.swap_out_bytes += pm.get("swap_out_bytes", 0.0)
+        self.swap_in_bytes += pm.get("swap_in_bytes", 0.0)
         self.completed += m.completed
         self.prefix_hit_tokens += getattr(replica.pool,
                                           "prefix_hit_tokens", 0)
@@ -169,10 +178,11 @@ class ReplicaSet:
                  **replica_kw):
         """`replica_kw` is forwarded to every ReplicaEngine (num_slots,
         prompt_len, max_gen, kv, block_size, kv_blocks, prefix_cache,
-        max_shared_fraction, prefill_chunk, spec, spec_k, plan, mesh) —
-        each replica builds its own drafter — and kv_blocks is
-        PER REPLICA: a fleet at an equal total KV budget to a single
-        engine passes total/N here."""
+        max_shared_fraction, prefill_chunk, spec, spec_k, swap,
+        swap_budget_blocks, plan, mesh) — each replica builds its own
+        drafter, but swap=True builds ONE HostSwapPool shared fleet-wide
+        — and kv_blocks is PER REPLICA: a fleet at an equal total KV
+        budget to a single engine passes total/N here."""
         if replicas < 1:
             raise ValueError(f"need at least one replica, got {replicas}")
         if drain_mode not in ("finish", "preempt"):
@@ -188,6 +198,14 @@ class ReplicaSet:
                                        else routing)
         self.drain_mode = drain_mode
         self._replica_kw = dict(replica_kw)
+        if self._replica_kw.get("swap") and \
+                self._replica_kw.get("swap_pool") is None:
+            # ONE host pool for the whole fleet (host RAM is node-local):
+            # a request swap-preempted off a draining replica must be
+            # restorable by whichever replica the router re-routes it to
+            from repro.serve.blocks import HostSwapPool
+            self._replica_kw["swap_pool"] = HostSwapPool(
+                self._replica_kw.get("swap_budget_blocks"))
         self._window_s = metrics_window_s
         self._next_id = 0
         self.replicas: List[ReplicaEngine] = []
@@ -368,7 +386,7 @@ class ReplicaSet:
             "tokens_per_s": sum(s["tokens_per_s"] for s in snaps),
         }
         for name in ("slot_occupancy", "kv_block_occupancy",
-                     "kv_shared_occupancy"):
+                     "kv_shared_occupancy", "kv_quant_divergence"):
             # fractions OF each pool: a plain mean is exact while pools
             # are homogeneous (one replica_kw builds them all)
             vals = [s[name] for s in snaps if name in s]
@@ -386,9 +404,17 @@ class ReplicaSet:
             lookups += getattr(r.pool, "prefix_lookup_tokens", 0)
         if any("prefix_hit_rate" in s for s in snaps) or lookups:
             out["prefix_hit_rate"] = hits / max(lookups, 1)
-        for name in ("deadline_misses", "preemptions", "prefill_tokens"):
+        for name in ("deadline_misses", "preemptions", "prefill_tokens",
+                     "recomputed_tokens"):
             out[name] = (sum(s.get(name, 0.0) for s in snaps)
                          + getattr(self._retired, name))
+        # swap traffic (per-backend cumulative counters, summable even
+        # over a shared host pool); published only when a swap tier exists
+        for name in ("swapped_blocks", "swap_out_bytes", "swap_in_bytes"):
+            if any(name in s for s in snaps) or getattr(self._retired,
+                                                        name):
+                out[name] = (sum(s.get(name, 0.0) for s in snaps)
+                             + getattr(self._retired, name))
         # speculative acceptance from summed COUNTS (like the hit rate:
         # a mean of per-replica ratios would weight idle replicas equally)
         rt = self._retired

@@ -117,7 +117,10 @@ class ReplicaEngine:
                  prefix_cache: bool = True,
                  max_shared_fraction: float = 1.0,
                  prefill_chunk: Optional[int] = None,
-                 spec=None, spec_k: int = 4,
+                 spec=None, spec_k=4,
+                 swap: bool = False,
+                 swap_budget_blocks: Optional[int] = None,
+                 swap_pool=None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
                  metrics_window_s: float = 10.0):
@@ -134,7 +137,9 @@ class ReplicaEngine:
                 kv, cfg, env, num_slots=num_slots, prompt_len=prompt_len,
                 max_gen=max_gen, block_size=block_size, kv_blocks=kv_blocks,
                 prefix_cache=prefix_cache,
-                max_shared_fraction=max_shared_fraction)
+                max_shared_fraction=max_shared_fraction,
+                swap=swap, swap_budget_blocks=swap_budget_blocks,
+                swap_pool=swap_pool)
         else:  # a pre-built backend (custom implementations plug in here)
             self.pool = kv
             num_slots = self.pool.num_slots
@@ -155,7 +160,16 @@ class ReplicaEngine:
         # ('local') rings wrap within a draft run and recurrent state is
         # sequential, so both are gated off (exactly the chunked-prefill
         # gate, for the same reason).
-        self.spec_k = int(spec_k)
+        # spec_k="auto": the verify-row block stays `cap` rows wide (step
+        # shapes are pinned) but the live draft depth per request is tuned
+        # from its own acceptance feedback (serve/spec.py AdaptiveSpecK)
+        if spec_k == "auto":
+            from repro.serve.spec import AdaptiveSpecK
+            self.spec_k = 4
+            self._spec_ctl: Optional[Any] = AdaptiveSpecK(cap=self.spec_k)
+        else:
+            self.spec_k = int(spec_k)
+            self._spec_ctl = None
         if isinstance(spec, str) or spec is None:
             from repro.serve.spec import make_drafter
             self.drafter = make_drafter(spec, cfg, env,
@@ -217,19 +231,39 @@ class ReplicaEngine:
         return (sum(self.prompt_len - l.pos for l in self._lanes)
                 < self.prefill_chunk)
 
+    def can_take(self, req: Request) -> bool:
+        """Capacity predicate only: can the backend hold `req` right now?
+        A swapped-out request resumes instead of re-admitting — its gate
+        is can_resume (free slot + its allocated blocks + its unspent
+        reservation), not the fresh-admission math."""
+        if self.pool.has_swapped(req.rid):
+            return self.pool.can_resume(req.rid)
+        return self.pool.can_admit(req.eff_gen_len,
+                                   prompt=self.prompt_arg(req))
+
     def can_accept(self, req: Request) -> bool:
         """Could this replica commit `req` right now? (Routing predicate —
         admission-accurate because admit() takes its reservations
         immediately, so successive calls within one tick stay honest.)"""
         return (not self.draining and self.admission_room()
-                and self.pool.can_admit(req.eff_gen_len,
-                                        prompt=self.prompt_arg(req)))
+                and self.can_take(req))
 
     # -- admission commit ---------------------------------------------------
     def admit(self, req: Request, now: float) -> None:
         """Commit one admission (caller already took it off its queue)."""
         req.t_admit = now
         self._inflight[req.rid] = req
+        if self.pool.has_swapped(req.rid):
+            # swap-in resume: the host tier holds the request's whole KV
+            # at its preemption cursor. Restore it, seed the fused step
+            # with the last emitted token (the one swap-out never fed
+            # back), and decoding continues bit-identically — no prefill,
+            # no recompute, first token long since recorded.
+            slot = self.pool.swap_in(req.rid)
+            self._fresh[slot] = req.tokens[-1]
+            if self.drafter is not None:
+                self.drafter.admit(req)
+            return
         if self.drafter is not None:
             self.drafter.admit(req)
         if self.prefill_chunk:
@@ -252,7 +286,8 @@ class ReplicaEngine:
         — and fed to the same step's decode via the fresh-token path."""
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-        self.metrics.record_prefill_tokens(self.prompt_len)
+        self.metrics.record_prefill_tokens(self.prompt_len,
+                                           recompute=req.restarts > 0)
         self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
         if req.sampling.greedy:
             first = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
@@ -288,14 +323,23 @@ class ReplicaEngine:
         return any(ln.slot == slot for ln in self._lanes)
 
     def preempt(self, victim: Request, slot: int, now: float) -> Request:
-        """Restart-preemption: return the victim's KV capacity and clear
-        its progress; the caller re-queues it at its original arrival
-        time. Safe because sampling is position-keyed — on re-admission
-        the victim regenerates bit-identical tokens (greedy or seeded).
+        """Preemption: return the victim's KV capacity; the caller
+        re-queues it at its original arrival time.
+
+        Swap-out first: a backend with a host tier copies the victim's
+        blocks out (serve/blocks.py HostSwapPool), so its tokens and
+        first-token timestamp survive — re-admission restores the KV and
+        decoding resumes bit-identically with zero recompute.
+
+        Restart fallback (no host tier / budget full / mid-prefill):
+        clear the victim's progress entirely. Safe because sampling is
+        position-keyed — on re-admission the victim regenerates
+        bit-identical tokens (greedy or seeded) — but the re-prefill is
+        paid compute, booked into recomputed_tokens via `restarts`.
 
         Metrics semantics: the victim's pre-preemption tokens stay in
         tokens_per_s (the device really decoded them — that is the decode
-        throughput the autoscaler budgets), and the restart records a
+        throughput the autoscaler budgets), and a restart records a
         second, longer TTFT sample alongside the first. Both read as load,
         i.e. they bias the policies toward scaling up while preemptions
         are happening — the conservative direction."""
@@ -304,15 +348,21 @@ class ReplicaEngine:
         # a freed/reassigned slot — make the invariant explicit here too
         assert not self.lane_open(slot), \
             f"preempting slot {slot} with an open prefill lane"
-        self.pool.evict(slot)
+        swapped = self.pool.swap_out(slot)
+        if not swapped:
+            self.pool.evict(slot)
         self._row_src.pop(slot, None)
         self._fresh.pop(slot, None)
         if self.drafter is not None:
             self.drafter.retire(victim.rid)
+        if self._spec_ctl is not None:
+            self._spec_ctl.retire(victim.rid)
         del self._inflight[victim.rid]
-        victim.tokens.clear()
         victim.t_admit = None
-        victim.t_first_token = None
+        if not swapped:
+            victim.tokens.clear()
+            victim.t_first_token = None
+            victim.restarts += 1
         self.metrics.record_preempt(now)
         return victim
 
@@ -369,9 +419,13 @@ class ReplicaEngine:
             lane.take = min(budget, self.prompt_len - lane.pos)
             budget -= lane.take
         # prefill compute actually spent this step (prefix-cache hits
-        # shrink it: cached positions never occupy a lane row)
+        # shrink it: cached positions never occupy a lane row); chunks of
+        # restart-preempted requests are re-work, booked separately
         self.metrics.record_prefill_tokens(
-            sum(lane.take for lane in lanes))
+            sum(ln.take for ln in lanes if ln.req.restarts == 0))
+        self.metrics.record_prefill_tokens(
+            sum(ln.take for ln in lanes if ln.req.restarts > 0),
+            recompute=True)
         lane_rows = self.prefill_chunk if lanes else 0
         # speculative verify rows: a fixed block of num_slots * spec_k rows
         # stacked after the lane rows (slot s's candidates at spec_base +
@@ -396,7 +450,9 @@ class ReplicaEngine:
             for slot in active:
                 info = self.pool.info(slot)
                 req = self._inflight[info.rid]
-                k_eff = min(self.spec_k,
+                k_live = (self.spec_k if self._spec_ctl is None
+                          else self._spec_ctl.k(req.rid))
+                k_eff = min(k_live,
                             info.gen_len - info.tokens_done - 1)
                 if k_eff <= 0:
                     continue
@@ -476,6 +532,8 @@ class ReplicaEngine:
                 # when every draft was accepted) and record acceptance
                 self.pool.truncate(slot, cur + len(emit))
                 self.metrics.record_spec(len(d), len(emit) - 1, len(emit))
+                if self._spec_ctl is not None:
+                    self._spec_ctl.update(req.rid, len(d), len(emit) - 1)
             # next step's input token (the last emitted) sits at the row
             # that produced it — main row for a=0, else verify row a-1
             self._row_src[slot] = (slot if len(emit) == 1
@@ -532,15 +590,23 @@ class ReplicaEngine:
         self._fresh.pop(slot, None)
         if self.drafter is not None:
             self.drafter.retire(rid)
+        if self._spec_ctl is not None:
+            self._spec_ctl.retire(rid)
 
     # -- reporting ----------------------------------------------------------------
     def load_score(self):
         """Routing key: committed KV first (the signal that actually gates
-        admission on paged backends; slot occupancy elsewhere), then the
-        in-flight count as the queue-depth tiebreak."""
+        admission on paged backends; slot occupancy elsewhere), the
+        in-flight count as the queue-depth tiebreak, then *absolute* free
+        capacity. The fractions alone mis-rank heterogeneous fleets: two
+        empty replicas with unequal --kv-blocks both score occupancy 0.0,
+        but the big pool can absorb strictly more load — prefer it (more
+        free capacity = smaller key). Homogeneous fleets are unaffected:
+        equal fractions imply equal free capacity, so the ordering
+        degenerates to the old one."""
         m = self.pool.metrics()
         return (m.get("kv_block_occupancy", self.pool.occupancy),
-                len(self._inflight))
+                len(self._inflight), -self.pool.free_capacity)
 
     def snapshot(self, *, queue_depth: Optional[int] = None
                  ) -> Dict[str, float]:
@@ -563,7 +629,10 @@ class ServingEngine:
                  prefix_cache: bool = True,
                  max_shared_fraction: float = 1.0,
                  prefill_chunk: Optional[int] = None,
-                 spec=None, spec_k: int = 4,
+                 spec=None, spec_k=4,
+                 swap: bool = False,
+                 swap_budget_blocks: Optional[int] = None,
+                 swap_pool=None,
                  policy: Optional[SchedulerPolicy] = None,
                  plan: Optional[ParallelPlan] = None, mesh=None,
                  clock: Optional[Clock] = None,
@@ -574,6 +643,8 @@ class ServingEngine:
             kv_blocks=kv_blocks, prefix_cache=prefix_cache,
             max_shared_fraction=max_shared_fraction,
             prefill_chunk=prefill_chunk, spec=spec, spec_k=spec_k,
+            swap=swap, swap_budget_blocks=swap_budget_blocks,
+            swap_pool=swap_pool,
             plan=plan, mesh=mesh, clock=clock,
             metrics_window_s=metrics_window_s)
         self.policy: SchedulerPolicy = policy or FIFOPolicy()
@@ -705,7 +776,7 @@ class ServingEngine:
             if req is None:
                 return
             prompt = rep.prompt_arg(req)
-            if not rep.pool.can_admit(req.eff_gen_len, prompt=prompt):
+            if not rep.can_take(req):
                 victim = None if preempted else \
                     self.policy.victim(rep.running(), req, now)
                 if victim is None:
@@ -726,8 +797,10 @@ class ServingEngine:
                 self.queue.push(rep.preempt(victim, vslot, now))
                 preempted = True
                 ready = None  # the victim re-joined the arrived set
-                if not rep.pool.can_admit(req.eff_gen_len, prompt=prompt):
-                    return  # preempt_frees promised room; belt and braces
+                if not rep.can_take(req):
+                    # preempt_frees promised room for a fresh admission;
+                    # a swap-resume's can_resume gate may still disagree
+                    return
             self.queue.remove(req)
             if ready is not None:
                 ready.remove(req)

@@ -125,6 +125,12 @@ class SlotPool:
     def occupancy(self) -> float:
         return 1.0 - len(self.free_slots()) / max(self.num_slots, 1)
 
+    @property
+    def free_capacity(self) -> int:
+        """Absolute admission headroom: free slots (each slot is a full
+        worst-case reservation here)."""
+        return len(self._free)
+
     def info(self, slot: int) -> Optional[SlotInfo]:
         return self._slots[slot]
 
@@ -204,6 +210,24 @@ class SlotPool:
         if zero:
             self.caches = self._evict(self.caches,
                                       jnp.asarray(slot, jnp.int32))
+
+    # -- host swap tier: not supported (worst-case reservation has no
+    # partial progress worth preserving at block granularity); the engine's
+    # swap path falls back to restart preemption on False ---------------------
+    def swap_out(self, slot: int) -> bool:
+        return False
+
+    def has_swapped(self, rid: int) -> bool:
+        return False
+
+    def can_resume(self, rid: int) -> bool:
+        return False
+
+    def swap_in(self, rid: int) -> int:
+        raise NotImplementedError("slot pool has no host swap tier")
+
+    def drop_swapped(self, rid: int) -> None:
+        pass
 
     # -- the fused step -------------------------------------------------------
     def decode(self, params, prev_tok, meta_i, meta_f, row_slots, *,

@@ -226,6 +226,46 @@ class ModelDrafter(Drafter):
                 f"d{self.cfg.d_model})")
 
 
+class AdaptiveSpecK:
+    """Per-request draft-depth controller (`--spec-k auto`), AIMD over the
+    acceptance feedback the verify step already produces: full acceptance
+    grows k by 1 (the drafter is tracking the target — speculate deeper),
+    under-half acceptance halves it (each rejected draft is a wasted
+    verify row AND a wasted drafter call; on low-entropy-free traffic k
+    collapses to the floor and speculation costs ~one extra row).
+
+    The verify-row *block* stays `cap` wide — step shapes are pinned — so
+    adaptation only changes how many of a slot's candidate rows are live
+    (the rest stay masked), never the compiled shape set. New requests
+    start at `cap`: optimistic, one bad step away from halving, and on
+    the repetitive traces the CI floors gate this is the right prior."""
+
+    def __init__(self, cap: int, floor: int = 1):
+        assert cap >= floor >= 1
+        self.cap = cap
+        self.floor = floor
+        self._k: Dict[int, int] = {}
+
+    def k(self, rid: int) -> int:
+        return self._k.get(rid, self.cap)
+
+    def update(self, rid: int, proposed: int, accepted: int) -> None:
+        """One verify outcome for `rid`: `accepted` of `proposed` drafts
+        prefix-matched the target this step."""
+        k = self._k.get(rid, self.cap)
+        if accepted >= proposed:
+            k = min(k + 1, self.cap)
+        elif accepted * 2 < proposed:
+            k = max(k // 2, self.floor)
+        self._k[rid] = k
+
+    def retire(self, rid: int) -> None:
+        self._k.pop(rid, None)
+
+    def describe(self) -> str:
+        return f"adaptive k (floor {self.floor}, cap {self.cap})"
+
+
 def make_drafter(kind: Optional[str], cfg: ModelConfig, env: Env, *,
                  num_slots: int, prompt_len: int, max_gen: int,
                  spec_k: int) -> Optional[Drafter]:

@@ -14,8 +14,12 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import decode_ref
 from repro.kernels.paged_decode.ops import (paged_flash_decode,
-                                            paged_gather_decode)
-from repro.kernels.paged_decode.ref import paged_decode_ref
+                                            paged_flash_decode_quant,
+                                            paged_gather_decode,
+                                            paged_gather_decode_quant,
+                                            quantize_kv)
+from repro.kernels.paged_decode.ref import (paged_decode_quant_ref,
+                                            paged_decode_ref)
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_ref_loop
 from repro.kernels.rwkv6.ops import wkv6
@@ -176,6 +180,131 @@ def test_paged_decode_matches_contiguous_cache(rng):
                            jnp.full((B,), cur, jnp.int32), interpret=True)
     r = decode_ref(q, k, v, cur)
     assert float(jnp.max(jnp.abs(o - r))) < 2e-3
+
+
+def _quantize_pool(kp, vp):
+    """int8 + per-(block, head, token) scale over the head dim."""
+    kq, ks = quantize_kv(kp)
+    vq, vs = quantize_kv(vp)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,hd,bs,MB", [
+    (2, 4, 2, 32, 16, 4),
+    (3, 8, 8, 64, 8, 3),   # MHA
+    (1, 4, 1, 128, 32, 2),  # MQA, wide blocks
+])
+def test_paged_decode_quant_kernel_sweep(B, Hq, Hkv, hd, bs, MB, rng):
+    """The quant kernel (fused in-register dequant, scales via scalar
+    prefetch) must match the dequantize-everything reference exactly-ish,
+    and the whole int8 scheme must stay within the divergence bound of
+    the fp pool it quantized."""
+    q, kp, vp, tables = _paged_setup(rng, B, Hq, Hkv, hd, bs, MB,
+                                     jnp.float32)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    lengths = jnp.asarray([(i * 7) % (MB * bs) for i in range(B)], jnp.int32)
+    o = paged_flash_decode_quant(q, kq, vq, ks, vs, tables, lengths,
+                                 interpret=True)
+    r = paged_decode_quant_ref(q, kq, vq, ks, vs, tables, lengths)
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-3
+    # the XLA gather fallback agrees too (it's what CPU serving runs)
+    g = paged_gather_decode_quant(q, kq, vq, ks, vs, tables, lengths)
+    assert float(jnp.max(jnp.abs(g - r))) < 2e-3
+    # bounded divergence vs the fp pool: int8-over-head-dim keeps the
+    # attention output within a small relative RMS of the unquantized one
+    fp = paged_decode_ref(q, kp, vp, tables, lengths)
+    rmse = float(jnp.sqrt(jnp.mean((o - fp) ** 2)
+                          / jnp.maximum(jnp.mean(fp ** 2), 1e-12)))
+    assert rmse < 0.05, f"quant divergence {rmse} out of bound"
+
+
+def test_paged_decode_quant_masks_fully_and_partially(rng):
+    B, Hq, Hkv, hd, bs, MB = 3, 4, 2, 32, 16, 3
+    q, kp, vp, tables = _paged_setup(rng, B, Hq, Hkv, hd, bs, MB,
+                                     jnp.float32)
+    kq, vq, ks, vs = _quantize_pool(kp, vp)
+    lengths = jnp.asarray([-1, 0, MB * bs - 1], jnp.int32)
+    o = paged_flash_decode_quant(q, kq, vq, ks, vs, tables, lengths,
+                                 interpret=True)
+    r = paged_decode_quant_ref(q, kq, vq, ks, vs, tables, lengths)
+    assert float(jnp.max(jnp.abs(o[0]))) == 0.0, "masked row must be zero"
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(Hkv=st.sampled_from([1, 2]), g=st.sampled_from([1, 2, 4]),
+       bs=st.sampled_from([4, 8, 16]), seed=st.integers(0, 1 << 16))
+def test_paged_gather_fallback_property(Hkv, g, bs, seed):
+    """Property sweep of the XLA gather fallback against the reference on
+    adversarial tables: a fully-masked null-block row (all-zero table),
+    a mid-truncate row (suffix entries back at the null block), and rows
+    at arbitrary partial depths — the block-table states serving actually
+    produces around admission, truncate, and retirement."""
+    rng = np.random.default_rng(seed)
+    B, MB, hd = 4, 3, 32
+    Hq = Hkv * g
+    NB = 1 + B * MB + 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _mk(ks[0], (B, Hq, hd), jnp.float32)
+    kp = _mk(ks[1], (NB, Hkv, bs, hd), jnp.float32)
+    vp = _mk(ks[2], (NB, Hkv, bs, hd), jnp.float32)
+    perm = list(rng.permutation(np.arange(1, NB)))
+    tables = np.zeros((B, MB), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    lengths[0] = -1  # masked row: null table, no valid positions
+    tables[1, 0] = perm.pop()  # truncated back to one block
+    lengths[1] = int(rng.integers(0, bs))
+    for b in (2, 3):
+        for j in range(MB):
+            tables[b, j] = perm.pop()
+        lengths[b] = int(rng.integers(0, MB * bs))
+    t, L = jnp.asarray(tables), jnp.asarray(lengths)
+    out = paged_gather_decode(q, kp, vp, t, L)
+    ref = paged_decode_ref(q, kp, vp, t, L)
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-3
+
+
+def test_paged_gather_truncate_regrow_invariance(rng):
+    """Speculative rollback then regrowth rewrites a row's table suffix
+    onto different physical blocks. Same logical KV -> bit-identical
+    output, even with the freed blocks poisoned: the gather path must
+    depend only on (table, pool content at named blocks, length)."""
+    B, Hq, Hkv, hd, bs, MB = 1, 4, 2, 32, 8, 4
+    S = MB * bs
+    ks = jax.random.split(rng, 3)
+    q = _mk(ks[0], (B, Hq, hd), jnp.float32)
+    k = _mk(ks[1], (B, Hkv, S, hd), jnp.float32)
+    v = _mk(ks[2], (B, Hkv, S, hd), jnp.float32)
+    NB = 1 + 2 * MB  # room for the original AND the regrown suffix
+    kp = jnp.zeros((NB, Hkv, bs, hd), jnp.float32)
+    vp = jnp.zeros((NB, Hkv, bs, hd), jnp.float32)
+    first = np.arange(1, MB + 1)
+    for j, bid in enumerate(first):
+        blk = slice(j * bs, (j + 1) * bs)
+        kp = kp.at[bid].set(k[0, :, blk])
+        vp = vp.at[bid].set(v[0, :, blk])
+    tables = jnp.asarray(first[None, :], jnp.int32)
+    cur = S - 1
+    out1 = paged_gather_decode(q, kp, vp, tables,
+                               jnp.asarray([cur], jnp.int32))
+    # truncate the last 2 blocks, regrow onto fresh physical ids with the
+    # same logical KV, and poison the old blocks with garbage
+    keep = MB - 2
+    regrown = np.arange(MB + 1, MB + 3)
+    for j, bid in enumerate(regrown, start=keep):
+        blk = slice(j * bs, (j + 1) * bs)
+        kp = kp.at[bid].set(k[0, :, blk])
+        vp = vp.at[bid].set(v[0, :, blk])
+    for bid in first[keep:]:
+        kp = kp.at[bid].set(1e6)
+        vp = vp.at[bid].set(-1e6)
+    tables2 = jnp.asarray(
+        np.concatenate([first[:keep], regrown])[None, :], jnp.int32)
+    out2 = paged_gather_decode(q, kp, vp, tables2,
+                               jnp.asarray([cur], jnp.int32))
+    assert jnp.array_equal(out1, out2), \
+        "physical block placement leaked into the attention output"
 
 
 @pytest.mark.parametrize("B,S,W,bt,bw", [

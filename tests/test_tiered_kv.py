@@ -1,0 +1,333 @@
+"""Tiered KV: the int8 quantized paged backend (bounded-divergence
+contract, slot-placement invariance, byte footprint) and host swap-out
+preemption (bit-identical resume with recomputed_tokens == 0, restart
+fallback when the host budget is exhausted, fleet-shared pool across a
+drain, leak-checked detach), plus the satellite surfaces that ride along:
+the adaptive speculative draft depth and the load_score capacity
+tiebreak for heterogeneous fleets.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.clock import ManualClock
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.serve import (SERVE_PLAN, AdaptiveSpecK, EDFPolicy, HostSwapPool,
+                         QuantBlockManager, ReplicaEngine, ReplicaSet,
+                         Request, SamplingParams, ServingEngine,
+                         make_kv_backend, poisson_trace, run_to_completion)
+
+CFG = get_smoke("paper-demo")
+ENV0 = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
+P = 16  # prompt length used throughout
+
+
+def _engine(num_slots=2, max_gen=8, clock=None, **kw):
+    return ServingEngine(CFG, PARAMS, num_slots=num_slots, prompt_len=P,
+                         max_gen=max_gen, clock=clock or ManualClock(), **kw)
+
+
+def _req(rid, gen_len=6, arrival_t=0.0, seed=0, sampling=None, **kw):
+    rng = np.random.default_rng(seed + 100 * rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, CFG.vocab_size, (P,),
+                                       dtype=np.int32),
+                   gen_len=gen_len, arrival_t=arrival_t,
+                   sampling=sampling or SamplingParams(), **kw)
+
+
+def _trace(n=8, gen_len=6, rate=32.0, seed=0, sampling=None):
+    return poisson_trace(n, rate, prompt_len=P, vocab_size=CFG.vocab_size,
+                         gen_len=gen_len, sampling=sampling, seed=seed)
+
+
+def _fresh(trace):
+    return [dataclasses.replace(r, tokens=[], t_admit=None,
+                                t_first_token=None, t_done=None,
+                                restarts=0)
+            for r in trace]
+
+
+def _pool_nbytes(pool):
+    return sum(leaf.nbytes
+               for leaf in jax.tree_util.tree_leaves(pool.caches))
+
+
+# ---------------------------------------------------------------------------
+# quantized paged backend
+# ---------------------------------------------------------------------------
+
+
+def test_quant_backend_registry_and_describe():
+    pool = make_kv_backend("quant", CFG, ENV0, num_slots=2,
+                           prompt_len=P, max_gen=8)
+    try:
+        assert isinstance(pool, QuantBlockManager) and pool.kind == "quant"
+        assert "int8" in pool.describe()
+        assert 0.0 < pool.metrics()["kv_quant_divergence"] < 0.05
+    finally:
+        pool.release()
+    with pytest.raises(ValueError):
+        make_kv_backend("fp4", CFG, ENV0, num_slots=2,
+                        prompt_len=P, max_gen=8)
+
+
+def test_quant_serves_with_bounded_divergence():
+    """The int8 backend trades bit-exactness for capacity: outputs may
+    drift from the fp paged engine, but on short greedy horizons almost
+    every stream still matches, every request runs to its full length,
+    and the calibrated divergence metric stays inside the documented
+    bound (docs/serving.md, "Tiered KV")."""
+    trace = _trace(n=8, gen_len=8)
+    fp = run_to_completion(_engine(kv="paged"), _fresh(trace), dt=0.05)
+    eng = _engine(kv="quant")
+    out = run_to_completion(eng, _fresh(trace), dt=0.05)
+    assert sorted(out) == sorted(fp)
+    assert all(len(out[r]) == 8 for r in out)
+    same = sum(out[r] == fp[r] for r in out)
+    assert same >= len(out) - 2, \
+        f"quant diverged on {len(out) - same}/{len(out)} greedy streams"
+    assert eng.snapshot()["kv_quant_divergence"] < 0.05
+
+
+def test_quant_output_is_slot_placement_invariant():
+    """Self-consistency replaces the fp oracle: the same trace through
+    quant engines with different slot counts (different lane packing,
+    different physical block placement) must be bit-identical. This is
+    the --verify contract for --kv quant."""
+    trace = _trace(n=8, gen_len=8)
+    a = run_to_completion(_engine(num_slots=4, kv="quant"),
+                          _fresh(trace), dt=0.05)
+    b = run_to_completion(_engine(num_slots=2, kv="quant"),
+                          _fresh(trace), dt=0.05)
+    assert a == b
+
+
+def test_quant_halves_kv_bytes_per_block():
+    """At an equal block count the int8 pool + f32 scales must cost
+    (hd + 4) / (2 * hd) of the bf16 pool's bytes — the capacity headroom
+    the tiered bench turns into admitted concurrency."""
+    hd = CFG.head_dim
+    fp = make_kv_backend("paged", CFG, ENV0, num_slots=2,
+                        prompt_len=P, max_gen=8, kv_blocks=16)
+    qt = make_kv_backend("quant", CFG, ENV0, num_slots=2,
+                        prompt_len=P, max_gen=8, kv_blocks=16)
+    try:
+        ratio = _pool_nbytes(qt) / _pool_nbytes(fp)
+        assert abs(ratio - (hd + 4) / (2 * hd)) < 0.02, ratio
+    finally:
+        fp.release()
+        qt.release()
+
+
+# ---------------------------------------------------------------------------
+# host swap-out preemption
+# ---------------------------------------------------------------------------
+
+# EDF setup from test_serving_v2: a deadline-free runner is preempted for
+# an urgent arrival. With swap on, the victim's blocks ride out the
+# eviction on the host tier and it resumes without recompute.
+_VICTIM_SP = SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+
+
+def _preempt_run(**engine_kw):
+    eng = _engine(num_slots=1,
+                  policy=EDFPolicy(preemptive=True, min_slack_s=1.0),
+                  **engine_kw)
+    out = run_to_completion(
+        eng,
+        [_req(0, gen_len=8, sampling=_VICTIM_SP),
+         _req(1, gen_len=2, arrival_t=0.12, deadline_s=0.4)], dt=0.05)
+    return eng, out
+
+
+@pytest.mark.parametrize("kv", ["paged", "quant"])
+def test_swap_preemption_resumes_without_recompute(kv):
+    solo = run_to_completion(
+        _engine(num_slots=1, kv=kv),
+        [_req(0, gen_len=8, sampling=_VICTIM_SP)], dt=0.05)
+    restart, out_r = _preempt_run(kv=kv, swap=False)
+    swap, out_s = _preempt_run(kv=kv, swap=True)
+    for eng, out in ((restart, out_r), (swap, out_s)):
+        assert eng.metrics.preemptions >= 1
+        assert out[0] == solo[0], "victim stream must survive preemption"
+    # the restart path pays the prompt + generated prefix again ...
+    assert restart.metrics.recomputed_tokens > 0
+    assert restart.pool.metrics().get("swapped_blocks", 0.0) == 0.0
+    # ... the swap path pays nothing: blocks round-trip through the host
+    assert swap.metrics.recomputed_tokens == 0
+    pm = swap.pool.metrics()
+    assert pm["swapped_blocks"] > 0
+    assert pm["swap_out_bytes"] == pm["swap_in_bytes"] > 0
+    snap = swap.snapshot()
+    assert snap["recomputed_tokens"] == 0.0
+
+
+def test_swap_budget_exhaustion_falls_back_to_restart():
+    """A zero-block host budget can never store a victim: swap_out
+    declines and the engine keeps its correctness via the restart path
+    (same output, recompute billed) instead of deadlocking."""
+    eng, out = _preempt_run(swap=True, swap_budget_blocks=0)
+    solo = run_to_completion(
+        _engine(num_slots=1),
+        [_req(0, gen_len=8, sampling=_VICTIM_SP)], dt=0.05)
+    assert out[0] == solo[0]
+    assert eng.metrics.recomputed_tokens > 0, "budget 0 must restart"
+    assert eng.pool.metrics()["swapped_blocks"] == 0.0
+
+
+def test_fleet_drain_preempt_with_swap_migrates_requests():
+    """drain_mode="preempt" + swap: victims swap out of the draining
+    replica and restore onto a surviving one through the fleet-shared
+    host pool — outputs stay bit-identical to an undrained single engine
+    and the fleet rollup reports zero recomputed tokens."""
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=11)
+    trace = _trace(n=12, rate=32.0, sampling=sp)
+    base = run_to_completion(_engine(num_slots=2), _fresh(trace), dt=0.05)
+    rs = ReplicaSet(CFG, PARAMS, replicas=2, routing="occupancy",
+                    num_slots=2, prompt_len=P, max_gen=8,
+                    clock=ManualClock(), drain_mode="preempt", swap=True)
+    rs.submit(_fresh(trace))
+    steps = 0
+    while not rs.drained() and steps < 5000:
+        rs.step()
+        if steps == 6:
+            rs.reconcile(1)  # preempt-drain one replica mid-serve
+        rs.clock.sleep(0.05)
+        steps += 1
+    assert rs.drained()
+    assert rs.results() == base
+    snap = rs.snapshot()
+    assert snap["recomputed_tokens"] == 0.0, \
+        "swap drain must not recompute anything"
+    if snap["preemptions"] > 0:  # drain caught in-flight work
+        assert snap["swapped_blocks"] > 0
+        assert snap["swap_in_bytes"] == snap["swap_out_bytes"] > 0
+
+
+def test_host_pool_budget_and_leak_check():
+    pool = HostSwapPool(budget_blocks=4)
+    assert pool.can_store(4) and not pool.can_store(5)
+    with pytest.raises(ValueError):
+        HostSwapPool(budget_blocks=-1)
+    # a backend that releases while requests are still swapped out leaks
+    host = HostSwapPool()
+    backend = make_kv_backend("paged", CFG, ENV0, num_slots=1,
+                              prompt_len=P, max_gen=8,
+                              swap=True, swap_pool=host)
+    slot = backend.admit(0, 8)
+    backend.ensure(slot, P - 1)  # allocate the prompt's blocks
+    assert backend.swap_out(slot)
+    assert backend.has_swapped(0) and host.blocks_resident > 0
+    with pytest.raises(RuntimeError, match="leaked"):
+        backend.release()  # a stranded swap record is a leak
+    host.drop(0)
+    assert host.blocks_resident == 0
+    # a drop through the backend surface detaches clean
+    host2 = HostSwapPool()
+    b2 = make_kv_backend("paged", CFG, ENV0, num_slots=1,
+                         prompt_len=P, max_gen=8, swap=True, swap_pool=host2)
+    slot = b2.admit(1, 8)
+    b2.ensure(slot, P - 1)
+    assert b2.swap_out(slot)
+    b2.drop_swapped(1)
+    b2.release()
+
+
+# ---------------------------------------------------------------------------
+# satellite: adaptive speculative depth
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_spec_k_converges_both_ways():
+    ctl = AdaptiveSpecK(cap=4)
+    assert ctl.k(0) == 4  # optimistic start
+    for _ in range(8):  # rejected drafts: multiplicative decrease to floor
+        ctl.update(0, proposed=ctl.k(0), accepted=0)
+    assert ctl.k(0) == 1
+    for _ in range(8):  # clean acceptance: additive recovery to cap
+        ctl.update(0, proposed=ctl.k(0), accepted=ctl.k(0))
+    assert ctl.k(0) == 4
+    ctl.update(1, proposed=4, accepted=2)  # half kept: hold
+    assert ctl.k(1) == 4
+    ctl.retire(0)
+    assert ctl.k(0) == 4  # state dies with the request
+
+
+def test_spec_k_auto_engine_is_bit_exact_and_adapts():
+    """--spec-k auto must keep the lossless speculative contract (same
+    tokens as spec off) while per-request depths actually move: a random
+    prompt gives the ngram drafter near-zero acceptance, so depths decay
+    from the cap."""
+    trace = _trace(n=6, gen_len=8)
+    base = run_to_completion(_engine(), _fresh(trace), dt=0.05)
+    eng = _engine(spec="ngram", spec_k="auto")
+    ctl = eng.replica._spec_ctl
+    assert ctl is not None and eng.spec_k == 4
+    seen = {}
+    eng.submit(_fresh(trace))
+    while not eng.drained():
+        eng.step()
+        seen.update(ctl._k)
+        eng.clock.sleep(0.05)
+    assert eng.results() == base, "adaptive depth broke spec exactness"
+    assert seen and min(seen.values()) < 4, \
+        "rejected ngram drafts must shrink some request's depth"
+    assert not ctl._k, "retired requests must leave no depth state"
+
+
+# ---------------------------------------------------------------------------
+# satellite: load_score capacity tiebreak
+# ---------------------------------------------------------------------------
+
+
+def test_load_score_breaks_occupancy_ties_by_free_capacity():
+    """Two empty replicas with unequal kv_blocks tie on occupancy (0.0)
+    and in-flight count; the router must prefer the one with more
+    absolute free blocks, not fall back to list order."""
+    mk = lambda blocks: ReplicaEngine(  # noqa: E731
+        CFG, PARAMS, num_slots=2, prompt_len=P, max_gen=8,
+        kv_blocks=blocks, clock=ManualClock())
+    small, big = mk(12), mk(48)
+    try:
+        assert big.load_score() < small.load_score()
+        # and per-backend free_capacity is what feeds the tiebreak
+        assert big.pool.free_capacity > small.pool.free_capacity
+        picked = min([small, big], key=lambda r: r.load_score())
+        assert picked is big
+        # slot backend exposes the same surface
+        slot = ReplicaEngine(CFG, PARAMS, num_slots=3, prompt_len=P,
+                             max_gen=8, kv="slot", clock=ManualClock())
+        try:
+            assert slot.pool.free_capacity == 3
+        finally:
+            slot.pool.release()
+    finally:
+        small.pool.release()
+        big.pool.release()
+
+
+# ---------------------------------------------------------------------------
+# satellite: recomputed_tokens split out of prefill_tokens
+# ---------------------------------------------------------------------------
+
+
+def test_restart_recompute_billed_separately_from_prefill():
+    """A restart victim's second prefill lands in recomputed_tokens:
+    prefill_tokens counts each admitted prompt exactly once, so
+    tokens-per-second derived from it is no longer inflated by
+    preemption churn."""
+    eng, out = _preempt_run(swap=False)
+    assert eng.metrics.preemptions >= 1
+    m = eng.metrics
+    assert m.prefill_tokens == 2 * P, "each request billed once"
+    # prompt + any generated prefix the victim had to replay
+    assert m.recomputed_tokens >= P
+    snap = eng.snapshot()
+    assert snap["recomputed_tokens"] == float(m.recomputed_tokens)

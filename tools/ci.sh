@@ -77,6 +77,22 @@ assert sx["accepted_per_step"] > 1.0, sx
 assert sx["spec_acceptance_rate"] > 0.0, sx
 assert (sx["ngram"]["ms_per_token_sim"]
         < sx["baseline"]["ms_per_token_sim"]), sx
+# tiered-KV floors (ISSUE-7): at an EQUAL device byte budget the int8
+# quant backend must admit >= 1.8x the fp paged peak concurrency with
+# its calibrated divergence inside the documented bound, and a swap-out
+# preemption must resume with zero recomputed tokens where the restart
+# path replays the victim's prompt — same output tokens either way
+tx = r["tiered"]
+assert tx["kv_bytes_ratio_quant_vs_fp"] <= 1.01, tx
+assert tx["quant_concurrency_ratio"] >= 1.8, tx
+assert tx["kv_quant_divergence"] < 0.05, tx
+assert tx["paged"]["token_exact_vs_one_shot"], \
+    "fp paged lost exactness in the tiered bench"
+sw = tx["swap"]
+assert sw["tokens_identical"], "swap vs restart produced different tokens"
+assert sw["swap"]["recomputed_tokens"] == 0, sw
+assert sw["restart"]["recomputed_tokens"] > 0, sw
+assert sw["swap"]["swapped_blocks"] > 0, sw
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
@@ -95,3 +111,6 @@ python -m repro.launch.serve --replicas 4 --routing prefix --smoke --verify
 
 echo "== serving demo (speculative decoding, ngram drafter + verify vs --spec off) =="
 python -m repro.launch.serve --spec ngram --smoke --verify
+
+echo "== serving demo (tiered KV: int8 quant + host swap tier + verify) =="
+python -m repro.launch.serve --kv quant --swap on --smoke --verify
