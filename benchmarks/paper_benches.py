@@ -1016,6 +1016,133 @@ def bench_serve_tiered_full():
     return bench_serve_tiered(smoke=False)
 
 
+# -- rollout generation (rollout/engine.py over the serving plane) -----------
+# Claims recorded per commit (merged into BENCH_serve.json):
+#   (1) driving the fleet as a rollout generator costs ~nothing over plain
+#       serving at an equal KV budget — sim tokens/s ratio >= 0.8 (the
+#       rollout engine adds request fan-out + harvest, no decode work);
+#   (2) the multi-turn rollout trace (completions re-entering as follow_up
+#       requests with grown shared prefixes) out-dedups the static
+#       sysprompt trace: fleet prefix hit rate strictly above the
+#       sysprompt baseline at the same engine shape and request volume;
+#   (3) seeded rollouts are bit-reproducible across fleet shapes: the
+#       same prompt set on 2 replicas x 4 slots and on 1 replica x 2
+#       slots emits identical tokens per (prompt, sample, turn).
+# Everything is sim-time / token-count deterministic (no wall keys, so no
+# warmup registration) — the CI floors are machine-speed-proof.
+
+
+def bench_serve_rollout(smoke: bool = True):
+    from repro.core.clock import ManualClock
+    from repro.models import model as Mo
+    from repro.models.env import Env
+    from repro.rollout import RolloutEngine, rollout_signature
+    from repro.serve import (SERVE_PLAN, SamplingParams, burst_trace,
+                             make_scheduler_policy, make_serving_engine,
+                             run_to_completion, sysprompt_trace)
+
+    cfg = get_smoke("paper-demo")
+    params = Mo.init_params(jax.random.PRNGKey(0), cfg,
+                            Env(mesh=None, plan=SERVE_PLAN))
+    base_len, gen, bs = 16, 8, 4
+    turns = 4
+    n_prompts = 2 if smoke else 4
+    n_samples = 4
+    plen = base_len + (turns - 1) * gen  # final-turn context budget
+    kv_blocks = 160 if smoke else 320  # roomy pool: prefix chains survive
+    sampling = SamplingParams(temperature=0.7, seed=0)
+
+    def mk_engine(replicas=1, slots=2, prompt_len=plen):
+        return make_serving_engine(
+            cfg, params, replicas=replicas, routing="prefix",
+            num_slots=slots, prompt_len=prompt_len, max_gen=gen,
+            kv="paged", block_size=bs, kv_blocks=kv_blocks,
+            prefix_cache=True, policy=make_scheduler_policy("fifo"),
+            clock=ManualClock())
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(base_len,),
+                            dtype=np.int32) for _ in range(n_prompts)]
+
+    # (1) single-turn rollout generation vs plain serving of the same
+    # burst at the same engine shape (equal KV bytes by construction)
+    eng_r = mk_engine(prompt_len=base_len)
+    ro = RolloutEngine(eng_r, n_samples=n_samples, gen_len=gen,
+                       sampling=sampling)
+    rollouts_1t = ro.generate(prompts, dt=0.05, turns=1)
+    r_tok = sum(len(r.tokens) for r in rollouts_1t)
+    r_tps = r_tok / max(eng_r.clock.now(), 1e-9)
+    kv_bytes_rollout = _cache_bytes(
+        eng_r.pool.caches if hasattr(eng_r, "pool")
+        else eng_r.replicas[0].pool.caches)
+
+    eng_s = mk_engine(prompt_len=base_len)
+    trace = burst_trace(n_prompts * n_samples, prompt_len=base_len,
+                        vocab_size=cfg.vocab_size, gen_len=gen,
+                        sampling=sampling, seed=0)
+    out = run_to_completion(eng_s, trace, dt=0.05)
+    s_tok = sum(len(t) for t in out.values())
+    s_tps = s_tok / max(eng_s.clock.now(), 1e-9)
+    ratio = r_tps / max(s_tps, 1e-9)
+
+    # (2) multi-turn re-entrant trace vs the sysprompt baseline: same
+    # engine shape, same request volume, same per-request gen budget
+    eng_mt = mk_engine()
+    ro_mt = RolloutEngine(eng_mt, n_samples=n_samples, gen_len=gen,
+                          sampling=sampling)
+    rollouts_mt = ro_mt.generate(prompts, dt=0.05, turns=turns)
+    mt = eng_mt.snapshot()
+    n_req = n_prompts * n_samples * turns
+    eng_sys = mk_engine()
+    sys_trace = sysprompt_trace(n_req, 8.0, prompt_len=plen,
+                                vocab_size=cfg.vocab_size,
+                                prefix_len=3 * plen // 4, gen_len=gen,
+                                sampling=sampling, seed=0)
+    run_to_completion(eng_sys, sys_trace, dt=0.05)
+    sysr = eng_sys.snapshot()
+
+    # (3) reproducibility across fleet shapes (multi-turn, the hard case:
+    # follow_up arrival times depend on fleet scheduling)
+    eng_a = mk_engine(replicas=2, slots=4)
+    sig_a = rollout_signature(
+        RolloutEngine(eng_a, n_samples=n_samples, gen_len=gen,
+                      sampling=sampling).generate(prompts, dt=0.05,
+                                                  turns=turns))
+    sig_b = rollout_signature(rollouts_mt)  # 1 replica x 2 slots above
+    reproducible = sig_a == sig_b
+
+    report = {
+        "rollout": {
+            "prompts": n_prompts, "n_samples": n_samples, "turns": turns,
+            "gen_len": gen, "block_size": bs, "kv_blocks": kv_blocks,
+            "rollout_tokens": r_tok,
+            "tokens_per_s_sim": round(r_tps, 2),
+            "serve_tokens_per_s_sim": round(s_tps, 2),
+            "throughput_ratio": round(ratio, 3),
+            "kv_bytes": kv_bytes_rollout,
+            "multiturn_rollouts": len(rollouts_mt),
+            "multiturn_hit_rate": round(mt["prefix_hit_rate"], 3),
+            "sysprompt_hit_rate": round(sysr["prefix_hit_rate"], 3),
+            "multiturn_prefill_tokens": mt["prefill_tokens"],
+            "reproducible": bool(reproducible),
+        }
+    }
+    _merge_bench_report(report)
+    rx = report["rollout"]
+    return [
+        ("serve_rollout_throughput_ratio", rx["throughput_ratio"],
+         f"rollout={rx['tokens_per_s_sim']} serve="
+         f"{rx['serve_tokens_per_s_sim']} tok/s (sim) at equal KV"),
+        ("serve_rollout_multiturn_hit_rate", rx["multiturn_hit_rate"],
+         f"sysprompt_baseline={rx['sysprompt_hit_rate']} "
+         f"reproducible={rx['reproducible']}"),
+    ]
+
+
+def bench_serve_rollout_full():
+    return bench_serve_rollout(smoke=False)
+
+
 # -- per-arch smoke step times (throughput harness) -------------------------------
 
 

@@ -20,6 +20,8 @@ def main() -> None:
                                           bench_serve_prefix_full,
                                           bench_serve_replicas,
                                           bench_serve_replicas_full,
+                                          bench_serve_rollout,
+                                          bench_serve_rollout_full,
                                           bench_serve_sampling,
                                           bench_serve_sampling_full,
                                           bench_serve_spec,
@@ -39,7 +41,8 @@ def main() -> None:
         benches = (bench_env_capture, bench_mpi_job, bench_serve_throughput,
                    bench_serve_paged, bench_serve_sampling,
                    bench_serve_prefix, bench_serve_replicas,
-                   bench_serve_spec, bench_serve_tiered)
+                   bench_serve_spec, bench_serve_tiered,
+                   bench_serve_rollout)
     else:
         benches = (bench_cluster_formation, bench_autoscale_response,
                    bench_mpi_job, bench_env_capture,
@@ -47,7 +50,7 @@ def main() -> None:
                    bench_step_time, bench_serve_paged_full,
                    bench_serve_sampling_full, bench_serve_prefix_full,
                    bench_serve_replicas_full, bench_serve_spec_full,
-                   bench_serve_tiered_full)
+                   bench_serve_tiered_full, bench_serve_rollout_full)
 
     print("name,us_per_call,derived")
     for bench in benches:

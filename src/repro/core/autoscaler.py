@@ -229,18 +229,24 @@ class AutoScaler:
         # replicas_live / replica_warmups come from the router source only
         # (max = passthrough) — warmups flag cold prefix caches behind a
         # recent scale-up, context for a transiently low fleet hit rate.
+        # rollout_tokens / pairs_per_round are the post-training loop's
+        # phase counters (rollout/loop.py publishes them as their own
+        # source) — volume sums like any throughput counter, while
+        # reward_mean / train_loss below are levels and average
         for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
                           ("ttft_p95_ms", max), ("tokens_per_s", sum),
                           ("deadline_misses", sum), ("preemptions", sum),
                           ("prefill_tokens", sum), ("replicas_live", max),
-                          ("replica_warmups", max)):
+                          ("replica_warmups", max), ("rollout_tokens", sum),
+                          ("pairs_per_round", sum)):
             vals = [v for k, v in out.items()
                     if k.startswith(f"node_{name}/")]
             if vals:
                 out[name] = agg(vals)
         for name in ("slot_occupancy", "kv_block_occupancy",
                      "prefix_hit_rate", "kv_shared_occupancy",
-                     "accepted_per_step", "spec_acceptance_rate"):
+                     "accepted_per_step", "spec_acceptance_rate",
+                     "reward_mean", "train_loss"):
             occ = [v for k, v in out.items()
                    if k.startswith(f"node_{name}/")]
             if occ:

@@ -76,7 +76,8 @@ ROW_FRESH = 1    # freshly uploaded input token (prompt chunk / first token)
 ROW_CUR_LEN = 2  # KV write position == attention depth for the row
 ROW_SEED = 3     # SamplingParams.seed (per-request PRNG root)
 ROW_TOP_K = 4    # top-k cutoff (<=0 disables)
-META_I_ROWS = 5
+ROW_POS0 = 5     # len(prompt)-1 of the row's request (PRNG position base)
+META_I_ROWS = 6
 ROW_TEMPERATURE = 0  # <=0 lowers the row to greedy argmax
 ROW_TOP_P = 1        # nucleus mass (>=1 disables)
 META_F_ROWS = 2
@@ -96,12 +97,14 @@ def make_sample_fn(cfg: ModelConfig, prompt_len: int):
     """Fused on-device sample step: [T,Vpad] logits -> [T] int32 tokens.
 
     Each row's PRNG key is jax.random.fold_in(PRNGKey(seed), position)
-    where position = cur_len - (prompt_len - 1) is the request-logical
-    token index (0 for the first generated token). The key depends only on
-    the request's seed and its own progress — never on the batch row or
-    composition — so a seeded request emits bit-identical tokens whether it
-    decodes alone, inside a busy mixed-depth batch, or after a preemption
-    restart (the lane-placement-invariance tests hold exactly this).
+    where position = cur_len - pos0 is the request-logical token index
+    (0 for the first generated token; pos0 = len(prompt) - 1 rides in
+    ROW_POS0 so prompts shorter than the engine's prompt_len keep their
+    own position base). The key depends only on the request's seed and
+    its own progress — never on the batch row or composition — so a
+    seeded request emits bit-identical tokens whether it decodes alone,
+    inside a busy mixed-depth batch, or after a preemption restart (the
+    lane-placement-invariance tests hold exactly this).
 
     Rows with temperature <= 0 take the plain argmax, bit-identical to the
     pre-sampling fused step, which keeps the greedy token-exactness
@@ -116,7 +119,7 @@ def make_sample_fn(cfg: ModelConfig, prompt_len: int):
         lf = logits[:, :V].astype(jnp.float32)
         greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
         temp = meta_f[ROW_TEMPERATURE]
-        pos = jnp.maximum(meta_i[ROW_CUR_LEN] - (prompt_len - 1), 0)
+        pos = jnp.maximum(meta_i[ROW_CUR_LEN] - meta_i[ROW_POS0], 0)
         # temperature first, nucleus second (the vLLM/HF ordering): top_p
         # must see the distribution actually being sampled — a 0.8-scaled
         # softmax is sharper, so fewer tokens make the nucleus. top_k is

@@ -1,0 +1,33 @@
+"""Rollout subsystem — the serving fleet as a reproducible generation
+engine for post-training.
+
+RolloutEngine (rollout/engine.py) fans a prompt set out over the
+continuous-batching serving plane as seeded, bit-reproducible rollouts;
+Scorers (rollout/scorer.py) assign per-completion rewards;
+PreferenceTrainer (rollout/preference.py) turns scored rollouts into
+DPO-style parameter updates through the existing AdamW optimizer; and
+RolloutLoop (rollout/loop.py) alternates the phases on one VirtualCluster
+whose autoscaler arbitrates capacity between them.
+
+See docs/rollout.md for the loop diagram and the reproducibility contract.
+"""
+from repro.rollout.engine import (  # noqa: F401
+    Rollout,
+    RolloutEngine,
+    rollout_signature,
+)
+from repro.rollout.loop import PHASE_METRICS, RolloutLoop  # noqa: F401
+from repro.rollout.preference import (  # noqa: F401
+    PreferenceTrainer,
+    build_pairs,
+    completion_logprobs,
+    pack_pair_batch,
+    pack_sequences,
+)
+from repro.rollout.scorer import (  # noqa: F401
+    KeywordScorer,
+    LengthScorer,
+    LogprobScorer,
+    Scorer,
+    make_scorer,
+)

@@ -1,0 +1,167 @@
+"""RolloutEngine — the serving fleet as a reproducible generation engine.
+
+Post-training needs N sampled completions per prompt ("rollouts"). The
+serving plane already knows how to batch, page, route, and autoscale that
+traffic — this module drives it as a *generator* instead of rebuilding a
+second decode path: a prompt set fans out as a burst trace with n_samples
+requests per prompt, each carrying a SamplingParams seed derived from
+(prompt_id, sample_idx), and the engine's position-keyed PRNG makes every
+completion a pure function of (params, prompt, seed). Slot count, replica
+count, lane placement, preemptions, swaps — none of it shows in the
+tokens, so rollouts generated on a 4-replica fleet are bit-identical to
+the same prompts on a single engine. That is the reproducibility contract
+RL-style post-training wants: a reward assigned to a rollout re-derives
+against the exact same tokens anywhere.
+
+Multi-turn rollouts re-enter the queue as follow_up() requests whose
+prompts grow by each turn's completion — the traffic shape prefix caching
+and prefix-affine routing were built for (siblings share the base prompt;
+a lineage's turns share ever-longer prefixes).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.request import Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import run_to_completion
+
+
+@dataclass
+class Rollout:
+    """One completion of one prompt at one conversation turn.
+
+    `tokens` is this turn's completion only; `prompt` is the full context
+    it was generated from (turn > 0: the lineage's grown prefix). `seed`
+    is the derived per-request PRNG root — with the prompt and the params
+    it fully determines `tokens`.
+    """
+    prompt_id: int
+    sample_idx: int
+    rid: int
+    turn: int
+    prompt: np.ndarray
+    tokens: Tuple[int, ...]
+    seed: int
+    reward: float = 0.0
+
+
+def rollout_signature(rollouts: Sequence[Rollout]) -> Dict[int, Tuple[int, ...]]:
+    """rid -> tokens map — the equality object for reproducibility checks
+    (two generations match iff their signatures are equal)."""
+    return {r.rid: tuple(r.tokens) for r in rollouts}
+
+
+class RolloutEngine:
+    """Fan a prompt set out over a serving engine as seeded rollouts.
+
+    `engine` is a ServingEngine or a ReplicaSet (serve/router.py) — both
+    expose submit/step/drained/results. Request rids are laid out as
+
+        rid = turn * stride + prompt_id * n_samples + sample_idx,
+        stride = n_prompts * n_samples
+
+    so every (prompt, sample, turn) coordinate has one deterministic rid
+    regardless of completion order, and turn-0 seeds derive as
+    sampling.derive(rid) — the same additive derivation every trace
+    generator uses. Later turns derive through the *lineage*
+    (SamplingParams.derive_turn via Request.follow_up), not the child rid,
+    so a turn's distribution never depends on how rids were numbered.
+    """
+
+    def __init__(self, engine, *, n_samples: int = 4, gen_len: int = 8,
+                 sampling: Optional[SamplingParams] = None,
+                 deadline_s: float = math.inf):
+        if n_samples < 1:
+            raise ValueError(f"n_samples must be >= 1, got {n_samples}")
+        self.engine = engine
+        self.n_samples = n_samples
+        self.gen_len = gen_len
+        self.sampling = sampling if sampling is not None else SamplingParams()
+        self.deadline_s = deadline_s
+        self.last_tokens = 0  # completion tokens of the last generate()
+
+    # -- request fan-out ----------------------------------------------------
+    def requests_for(self, prompts: Sequence[np.ndarray], *,
+                     at: float = 0.0) -> List[Request]:
+        """The turn-0 burst: n_samples seeded requests per prompt, all
+        arriving at `at`. Pure function of (prompts, engine config) — two
+        calls build equivalent traces, which is what lets a verify pass
+        regenerate the same workload for a second engine."""
+        out = []
+        for pid, prompt in enumerate(prompts):
+            p = np.asarray(prompt, np.int32)
+            for k in range(self.n_samples):
+                rid = pid * self.n_samples + k
+                out.append(Request(rid=rid, prompt=p, gen_len=self.gen_len,
+                                   arrival_t=at, deadline_s=self.deadline_s,
+                                   sampling=self.sampling.derive(rid)))
+        return out
+
+    # -- generation ---------------------------------------------------------
+    def generate(self, prompts: Sequence[np.ndarray], *, cluster=None,
+                 dt=0.05, turns: int = 1, max_steps: int = 100_000,
+                 on_step=None) -> List[Rollout]:
+        """Run the prompt set to completion and return every rollout.
+
+        turns > 1 is the multi-turn trace: each completed request's output
+        re-enters the queue as a follow_up() whose prompt is the grown
+        context (arrival at the parent's completion time — ordering is
+        preserved, so the run replays bit-identically). The injection
+        happens inside the serve loop's on_step callback, which both
+        run_to_completion and VirtualCluster.serve invoke *before*
+        re-checking drained() — a follow-up submitted there keeps the
+        loop alive.
+
+        With `cluster`, the generation phase runs through
+        cluster.serve(): engine metrics publish to the registry KV and
+        the autoscaler resizes the fleet mid-rollout.
+        """
+        if turns < 1:
+            raise ValueError(f"turns must be >= 1, got {turns}")
+        stride = len(prompts) * self.n_samples
+        reqs = self.requests_for(prompts)
+        # pending holds our own Request references — the engine mutates
+        # them in place, so completion state is visible here even if a
+        # draining replica archives its completed list before we scan it
+        pending: Dict[int, Request] = {r.rid: r for r in reqs}
+        coords: Dict[int, Tuple[int, int]] = {
+            r.rid: (r.rid // self.n_samples, r.rid % self.n_samples)
+            for r in reqs}
+        rollouts: List[Rollout] = []
+
+        def _harvest():
+            for rid in [r for r, q in pending.items() if q.done]:
+                req = pending.pop(rid)
+                pid, k = coords[rid]
+                rollouts.append(Rollout(
+                    prompt_id=pid, sample_idx=k, rid=rid, turn=req.turn,
+                    prompt=req.prompt, tokens=tuple(req.tokens),
+                    seed=req.sampling.seed, reward=0.0))
+                if req.turn + 1 < turns:
+                    child = req.follow_up(rid=rid + stride,
+                                          gen_len=self.gen_len)
+                    coords[child.rid] = (pid, k)
+                    pending[child.rid] = child
+                    self.engine.submit([child])
+
+        def _cb(i, snap, *rest):
+            _harvest()
+            if on_step is not None:
+                on_step(i, snap, *rest)
+
+        if cluster is not None:
+            cluster.serve(self.engine, reqs, dt=dt, max_steps=max_steps,
+                          on_step=_cb)
+        else:
+            run_to_completion(self.engine, reqs, dt=dt, max_steps=max_steps,
+                              on_step=_cb)
+        _harvest()  # requests that retired on the final step
+        assert not pending, f"undrained rollouts: {sorted(pending)}"
+        rollouts.sort(key=lambda r: r.rid)
+        self.last_tokens = sum(len(r.tokens) for r in rollouts)
+        return rollouts

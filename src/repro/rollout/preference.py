@@ -1,0 +1,203 @@
+"""DPO-style preference updates from scored rollouts.
+
+Closes the generate -> score -> train loop against the serving model's own
+parameters: scored rollouts pair up (best vs worst completion per prompt),
+and the trainer steps the existing AdamW optimizer (optim/adamw.py) on the
+direct-preference objective
+
+    L = -log sigmoid(beta * ((lp_pi(c) - lp_ref(c)) - (lp_pi(r) - lp_ref(r))))
+
+where lp(.) is the summed log-probability of the *completion* tokens under
+the (frozen-reference vs trained) model. Completion log-probs reuse the
+iota-masked pattern of Mo.lm_loss — no gather over the (vocab-padded,
+possibly TP-sharded) logits — with a per-position mask selecting the
+completion span, so prompts of different lengths batch together.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.rollout.engine import Rollout
+from repro.serve.scheduler import SERVE_PLAN
+
+
+# -- batching -----------------------------------------------------------------
+
+def pack_sequences(items: Sequence[Rollout], *, pad_len: Optional[int] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Rollouts -> ([B,S] int32 token matrix, [B,S-1] float32 mask).
+
+    Row i is prompt_i ++ tokens_i padded to a common length; mask[i, j]
+    is 1.0 exactly on the *label* positions of completion tokens (inputs
+    are seq[:-1], labels seq[1:], so completion token t at sequence index
+    p contributes at label index p-1). Padding predicts nothing.
+    """
+    seqs = [np.concatenate([np.asarray(r.prompt, np.int32),
+                            np.asarray(r.tokens, np.int32)]) for r in items]
+    S = max((len(s) for s in seqs), default=2)
+    if pad_len is not None:
+        if pad_len < S:
+            raise ValueError(f"pad_len {pad_len} < longest sequence {S}")
+        S = pad_len
+    S = max(S, 2)  # forward needs at least one label position
+    toks = np.zeros((len(seqs), S), np.int32)
+    mask = np.zeros((len(seqs), S - 1), np.float32)
+    for i, (r, s) in enumerate(zip(items, seqs)):
+        toks[i, :len(s)] = s
+        lo = len(r.prompt) - 1
+        mask[i, lo:lo + len(r.tokens)] = 1.0
+    return toks, mask
+
+
+def build_pairs(rollouts: Sequence[Rollout]
+                ) -> List[Tuple[Rollout, Rollout]]:
+    """Chosen/rejected pairs: per (prompt_id, turn) group, the highest-
+    vs lowest-reward completion. Groups whose rewards are all equal carry
+    no preference signal and are skipped (a tie teaches nothing and the
+    DPO gradient at margin 0 would just shrink both)."""
+    groups: Dict[Tuple[int, int], List[Rollout]] = {}
+    for r in rollouts:
+        groups.setdefault((r.prompt_id, r.turn), []).append(r)
+    pairs = []
+    for key in sorted(groups):
+        g = sorted(groups[key], key=lambda r: (r.reward, -r.sample_idx))
+        if g[-1].reward > g[0].reward:
+            pairs.append((g[-1], g[0]))
+    return pairs
+
+
+def pack_pair_batch(pairs: Sequence[Tuple[Rollout, Rollout]], *,
+                    pad_pairs: Optional[int] = None,
+                    pad_len: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Pairs -> fixed-shape arrays for the jitted DPO step. pad_pairs /
+    pad_len pin the batch shape across rounds (pair counts vary when ties
+    are skipped) so the step never re-traces; pair_mask zeroes the
+    padding rows out of the loss."""
+    P = len(pairs) if pad_pairs is None else pad_pairs
+    if P < len(pairs):
+        raise ValueError(f"pad_pairs {P} < {len(pairs)} pairs")
+    chosen = [c for c, _ in pairs]
+    rejected = [r for _, r in pairs]
+    S = max((len(x.prompt) + len(x.tokens) for x in chosen + rejected),
+            default=2)
+    S = max(S, pad_len or 0)
+    ct, cm = pack_sequences(chosen, pad_len=S)
+    rt, rm = pack_sequences(rejected, pad_len=S)
+
+    def _pad(a, rows):
+        out = np.zeros((P,) + a.shape[1:], a.dtype)
+        out[:rows] = a
+        return out
+
+    pm = np.zeros((P,), np.float32)
+    pm[:len(pairs)] = 1.0
+    return {"chosen": _pad(ct, len(pairs)), "chosen_mask": _pad(cm, len(pairs)),
+            "rejected": _pad(rt, len(pairs)),
+            "rejected_mask": _pad(rm, len(pairs)), "pair_mask": pm}
+
+
+# -- log-probs ----------------------------------------------------------------
+
+def completion_logprobs(params, tokens, mask, cfg, env) -> jnp.ndarray:
+    """Summed log p(completion | prompt) per row ([B]).
+
+    Same vocab-padding treatment as Mo.lm_loss: iota comparison masks the
+    padded columns from the partition function and selects the label
+    column without a gather over the sharded vocab dim.
+    """
+    logits, _, _ = Mo.forward(params, tokens[:, :-1], cfg, env, mode="train")
+    labels = tokens[:, 1:]
+    vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    viota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vp), 2)
+    lf = jnp.where(viota < cfg.vocab_size, lf, -1e30)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.sum(jnp.where(viota == labels[..., None], lf, 0.0), axis=-1)
+    return jnp.sum((ll - logz) * mask, axis=-1)
+
+
+# -- the trainer --------------------------------------------------------------
+
+class PreferenceTrainer:
+    """DPO over the serving model's params with a frozen reference.
+
+    The reference is a snapshot of the params at construction — the
+    standard DPO anchor keeping the policy near its rollout distribution.
+    step() is jitted once per batch shape; adamw_update returns params in
+    the same tree structure and dtype as the serving copy, so
+    engine.set_params(trainer.params) swaps them in without re-jit.
+    """
+
+    def __init__(self, cfg, params, *, env: Optional[Env] = None,
+                 beta: float = 0.5, opt: Optional[AdamWConfig] = None):
+        self.cfg = cfg
+        self.env = env if env is not None else Env(mesh=None, plan=SERVE_PLAN)
+        self.params = params
+        self.ref_params = jax.tree_util.tree_map(
+            lambda x: jnp.array(x, copy=True), params)
+        self.beta = beta
+        self.opt_cfg = opt if opt is not None else AdamWConfig(
+            lr=1e-3, warmup_steps=0, total_steps=100, weight_decay=0.0)
+        self.opt_state = adamw_init(params, self.opt_cfg)
+        self.steps_done = 0
+        self._step = jax.jit(self._build_step())
+
+    def _build_step(self):
+        cfg, env, beta, ocfg = self.cfg, self.env, self.beta, self.opt_cfg
+
+        def loss_fn(params, ref, batch):
+            pi_c = completion_logprobs(params, batch["chosen"],
+                                       batch["chosen_mask"], cfg, env)
+            pi_r = completion_logprobs(params, batch["rejected"],
+                                       batch["rejected_mask"], cfg, env)
+            rf_c = completion_logprobs(ref, batch["chosen"],
+                                       batch["chosen_mask"], cfg, env)
+            rf_r = completion_logprobs(ref, batch["rejected"],
+                                       batch["rejected_mask"], cfg, env)
+            margin = (pi_c - rf_c) - (pi_r - rf_r)
+            pm = batch["pair_mask"]
+            n = jnp.maximum(jnp.sum(pm), 1.0)
+            loss = jnp.sum(-jax.nn.log_sigmoid(beta * margin) * pm) / n
+            return loss, jnp.sum(margin * pm) / n
+
+        def step(params, ref, opt_state, batch):
+            (loss, margin), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, ref, batch)
+            new_params, new_state = adamw_update(grads, opt_state, ocfg)
+            return new_params, new_state, loss, margin
+
+        return step
+
+    def step(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """One optimizer step on a packed pair batch."""
+        self.params, self.opt_state, loss, margin = self._step(
+            self.params, self.ref_params, self.opt_state, batch)
+        self.steps_done += 1
+        return {"train_loss": float(loss), "dpo_margin": float(margin)}
+
+    def train(self, pairs: Sequence[Tuple[Rollout, Rollout]], *,
+              steps: int = 1, pad_pairs: Optional[int] = None,
+              pad_len: Optional[int] = None) -> Dict[str, float]:
+        """`steps` optimizer steps on one packed batch of pairs. Returns
+        the first/last losses (the loop's train_loss-decreasing check) and
+        the final margin. No pairs (all ties) is a no-op round."""
+        if not pairs:
+            return {"train_loss": 0.0, "train_loss_first": 0.0,
+                    "dpo_margin": 0.0, "pairs_per_round": 0.0}
+        batch = pack_pair_batch(pairs, pad_pairs=pad_pairs, pad_len=pad_len)
+        first = last = None
+        for _ in range(max(steps, 1)):
+            m = self.step(batch)
+            first = m if first is None else first
+            last = m
+        return {"train_loss": last["train_loss"],
+                "train_loss_first": first["train_loss"],
+                "dpo_margin": last["dpo_margin"],
+                "pairs_per_round": float(len(pairs))}

@@ -1,0 +1,99 @@
+"""Scorers — per-completion rewards over a batch of rollouts.
+
+A Scorer maps rollouts to scalar rewards; the preference stage
+(rollout/preference.py) only ever sees the numbers, so any reward model
+plugs in behind this protocol. The three references cover the common
+shapes: a programmatic length target, keyword matching over the
+completion, and a reference-model log-probability score (the "does a
+judge model like this text" family, batched through the same iota-masked
+log-prob path the DPO loss uses).
+
+Scorers are deterministic functions of the rollout tokens — rewards
+re-derive bit-identically anywhere the rollouts do, which keeps the whole
+generate -> score -> train round reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.models.env import Env
+from repro.rollout.engine import Rollout
+from repro.rollout.preference import completion_logprobs, pack_sequences
+from repro.serve.scheduler import SERVE_PLAN
+
+
+@runtime_checkable
+class Scorer(Protocol):
+    name: str
+
+    def score(self, rollouts: Sequence[Rollout]) -> List[float]:
+        """One reward per rollout, same order. Pure in the tokens."""
+        ...
+
+
+@dataclass
+class LengthScorer:
+    """Reward completions for hitting a target length: 0 at exactly
+    `target` generated tokens, -1 per token of miss (normalized). With
+    stop_tokens in play completions end early at different lengths, so
+    this separates samples; without them it is the degenerate all-tie
+    case build_pairs skips."""
+    target: int
+    name: str = "length"
+
+    def score(self, rollouts):
+        d = max(self.target, 1)
+        return [-abs(len(r.tokens) - self.target) / d for r in rollouts]
+
+
+@dataclass
+class KeywordScorer:
+    """Fraction of completion tokens that are in the keyword set — the
+    classic programmatic reward (did the rollout mention X)."""
+    keywords: Tuple[int, ...]
+    name: str = "keyword"
+
+    def score(self, rollouts):
+        kw = set(self.keywords)
+        return [sum(t in kw for t in r.tokens) / max(len(r.tokens), 1)
+                for r in rollouts]
+
+
+class LogprobScorer:
+    """Mean per-token completion log-probability under a reference model
+    — rewards fluent-under-the-reference completions. The reference
+    params are whatever the caller snapshots (typically the pre-training
+    serving params, same anchor as the DPO reference)."""
+    name = "logprob"
+
+    def __init__(self, cfg, params, *, env: Optional[Env] = None):
+        self.cfg = cfg
+        self.env = env if env is not None else Env(mesh=None, plan=SERVE_PLAN)
+        self.params = params
+        cfg_, env_ = self.cfg, self.env
+        self._lp = jax.jit(lambda p, t, m: completion_logprobs(
+            p, t, m, cfg_, env_))
+
+    def score(self, rollouts):
+        if not rollouts:
+            return []
+        toks, mask = pack_sequences(rollouts)
+        lp = np.asarray(self._lp(self.params, toks, mask))
+        n = np.maximum(mask.sum(axis=-1), 1.0)
+        return [float(x) for x in lp / n]
+
+
+def make_scorer(kind: str, **kw) -> Scorer:
+    """The one scorer-kind dispatch ("length", "keyword", "logprob")."""
+    if kind == "length":
+        return LengthScorer(**kw)
+    if kind == "keyword":
+        return KeywordScorer(**kw)
+    if kind == "logprob":
+        return LogprobScorer(**kw)
+    raise ValueError(f"unknown scorer {kind!r} "
+                     "(expected 'length', 'keyword', or 'logprob')")

@@ -83,6 +83,7 @@ class PagedSlot:
     cur_len: int  # next decode write position
     tokens_done: int
     gen_len: int
+    plen: int = 0  # the request's own prompt length (0: engine prompt_len)
     prefilling: bool = False  # still consuming prompt chunks (lane rows)
     alloc_g: int = 0  # global-table entries bound so far (shared + private)
     alloc_l: int = 0  # local-table blocks allocated so far
@@ -107,6 +108,7 @@ class SwapRecord:
     cached_len: int
     alloc_g: int
     alloc_l: int
+    plen: int = 0
 
 
 class HostSwapPool:
@@ -129,6 +131,11 @@ class HostSwapPool:
         self.budget_blocks = budget_blocks  # None = unbounded
         self._records: Dict[int, SwapRecord] = {}
         self._attached = 0
+        # resume-plan ownership: at most one backend fleet-wide holds a
+        # standing re-admission reservation for a swapped rid (two
+        # replicas both reserving the same victim's footprint would
+        # double-commit fleet capacity for one resume)
+        self._planned: Dict[int, Any] = {}
 
     @property
     def blocks_resident(self) -> int:
@@ -156,12 +163,27 @@ class HostSwapPool:
 
     def take(self, rid: int) -> SwapRecord:
         """Remove and return `rid`'s record (swap-in frees host residency)."""
+        self._planned.pop(rid, None)
         return self._records.pop(rid)
 
     def drop(self, rid: int) -> None:
         """Discard a swapped request (cancelled / restarted): its host
         blocks free without a restore."""
+        self._planned.pop(rid, None)
         self._records.pop(rid, None)
+
+    # -- resume-plan ownership ------------------------------------------------
+    def plan(self, rid: int, owner: Any) -> None:
+        cur = self._planned.get(rid)
+        assert cur is None or cur is owner, \
+            f"rid {rid} already has a resume plan on another backend"
+        self._planned[rid] = owner
+
+    def planner(self, rid: int) -> Optional[Any]:
+        return self._planned.get(rid)
+
+    def unplan(self, rid: int) -> None:
+        self._planned.pop(rid, None)
 
     def attach(self) -> None:
         self._attached += 1
@@ -234,6 +256,9 @@ class BlockManager:
         self._swap_out_bytes = 0
         self._swap_in_bytes = 0
         self._swapped_blocks = 0  # cumulative blocks this backend swapped
+        # swap-aware admission: rid -> blocks this backend holds reserved
+        # for the rid's planned swap-in (counted in _reserved_total)
+        self._resume_plans: Dict[int, int] = {}
         # host-side tables: row per slot, 0 = unallocated (null block)
         self.table = np.zeros((num_slots, max(self.mb_global, 1)), np.int32)
         self.table_local = np.zeros((num_slots, max(self.mb_local, 1)),
@@ -297,10 +322,13 @@ class BlockManager:
             for s in (False, True)}
 
     # -- sizing / admission math -------------------------------------------
-    def blocks_for(self, gen_len: int) -> int:
+    def blocks_for(self, gen_len: int, plen: Optional[int] = None) -> int:
         """Physical blocks a request with this gen_len can ever touch (its
-        KV spans positions [0, prompt_len + gen_len - 1))."""
-        kv = max(self.prompt_len + gen_len - 1, 1)
+        KV spans positions [0, plen + gen_len - 1)). `plen` defaults to
+        the engine's prompt_len budget; chunked admissions pass the
+        request's own prompt length so a short multi-turn opener doesn't
+        reserve a full-length prompt's worst case."""
+        kv = max((plen or self.prompt_len) + gen_len - 1, 1)
         n = _ceil_div(kv, self.block_size) if self.has_global else 0
         if self.has_local:
             n += _ceil_div(min(self.window, kv), self.block_size)
@@ -352,7 +380,7 @@ class BlockManager:
             if h not in self._cached:
                 break
             shared += 1
-        cached_len = min(shared * self.block_size, self.prompt_len - 1)
+        cached_len = min(shared * self.block_size, len(prompt) - 1)
         cow = 1 if shared * self.block_size > cached_len else 0
         self._probe_memo = (key, (hashes, shared, cached_len, cow))
         return hashes, shared, cached_len, cow
@@ -367,7 +395,8 @@ class BlockManager:
         hashes, shared, _, cow = self._probe(prompt)
         resurrect = sum(1 for h in hashes[:shared]
                         if self._ref[self._cached[h]] == 0)
-        need = self.blocks_for(gen_len) - shared + cow + resurrect
+        plen = len(prompt) if prompt is not None else None
+        need = self.blocks_for(gen_len, plen) - shared + cow + resurrect
         return need <= self.free_unreserved
 
     def preempt_frees(self, slot: int, gen_len: int, *,
@@ -394,7 +423,8 @@ class BlockManager:
             if self._ref[bid] == 0 or (self._ref[bid] == 1
                                        and bid in vblocks):
                 resurrect += 1
-        need = self.blocks_for(gen_len) - shared + cow + resurrect
+        plen = len(prompt) if prompt is not None else None
+        need = self.blocks_for(gen_len, plen) - shared + cow + resurrect
         return need <= self.free_unreserved + freed
 
     # -- occupancy ----------------------------------------------------------
@@ -457,11 +487,13 @@ class BlockManager:
         use_prefix = prefilling and prompt is not None
         assert self.can_admit(gen_len, prompt=prompt if use_prefix else None)
         slot = self._free_slots.popleft()
-        need = self.blocks_for(gen_len)
+        plen = len(prompt) if prompt is not None else self.prompt_len
+        need = self.blocks_for(gen_len, plen)
         hashes, shared, cached_len, cow = (
             self._probe(prompt) if use_prefix else ((), 0, 0, 0))
         s = PagedSlot(rid=rid, cur_len=0, tokens_done=0, gen_len=gen_len,
-                      prefilling=prefilling, reserved=need - shared + cow,
+                      plen=plen, prefilling=prefilling,
+                      reserved=need - shared + cow,
                       cached_len=cached_len, shared_g=shared, hashes=hashes)
         self._slots[slot] = s
         for j in range(shared):
@@ -626,6 +658,7 @@ class BlockManager:
             "classic insert scatters the whole prompt; it cannot target a " \
             "slot admitted with shared prefix blocks"
         s.rid = rid
+        s.plen = self.prompt_len  # classic prefill scatters the full shape
         self.ensure(slot, self.prompt_len - 1)
         tg, tl = self._tables_of(slot)
         self.caches = self._insert(self.caches, prefill_caches,
@@ -644,7 +677,7 @@ class BlockManager:
         s = self._slots[slot]
         assert s is not None and s.prefilling
         s.prefilling = False
-        s.cur_len = self.prompt_len
+        s.cur_len = s.plen or self.prompt_len
         s.tokens_done = 1
         if self.prefix_cache:
             cap = int(self.max_shared_fraction * self.usable_blocks)
@@ -820,7 +853,7 @@ class BlockManager:
             rid=s.rid, payload=payload, n_blocks=n_blocks, nbytes=nbytes,
             cur_len=s.cur_len, tokens_done=s.tokens_done, gen_len=s.gen_len,
             reserved=s.reserved, cached_len=s.cached_len,
-            alloc_g=s.alloc_g, alloc_l=s.alloc_l))
+            alloc_g=s.alloc_g, alloc_l=s.alloc_l, plen=s.plen))
         self.evict(slot)
         self._swap_out_bytes += nbytes
         self._swapped_blocks += n_blocks
@@ -829,12 +862,56 @@ class BlockManager:
     def has_swapped(self, rid: int) -> bool:
         return self.swap_pool is not None and self.swap_pool.has(rid)
 
+    def plan_resume(self, rid: int) -> bool:
+        """Reserve `rid`'s swap-in footprint ahead of fresh admissions.
+
+        Opportunistic can_resume probes race every tick against fresh
+        arrivals with tighter deadlines: the victim only ever resumes in a
+        tick where its whole footprint happens to be free at probe time —
+        under a steady EDF stream of fresh work, possibly never. A plan
+        is a standing reservation (counted in _reserved_total, shrinking
+        free_unreserved) taken the moment capacity exists, so fresh
+        admissions queue behind the victim instead of starving it. One
+        backend fleet-wide may hold the plan (HostSwapPool arbitrates);
+        swap_in consumes it. Returns True iff this backend now holds the
+        plan. Idempotent — a standing plan re-probes for free."""
+        if not self.has_swapped(rid):
+            return False
+        if rid in self._resume_plans:
+            return True
+        if self.swap_pool.planner(rid) is not None:
+            return False  # another replica already reserved the resume
+        rec = self.swap_pool.peek(rid)
+        need = rec.n_blocks + rec.reserved
+        if need > self.free_unreserved:
+            return False
+        self._resume_plans[rid] = need
+        self._reserved_total += need
+        self.swap_pool.plan(rid, self)
+        return True
+
+    def cancel_resume_plans(self) -> None:
+        """Release every standing resume reservation (drain/release path:
+        a retiring backend must not pin capacity for resumes it will never
+        run — the swapped records stay in the shared pool, and a live
+        peer can take over the plan next tick)."""
+        for rid, need in list(self._resume_plans.items()):
+            self._reserved_total -= need
+            self.swap_pool.unplan(rid)
+        self._resume_plans.clear()
+
     def can_resume(self, rid: int) -> bool:
         """Swap-in admission math: a free slot plus the request's allocated
         blocks AND its unspent reservation (it must still be able to finish
-        its declared gen_len without deadlocking mid-decode)."""
+        its declared gen_len without deadlocking mid-decode). With a
+        standing plan here the blocks are already reserved — only the slot
+        is still in question; a plan held by another backend makes the rid
+        theirs to resume."""
         if not self.has_swapped(rid) or not self._free_slots:
             return False
+        planner = self.swap_pool.planner(rid)
+        if planner is not None:
+            return planner is self
         rec = self.swap_pool.peek(rid)
         return rec.n_blocks + rec.reserved <= self.free_unreserved
 
@@ -846,12 +923,15 @@ class BlockManager:
         identically; restored blocks are private (shared_g=0, no hashes —
         re-registration would alias the index's live originals)."""
         assert self.can_resume(rid), f"cannot resume swapped rid {rid}"
+        planned = self._resume_plans.pop(rid, None)
+        if planned is not None:  # consume the standing reservation
+            self._reserved_total -= planned
         rec = self.swap_pool.take(rid)
         slot = self._free_slots.popleft()
         need = rec.reserved + rec.alloc_g + rec.alloc_l
         s = PagedSlot(rid=rid, cur_len=rec.cur_len,
                       tokens_done=rec.tokens_done, gen_len=rec.gen_len,
-                      reserved=need, cached_len=rec.cached_len)
+                      plen=rec.plen, reserved=need, cached_len=rec.cached_len)
         self._slots[slot] = s
         self._reserved_total += need
         for _ in range(rec.alloc_g):  # _alloc draws the reservation down
@@ -864,8 +944,12 @@ class BlockManager:
         return slot
 
     def drop_swapped(self, rid: int) -> None:
-        """Discard `rid`'s host copy (restart fallback / cancellation)."""
+        """Discard `rid`'s host copy (restart fallback / cancellation) and
+        release any standing resume reservation held for it here."""
         if self.swap_pool is not None:
+            planned = self._resume_plans.pop(rid, None)
+            if planned is not None:
+                self._reserved_total -= planned
             self.swap_pool.drop(rid)
 
     def cached_prefix_len(self, slot: int) -> int:
@@ -892,6 +976,10 @@ class BlockManager:
         live = [i for i, s in enumerate(self._slots) if s is not None]
         if live:
             raise RuntimeError(f"release with occupied slots {live}")
+        if self.swap_pool is not None:
+            # standing resume reservations are not leaks: the records stay
+            # in the shared pool for a live peer to plan next tick
+            self.cancel_resume_plans()
         if self._reserved_total:
             raise RuntimeError(f"release leaked {self._reserved_total} "
                                "reserved blocks")

@@ -145,6 +145,17 @@ class KVBackend(Protocol):
         ...
     def has_swapped(self, rid: int) -> bool: ...
     def can_resume(self, rid: int) -> bool: ...
+    def plan_resume(self, rid: int) -> bool:
+        """Take (or confirm) a standing reservation for `rid`'s swap-in
+        footprint so fresh admissions queue behind the victim instead of
+        starving it. Idempotent; at most one backend fleet-wide holds the
+        plan; swap_in consumes it. False on backends without a swap
+        tier."""
+        ...
+    def cancel_resume_plans(self) -> None:
+        """Release every standing resume reservation (drain/release: the
+        swapped records stay in the shared pool for a live peer)."""
+        ...
     def swap_in(self, rid: int) -> int:
         """Restore a swapped request into a fresh slot (inverse of
         swap_out); decoding resumes from the swap point bit-identically."""

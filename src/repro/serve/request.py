@@ -1,10 +1,13 @@
 """Requests, the arrival queue, and trace generators.
 
-A Request is one generation job: a fixed-length prompt (the engine jits one
-prefill shape — variable prompts are padded by the trace generator), a
-per-request generation length, an arrival time on the serving clock, an
-optional latency deadline, and a SamplingParams contract (serve/sampling.py)
-that shapes its token distribution. The RequestQueue gates admission on
+A Request is one generation job: a prompt (chunk-prefill backends accept
+any length up to the engine's prompt_len budget; classic one-shot prefill
+jits one shape and needs exact-length prompts), a per-request generation
+length, an arrival time on the serving clock, an optional latency
+deadline, and a SamplingParams contract (serve/sampling.py) that shapes
+its token distribution. A retired request can seed the next conversation
+turn via follow_up() — the seed-derivation lineage and arrival ordering
+survive, which is what makes multi-turn rollouts reproducible. The RequestQueue gates admission on
 arrival time so a whole trace can be loaded up front and replayed
 deterministically under a ManualClock; a SchedulerPolicy (serve/policy.py)
 decides *which* arrived request admits next.
@@ -40,10 +43,50 @@ class Request:
     # books those into recomputed_tokens, not prefill_tokens. A swap-out
     # preemption keeps progress on the host tier and does NOT count.
     restarts: int = 0
+    # conversation turn this request represents (0 = the opening prompt;
+    # follow_up() children increment it). Part of the seed-derivation
+    # lineage: turn t samples with sampling.derive_turn(t)'s seed.
+    turn: int = 0
 
     @property
     def done(self) -> bool:
         return self.t_done is not None
+
+    def follow_up(self, new_tokens: Sequence[int] = (), *, rid: int,
+                  gen_len: Optional[int] = None,
+                  arrival_t: Optional[float] = None, gap_s: float = 0.0,
+                  deadline_s: Optional[float] = None) -> "Request":
+        """A retired request's output seeding the next conversation turn.
+
+        The child prompt is this request's full context — prompt, its
+        generated tokens, and any `new_tokens` the caller appends (a user
+        reply, a tool result) — so every turn of a lineage shares a grown
+        prefix the cache dedups. Seed lineage is preserved, not copied:
+        the child samples with sampling.derive_turn(turn + 1), a pure
+        function of the opening request's params, so multi-turn rollouts
+        replay bit-identically. Arrival ordering is preserved too —
+        the child arrives at this request's completion time (plus an
+        optional think-time gap) unless the caller pins `arrival_t`.
+        """
+        if not self.done:
+            raise ValueError(f"request {self.rid} is still in flight; "
+                             f"follow_up needs its completed output")
+        prompt = np.concatenate([
+            np.asarray(self.prompt, np.int32),
+            np.asarray(self.tokens, np.int32),
+            np.asarray(list(new_tokens), np.int32),
+        ]) if (self.tokens or len(new_tokens)) else np.asarray(
+            self.prompt, np.int32)
+        at = (self.t_done + gap_s) if arrival_t is None else arrival_t
+        return Request(
+            rid=rid,
+            prompt=prompt,
+            gen_len=self.gen_len if gen_len is None else gen_len,
+            arrival_t=at,
+            deadline_s=self.deadline_s if deadline_s is None else deadline_s,
+            sampling=self.sampling.derive_turn(self.turn + 1),
+            turn=self.turn + 1,
+        )
 
     @property
     def eff_gen_len(self) -> int:

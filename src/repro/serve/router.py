@@ -214,6 +214,9 @@ class ReplicaSet:
         self._retired_sources: List[str] = []  # pending tombstones
         self._results: Dict[int, List[int]] = {}  # archived at release
         self.replica_warmups = 0  # cold spawns after construction
+        # host-side gauges merged into snapshot() and the router's metric
+        # source (a rollout loop publishes its phase metrics here)
+        self.extra_metrics: Dict[str, float] = {}
         for _ in range(replicas):
             self._spawn()
         first = self.replicas[0]
@@ -295,9 +298,18 @@ class ReplicaSet:
         return not self.busy and not self.pending()
 
     def submit(self, requests: Sequence[Request]) -> None:
-        validate_requests(requests, self.prompt_len, self.max_gen)
+        validate_requests(requests, self.prompt_len, self.max_gen,
+                          allow_shorter=self.prefill_chunk > 0)
         for r in requests:
             self.queue.push(r)
+
+    def set_params(self, params) -> None:
+        """Swap the serving weights on every replica (a post-training loop
+        publishing its updated policy). The fleet must be idle — in-flight
+        KV was computed under the old weights."""
+        for r in self.replicas:
+            r.set_params(params)
+        self.params = params
 
     # -- scheduler iteration ---------------------------------------------------
     def step(self) -> Dict[str, float]:
@@ -318,6 +330,22 @@ class ReplicaSet:
         the policy may issue one fleet-wide preemption verdict per tick
         (the victim's replica must actually free enough — same rules as
         the single-engine loop); otherwise the queue holds backpressure."""
+        # swap-aware admission, fleet edition: every arrived swapped-out
+        # victim gets a standing re-admission reservation on ONE replica
+        # (least-loaded first; the shared HostSwapPool arbitrates
+        # ownership) before fresh requests can claim the capacity. A
+        # draining owner cancels its plans, so the records re-plan onto a
+        # live peer the next tick.
+        arrived = self.queue.ready(now)
+        if any(r.pool.has_swapped(q.rid)
+               for q in arrived for r in self.replicas):
+            by_load = sorted(self.live_replicas(),
+                             key=lambda r: r.load_score())
+            for q in arrived:
+                for rep in by_load:
+                    if rep.pool.has_swapped(q.rid) \
+                            and rep.pool.plan_resume(q.rid):
+                        break
         preempted = False
         ready = None
         while True:
@@ -333,6 +361,24 @@ class ReplicaSet:
                 return
             target = self.routing.route(live, req, now)
             if target is None:
+                # resume-first fallback: the pick may be blocked by a
+                # victim's standing reservation — resuming the victim
+                # (pre-reserved; it only needs a slot) makes progress
+                # where returning would deadlock the admission loop
+                resumed = False
+                for q in ready:
+                    if q is req or not any(r.pool.has_swapped(q.rid)
+                                           for r in live):
+                        continue
+                    rep = next((r for r in live if r.can_accept(q)), None)
+                    if rep is not None:
+                        self.queue.remove(q)
+                        ready.remove(q)
+                        rep.admit(q, now)
+                        resumed = True
+                        break
+                if resumed:
+                    continue
                 if preempted:
                     return
                 target, victim, vslot = self._preemption_target(live, req,
@@ -440,6 +486,7 @@ class ReplicaSet:
             out["latency_p95_ms"] = percentile(lats, 95.0) * 1e3
         if ttfts:
             out["ttft_p95_ms"] = percentile(ttfts, 95.0) * 1e3
+        out.update(self.extra_metrics)
         return out
 
     def metric_sources(self) -> Dict[str, Dict[str, float]]:
@@ -453,6 +500,7 @@ class ReplicaSet:
             "queue_depth": float(self.queue.depth(now)),
             "replicas_live": float(len(self.live_replicas())),
             "replica_warmups": float(self.replica_warmups),
+            **self.extra_metrics,
         }}
         for r in self.replicas:
             out[r.name] = r.snapshot(queue_depth=None)

@@ -73,6 +73,17 @@ class SamplingParams:
         from dataclasses import replace
         return replace(self, seed=(self.seed + rid) % 2**31)
 
+    def derive_turn(self, turn: int) -> "SamplingParams":
+        """Follow-up copy for turn `turn` of a multi-turn lineage. The
+        multiplicative mix keeps turn lineages disjoint from the additive
+        rid derivation: turn t of rid r never collides with rid r+t of
+        turn 0, so a rollout's completions stay decorrelated across both
+        axes. Deterministic — the lineage's seeds are a pure function of
+        (base seed, rid, turn), which is what makes multi-turn rollouts
+        bit-reproducible regardless of placement."""
+        from dataclasses import replace
+        return replace(self, seed=(self.seed * 1_000_003 + turn) % 2**31)
+
     @property
     def stop_set(self) -> FrozenSet[int]:
         return self._stop_set

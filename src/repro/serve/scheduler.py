@@ -208,6 +208,10 @@ class ReplicaEngine:
         self.completed: List[Request] = []
         self.decode_steps = 0
         self.draining = False
+        # host-side gauges merged into every snapshot (a rollout loop
+        # publishes its phase metrics here so they ride the same rollup
+        # the autoscaler already reads)
+        self.extra_metrics: Dict[str, float] = {}
 
     # -- state -----------------------------------------------------------------
     @property
@@ -228,7 +232,7 @@ class ReplicaEngine:
         backend's can_admit is the only gate."""
         if not self.prefill_chunk:
             return True
-        return (sum(self.prompt_len - l.pos for l in self._lanes)
+        return (sum(len(l.req.prompt) - l.pos for l in self._lanes)
                 < self.prefill_chunk)
 
     def can_take(self, req: Request) -> bool:
@@ -286,7 +290,7 @@ class ReplicaEngine:
         — and fed to the same step's decode via the fresh-token path."""
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-        self.metrics.record_prefill_tokens(self.prompt_len,
+        self.metrics.record_prefill_tokens(len(req.prompt),
                                            recompute=req.restarts > 0)
         self.pool.insert(slot, req.rid, caches, req.eff_gen_len)
         if req.sampling.greedy:
@@ -294,7 +298,7 @@ class ReplicaEngine:
         else:
             mi = np.zeros((St.META_I_ROWS, 1), np.int32)
             mf = np.zeros((St.META_F_ROWS, 1), np.float32)
-            mi[St.ROW_CUR_LEN, 0] = self.prompt_len - 1  # -> position 0
+            mi[St.ROW_CUR_LEN, 0] = len(req.prompt) - 1  # -> position 0
             self._fill_sampling(mi, mf, 0, req)
             first = int(self._sample_first(logits, mi, mf)[0])
         req.t_first_token = now
@@ -375,6 +379,9 @@ class ReplicaEngine:
         (bit-identical regeneration is the position-keyed sampling
         guarantee, so a drain can be immediate without changing output)."""
         self.draining = True
+        # a draining replica will never run its planned swap-ins — free
+        # the standing reservations so a live peer can take them over
+        self.pool.cancel_resume_plans()
         if not preempt:
             return []
         now = self.clock.now()
@@ -416,7 +423,7 @@ class ReplicaEngine:
         N = self.pool.num_slots
         budget = self.prefill_chunk
         for lane in lanes:
-            lane.take = min(budget, self.prompt_len - lane.pos)
+            lane.take = min(budget, len(lane.req.prompt) - lane.pos)
             budget -= lane.take
         # prefill compute actually spent this step (prefix-cache hits
         # shrink it: cached positions never occupy a lane row); chunks of
@@ -547,7 +554,7 @@ class ReplicaEngine:
         still_open: List[_Lane] = []
         for lane in lanes:
             lane.pos += lane.take
-            if lane.pos < self.prompt_len:
+            if lane.pos < len(lane.req.prompt):
                 still_open.append(lane)
                 continue
             slot = lane.slot
@@ -575,6 +582,7 @@ class ReplicaEngine:
         sp = req.sampling
         meta_i[St.ROW_SEED, rows] = sp.seed
         meta_i[St.ROW_TOP_K, rows] = sp.top_k
+        meta_i[St.ROW_POS0, rows] = len(req.prompt) - 1
         meta_f[St.ROW_TEMPERATURE, rows] = sp.temperature
         meta_f[St.ROW_TOP_P, rows] = sp.top_p
         return not sp.greedy
@@ -608,12 +616,25 @@ class ReplicaEngine:
         return (m.get("kv_block_occupancy", self.pool.occupancy),
                 len(self._inflight), -self.pool.free_capacity)
 
+    def set_params(self, params: Pytree) -> None:
+        """Swap the serving weights (a post-training loop publishing its
+        updated policy). Only between requests: in-flight KV was computed
+        under the old weights, so a mid-request swap would silently mix
+        models inside one generation. Same tree structure as the old
+        params keeps every shared jit warm — no recompile."""
+        if self.busy or self._lanes:
+            raise RuntimeError(
+                f"{self.name}: set_params with {len(self._inflight)} "
+                "requests in flight — drain first")
+        self.params = params
+
     def snapshot(self, *, queue_depth: Optional[int] = None
                  ) -> Dict[str, float]:
         return self.metrics.snapshot(self.clock.now(),
                                      queue_depth=queue_depth,
                                      slot_occupancy=self.pool.occupancy,
-                                     **self.pool.metrics())
+                                     **self.pool.metrics(),
+                                     **self.extra_metrics)
 
 
 class ServingEngine:
@@ -716,6 +737,13 @@ class ServingEngine:
         self.replica.decode_steps = n
 
     @property
+    def extra_metrics(self) -> Dict[str, float]:
+        return self.replica.extra_metrics
+
+    def set_params(self, params: Pytree) -> None:
+        self.replica.set_params(params)
+
+    @property
     def _prefill(self):
         return self.replica._prefill
 
@@ -744,7 +772,8 @@ class ServingEngine:
         derived at admission via Request.eff_gen_len, so re-submitting the
         same objects (the CLI --verify re-serve path) sees the declared
         gen_len unchanged."""
-        validate_requests(requests, self.prompt_len, self.max_gen)
+        validate_requests(requests, self.prompt_len, self.max_gen,
+                          allow_shorter=self.prefill_chunk > 0)
         for r in requests:
             self.queue.push(r)
 
@@ -761,6 +790,16 @@ class ServingEngine:
     # -- admission ----------------------------------------------------------------
     def _admit_ready(self, now: float) -> None:
         rep = self.replica
+        # swap-aware admission: before any fresh request can claim blocks,
+        # every arrived swapped-out victim gets a re-admission *plan* — a
+        # standing reservation for its resume footprint (blocks it held +
+        # its unspent reservation). Fresh admissions see the shrunk
+        # free_unreserved and queue behind the victim instead of starving
+        # it; the plan is consumed by swap_in and survives across ticks,
+        # so resume capacity accretes instead of being re-raced each step.
+        for r in self.queue.ready(now):
+            if rep.pool.has_swapped(r.rid):
+                rep.pool.plan_resume(r.rid)
         preempted = False  # at most one restart per iteration (no thrash)
         ready = None  # built lazily, reused across the loop (O(arrived)
         # once per step, not per admission; invalidated when the queue
@@ -777,6 +816,22 @@ class ServingEngine:
                 return
             prompt = rep.prompt_arg(req)
             if not rep.can_take(req):
+                # resume-first fallback: the policy's pick is blocked —
+                # possibly *by* a victim's standing reservation. Resuming
+                # an admissible swapped request never takes what the pick
+                # waits for (its blocks are pre-reserved; it only needs a
+                # free slot) and retiring it is the fastest way to free
+                # real capacity — and it keeps EDF's tight-deadline picks
+                # from starving victims behind an admission deadlock.
+                swapped = next(
+                    (r for r in ready if r is not req
+                     and rep.pool.has_swapped(r.rid) and rep.can_take(r)),
+                    None)
+                if swapped is not None:
+                    self.queue.remove(swapped)
+                    ready.remove(swapped)
+                    rep.admit(swapped, now)
+                    continue
                 victim = None if preempted else \
                     self.policy.victim(rep.running(), req, now)
                 if victim is None:
@@ -817,14 +872,21 @@ class ServingEngine:
 
 
 def validate_requests(requests: Sequence[Request], prompt_len: int,
-                      max_gen: int) -> None:
+                      max_gen: int, *, allow_shorter: bool = False) -> None:
     """Shared submit-time validation (ServingEngine and the router both
-    gate here, before anything reaches a replica)."""
+    gate here, before anything reaches a replica). Chunk-prefill backends
+    stream prompts through lane rows at the request's own length, so they
+    accept any prompt up to the engine's prompt_len budget
+    (allow_shorter=True); classic batch-1 prefill jits one shape and
+    keeps the exact-length contract."""
     for r in requests:
-        if len(r.prompt) != prompt_len:
+        n = len(r.prompt)
+        if (n != prompt_len if not allow_shorter
+                else not 0 < n <= prompt_len):
             raise ValueError(
-                f"request {r.rid}: prompt length {len(r.prompt)} != "
-                f"engine prompt_len {prompt_len} (pad the trace)")
+                f"request {r.rid}: prompt length {n} "
+                + (f"not in (0, {prompt_len}]" if allow_shorter
+                   else f"!= engine prompt_len {prompt_len} (pad the trace)"))
         if r.eff_gen_len > max_gen:
             raise ValueError(
                 f"request {r.rid}: gen_len {r.eff_gen_len} > "

@@ -223,6 +223,12 @@ class SlotPool:
     def can_resume(self, rid: int) -> bool:
         return False
 
+    def plan_resume(self, rid: int) -> bool:
+        return False
+
+    def cancel_resume_plans(self) -> None:
+        pass
+
     def swap_in(self, rid: int) -> int:
         raise NotImplementedError("slot pool has no host swap tier")
 

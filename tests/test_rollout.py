@@ -1,0 +1,399 @@
+"""Rollout subsystem: seeded fan-out reproducibility (bit-identical
+across replica and slot counts), follow_up seed lineage and arrival
+ordering, scorers, DPO preference training (loss decreases), the
+generate -> score -> train loop publishing phase metrics through the
+registry to the autoscaler, the multi-turn re-entrant trace hitting the
+prefix cache — plus the satellite serve-layer surfaces that ride along:
+variable-length prompts through chunked prefill and swap-aware admission
+(a swapped victim's planned re-admission is never starved behind fresh
+arrivals).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import QueueDepthPolicy, VirtualCluster
+from repro.core.clock import ManualClock
+from repro.core.image import ClusterImage
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.optim.adamw import AdamWConfig
+from repro.rollout import (KeywordScorer, LengthScorer, LogprobScorer,
+                           PreferenceTrainer, Rollout, RolloutEngine,
+                           RolloutLoop, build_pairs, pack_pair_batch,
+                           pack_sequences, rollout_signature)
+from repro.serve import (SERVE_PLAN, EDFPolicy, Request, SamplingParams,
+                         ServingEngine, make_kv_backend,
+                         make_scheduler_policy, make_serving_engine,
+                         run_to_completion)
+
+CFG = get_smoke("paper-demo")
+ENV0 = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV0)
+BASE, GEN = 12, 6
+SP = SamplingParams(temperature=0.7, seed=3)
+
+
+def _prompts(n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=(BASE,), dtype=np.int32)
+            for _ in range(n)]
+
+
+def _engine(replicas=1, slots=4, turns=1, **kw):
+    return make_serving_engine(
+        CFG, PARAMS, replicas=replicas, routing="prefix", num_slots=slots,
+        prompt_len=BASE + (turns - 1) * GEN, max_gen=GEN, kv="paged",
+        block_size=4, prefix_cache=True,
+        policy=make_scheduler_policy("fifo"), clock=ManualClock(), **kw)
+
+
+def _rollout_engine(engine, n_samples=3):
+    return RolloutEngine(engine, n_samples=n_samples, gen_len=GEN,
+                         sampling=SP)
+
+
+# ---------------------------------------------------------------------------
+# seed derivation and fan-out
+# ---------------------------------------------------------------------------
+
+
+def test_requests_for_is_deterministic_with_distinct_seeds():
+    ro = RolloutEngine(None, n_samples=4, gen_len=GEN, sampling=SP)
+    prompts = _prompts(3)
+    a = ro.requests_for(prompts)
+    b = ro.requests_for(prompts)
+    assert len(a) == 12
+    assert [r.rid for r in a] == list(range(12))
+    seeds = [r.sampling.seed for r in a]
+    assert len(set(seeds)) == len(seeds), "per-rollout seeds must be distinct"
+    assert all(r.sampling.seed == SP.derive(r.rid).seed for r in a)
+    # pure function of the inputs: the verify path regenerates the trace
+    assert [(r.rid, r.sampling.seed, r.arrival_t) for r in a] == \
+        [(r.rid, r.sampling.seed, r.arrival_t) for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+
+
+def test_follow_up_seed_lineage_and_ordering():
+    req = Request(rid=5, prompt=np.arange(BASE, dtype=np.int32),
+                  gen_len=GEN, arrival_t=0.0, sampling=SP.derive(5))
+    with pytest.raises(ValueError):
+        req.follow_up(rid=99)  # still in flight
+    req.tokens = [7, 8, 9]
+    req.t_done = 1.25
+    child = req.follow_up([1, 2], rid=99)
+    assert child.rid == 99 and child.turn == 1
+    assert child.arrival_t == 1.25  # ordering: arrives at completion
+    assert np.array_equal(
+        child.prompt, np.concatenate([req.prompt, [7, 8, 9], [1, 2]]))
+    # lineage derives through the turn, not the child rid: a pure
+    # function of the opening request's params
+    assert child.sampling.seed == SP.derive(5).derive_turn(1).seed
+    # disjoint from every turn-0 rid derivation in a realistic range
+    turn0 = {SP.derive(rid).seed for rid in range(10_000)}
+    assert child.sampling.seed not in turn0
+    grand = child
+    grand.tokens, grand.t_done = [4], 2.5
+    gc = grand.follow_up(rid=123, gap_s=0.5)
+    assert gc.turn == 2 and gc.arrival_t == 3.0
+    assert gc.sampling.seed == SP.derive(5).derive_turn(1).derive_turn(2).seed
+
+
+# ---------------------------------------------------------------------------
+# reproducibility: the acceptance bar
+# ---------------------------------------------------------------------------
+
+
+def test_rollouts_bit_identical_across_replicas_and_slots():
+    """Seeded rollouts are a pure function of (params, prompt, seed):
+    fleet size and slot count must not show in a single token — including
+    multi-turn, where follow_up arrival times depend on fleet
+    scheduling."""
+    prompts = _prompts(2)
+    sigs = []
+    for replicas, slots in ((2, 4), (1, 2), (1, 3)):
+        eng = _engine(replicas=replicas, slots=slots, turns=2)
+        ro = _rollout_engine(eng)
+        sigs.append(rollout_signature(
+            ro.generate(prompts, dt=0.05, turns=2)))
+    assert sigs[0] == sigs[1] == sigs[2]
+    assert len(sigs[0]) == 2 * 3 * 2  # prompts x samples x turns
+
+
+def test_generate_counts_and_coordinates():
+    prompts = _prompts(2)
+    ro = _rollout_engine(_engine(turns=2))
+    ros = ro.generate(prompts, dt=0.05, turns=2)
+    assert len(ros) == 12
+    assert ro.last_tokens == sum(len(r.tokens) for r in ros) == 12 * GEN
+    coords = {(r.prompt_id, r.sample_idx, r.turn) for r in ros}
+    assert coords == {(p, k, t) for p in range(2) for k in range(3)
+                      for t in range(2)}
+    for r in ros:
+        # turn-1 contexts grew by the parent completion
+        assert len(r.prompt) == BASE + r.turn * GEN
+        assert r.seed == (SP.derive(r.prompt_id * 3 + r.sample_idx)
+                          .derive_turn(r.turn).seed if r.turn else
+                          SP.derive(r.rid).seed)
+
+
+def test_multiturn_trace_hits_prefix_cache():
+    """Follow-up turns re-enter with grown shared prefixes — the prefix
+    cache must dedup them (sibling fan-out shares the base prompt; a
+    lineage's turn t shares base + t-1 completions)."""
+    eng = _engine(slots=2, turns=3, kv_blocks=120)
+    ro = _rollout_engine(eng, n_samples=4)
+    ro.generate(_prompts(2), dt=0.05, turns=3)
+    snap = eng.snapshot()
+    assert snap["prefix_hit_rate"] > 0.3, snap["prefix_hit_rate"]
+
+
+# ---------------------------------------------------------------------------
+# scorers
+# ---------------------------------------------------------------------------
+
+
+def _mk_rollouts(rewards_by_tokens):
+    out = []
+    for i, toks in enumerate(rewards_by_tokens):
+        out.append(Rollout(prompt_id=i // 2, sample_idx=i % 2, rid=i,
+                           turn=0, prompt=np.arange(4, dtype=np.int32),
+                           tokens=tuple(toks), seed=i))
+    return out
+
+
+def test_length_and_keyword_scorers():
+    ros = _mk_rollouts([[1, 2, 3], [1, 2, 3, 4, 5, 6], [9, 9], [1, 9]])
+    ls = LengthScorer(target=3)
+    assert ls.score(ros) == [0.0, -1.0, -1 / 3, -1 / 3]
+    ks = KeywordScorer(keywords=(9,))
+    assert ks.score(ros) == [0.0, 0.0, 1.0, 0.5]
+
+
+def test_logprob_scorer_is_deterministic_and_finite():
+    ros = _mk_rollouts([[1, 2, 3], [4, 5], [6, 7, 8, 9]])
+    sc = LogprobScorer(CFG, PARAMS)
+    a, b = sc.score(ros), sc.score(ros)
+    assert a == b
+    assert all(math.isfinite(x) and x < 0.0 for x in a)
+
+
+# ---------------------------------------------------------------------------
+# preference pairs and the DPO update
+# ---------------------------------------------------------------------------
+
+
+def test_build_pairs_skips_ties_and_orders_by_reward():
+    ros = _mk_rollouts([[1], [2], [3], [4]])
+    ros[0].reward, ros[1].reward = 1.0, -1.0  # prompt 0: clear pair
+    ros[2].reward = ros[3].reward = 0.5       # prompt 1: tie, no signal
+    pairs = build_pairs(ros)
+    assert len(pairs) == 1
+    chosen, rejected = pairs[0]
+    assert chosen.rid == 0 and rejected.rid == 1
+
+
+def test_pack_sequences_masks_completion_positions():
+    ros = _mk_rollouts([[5, 6], [7]])
+    toks, mask = pack_sequences(ros)
+    assert toks.shape == (2, 6) and mask.shape == (2, 5)
+    # prompt is arange(4): completion labels sit at positions 3..3+len-1
+    assert mask[0].tolist() == [0, 0, 0, 1, 1]
+    assert mask[1].tolist() == [0, 0, 0, 1, 0]
+    assert toks[0].tolist() == [0, 1, 2, 3, 5, 6]
+
+
+def test_pack_pair_batch_pads_to_fixed_shape():
+    ros = _mk_rollouts([[1], [2], [3, 4], [5, 6]])
+    ros[0].reward, ros[1].reward = 1.0, 0.0
+    ros[2].reward, ros[3].reward = 0.0, 1.0
+    batch = pack_pair_batch(build_pairs(ros), pad_pairs=4, pad_len=9)
+    assert batch["chosen"].shape == (4, 9)
+    assert batch["chosen_mask"].shape == (4, 8)
+    assert batch["pair_mask"].tolist() == [1.0, 1.0, 0.0, 0.0]
+
+
+def test_dpo_loss_decreases_and_prefers_chosen():
+    rng = np.random.default_rng(0)
+    ros = []
+    for pid in range(3):
+        prompt = rng.integers(0, CFG.vocab_size, (BASE,), dtype=np.int32)
+        for k in range(2):
+            toks = tuple(int(t) for t in
+                         rng.integers(0, CFG.vocab_size, (GEN,)))
+            ros.append(Rollout(prompt_id=pid, sample_idx=k,
+                               rid=pid * 2 + k, turn=0, prompt=prompt,
+                               tokens=toks, seed=0, reward=float(k)))
+    trainer = PreferenceTrainer(
+        CFG, PARAMS, beta=0.5,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=32,
+                        weight_decay=0.0))
+    m = trainer.train(build_pairs(ros), steps=6)
+    assert m["pairs_per_round"] == 3.0
+    assert m["train_loss"] < m["train_loss_first"], m
+    assert m["dpo_margin"] > 0.0, "chosen must gain probability mass"
+    assert m["train_loss_first"] == pytest.approx(math.log(2.0), abs=1e-4)
+    # no pairs is a no-op round, not an error
+    assert PreferenceTrainer(CFG, PARAMS).train([])["pairs_per_round"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the loop: phase metrics flow to the autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_loop_round_publishes_phase_metrics_to_registry():
+    image = ClusterImage.build(f"{CFG.name}-ro", CFG, SERVE_PLAN, "serve")
+    cluster = VirtualCluster(
+        n_compute=1, image=image,
+        policy=QueueDepthPolicy(target_per_node=2, max_nodes=3))
+    eng = make_serving_engine(
+        CFG, PARAMS, replicas=1, routing="prefix", num_slots=4,
+        prompt_len=BASE, max_gen=GEN, kv="paged", block_size=4,
+        prefix_cache=True, policy=make_scheduler_policy("fifo"),
+        clock=cluster.clock)
+    ro = RolloutEngine(eng, n_samples=3, gen_len=GEN, sampling=SP)
+    trainer = PreferenceTrainer(
+        CFG, PARAMS, opt=AdamWConfig(lr=1e-3, warmup_steps=0,
+                                     total_steps=8, weight_decay=0.0))
+    loop = RolloutLoop(
+        cluster, ro,
+        KeywordScorer(keywords=tuple(range(CFG.vocab_size // 4))),
+        trainer, prompts=_prompts(2), dt=0.05, train_steps=2)
+    phase = loop.round()
+    assert phase["rollout_tokens"] == 6 * GEN
+    assert phase["pairs_per_round"] >= 1.0
+    # ... through the registry KV into the very metrics dict the scaling
+    # policies decide on
+    ms = cluster.scaler.read_metrics(cluster.registry)
+    for key in ("rollout_tokens", "reward_mean", "pairs_per_round",
+                "train_loss"):
+        assert ms.get(key) == pytest.approx(phase[key], abs=1e-4), \
+            (key, ms.get(key))
+    # training actually moved the serving params (round 2 is on-policy)
+    before = jax.tree_util.tree_leaves(PARAMS)[0]
+    after = jax.tree_util.tree_leaves(eng.params)[0]
+    assert not np.array_equal(np.asarray(before), np.asarray(after))
+    loop.retire()
+    ms2 = cluster.scaler.read_metrics(cluster.registry)
+    assert "rollout_tokens" not in ms2, "retired source must tombstone"
+    cluster.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellite: variable-length prompts through chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_shorter_prompts_admit_and_match_exact_length_engine():
+    """A chunk-prefill engine accepts any prompt length up to its budget;
+    the emitted tokens must match an engine whose budget equals the
+    prompt exactly (the fp path is per-token either way)."""
+    rng = np.random.default_rng(7)
+    short = rng.integers(0, CFG.vocab_size, (BASE,), dtype=np.int32)
+    big = ServingEngine(CFG, PARAMS, num_slots=2, prompt_len=BASE + GEN,
+                        max_gen=GEN, clock=ManualClock())
+    out_big = run_to_completion(
+        big, [Request(rid=0, prompt=short, gen_len=GEN)], dt=0.05)
+    exact = ServingEngine(CFG, PARAMS, num_slots=2, prompt_len=BASE,
+                          max_gen=GEN, clock=ManualClock())
+    out_exact = run_to_completion(
+        exact, [Request(rid=0, prompt=short, gen_len=GEN)], dt=0.05)
+    assert out_big == out_exact
+    # over-budget prompts still refuse admission
+    too_long = rng.integers(0, CFG.vocab_size, (2 * BASE + GEN,),
+                            dtype=np.int32)
+    with pytest.raises(ValueError):
+        big.submit([Request(rid=1, prompt=too_long, gen_len=GEN)])
+
+
+# ---------------------------------------------------------------------------
+# satellite: swap-aware admission (planned re-admission, no starvation)
+# ---------------------------------------------------------------------------
+
+_VICTIM_SP = SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+
+
+def _swap_req(rid, prompt_len=16, gen_len=6, **kw):
+    rng = np.random.default_rng(100 + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, CFG.vocab_size, (prompt_len,),
+                                       dtype=np.int32),
+                   gen_len=gen_len, **kw)
+
+
+def test_swapped_victim_is_not_starved_behind_fresh_arrivals():
+    """The regression the planned-resume admission fixes: an EDF engine
+    swaps a deadline-free victim out for an urgent arrival, then a
+    stream of fresh tight-deadline requests keeps the slot contended.
+    Opportunistic can_resume probes would let every fresh arrival jump
+    the victim (EDF prefers their deadlines) until the stream ends;
+    plan_resume takes a standing reservation, so the victim re-admits
+    ahead of the fresh tail instead of dead last."""
+    eng = ServingEngine(CFG, PARAMS, num_slots=1, prompt_len=16, max_gen=8,
+                        policy=EDFPolicy(preemptive=True, min_slack_s=1.0),
+                        swap=True, clock=ManualClock())
+    victim = _swap_req(0, gen_len=8, sampling=_VICTIM_SP)
+    urgent = _swap_req(1, gen_len=2, arrival_t=0.12, deadline_s=0.4)
+    fresh = [_swap_req(rid, gen_len=2, arrival_t=0.12 + 0.05 * i,
+                       deadline_s=2.0)
+             for i, rid in enumerate(range(2, 8))]
+    reqs = [victim, urgent] + fresh
+    out = run_to_completion(eng, reqs, dt=0.05)
+    assert len(out) == len(reqs)
+    assert eng.metrics.preemptions >= 1
+    assert eng.metrics.recomputed_tokens == 0, \
+        "victim must resume from the swap tier, not restart"
+    last_fresh_done = max(r.t_done for r in fresh)
+    assert victim.t_done < last_fresh_done, \
+        (f"victim finished at {victim.t_done} after the whole fresh "
+         f"stream ({last_fresh_done}) — starved")
+    # the victim's output survived the round trip bit-identically
+    solo = run_to_completion(
+        ServingEngine(CFG, PARAMS, num_slots=1, prompt_len=16, max_gen=8,
+                      clock=ManualClock()),
+        [_swap_req(0, gen_len=8, sampling=_VICTIM_SP)], dt=0.05)
+    assert out[0] == solo[0]
+
+
+def test_plan_resume_reserves_and_swap_in_consumes():
+    """Backend contract: plan_resume takes a standing reservation that
+    shrinks free_unreserved (fresh admissions queue behind it), peers
+    sharing the host pool cannot plan or resume a planned rid, swap_in
+    consumes the plan, and cancel_resume_plans releases it."""
+    from repro.serve.blocks import HostSwapPool
+    host = HostSwapPool(None)
+    mk = lambda: make_kv_backend("paged", CFG, ENV0, num_slots=2,
+                                 prompt_len=16, max_gen=8, swap=True,
+                                 swap_pool=host)
+    a, b = mk(), mk()
+    slot = a.admit(0, 8)
+    a.ensure(slot, 15)  # allocate the prompt's blocks
+    assert a.swap_out(slot)
+    free0 = a.free_unreserved
+    assert a.plan_resume(0)
+    assert a.free_unreserved < free0, "plan must hold a reservation"
+    assert a.plan_resume(0), "planning is idempotent"
+    # the plan is fleet-exclusive: the peer can neither plan nor resume
+    assert b.has_swapped(0) and not b.plan_resume(0)
+    assert not b.can_resume(0)
+    assert a.can_resume(0)
+    s2 = a.swap_in(0)
+    assert a.free_unreserved <= free0  # plan consumed, blocks live again
+    a.evict(s2)
+    assert a.free_unreserved == free0
+    # cancel path: plan then release the reservation without resuming
+    s3 = a.admit(1, 8)
+    a.ensure(s3, 15)
+    assert a.swap_out(s3)
+    assert a.plan_resume(1)
+    a.cancel_resume_plans()
+    assert a.free_unreserved == free0
+    assert b.plan_resume(1), "released plans are up for grabs by peers"
+    b.cancel_resume_plans()
+    a.drop_swapped(1)
+    a.release()
+    b.release()

@@ -93,6 +93,16 @@ assert sw["tokens_identical"], "swap vs restart produced different tokens"
 assert sw["swap"]["recomputed_tokens"] == 0, sw
 assert sw["restart"]["recomputed_tokens"] > 0, sw
 assert sw["swap"]["swapped_blocks"] > 0, sw
+# rollout floors (ISSUE-8): driving the fleet as a rollout generator must
+# cost ~nothing over plain serving at an equal KV budget, the multi-turn
+# re-entrant trace must out-dedup the static sysprompt baseline on fleet
+# prefix hit rate, and seeded rollouts must be bit-reproducible across
+# fleet shapes — all sim-time deterministic, machine-speed-proof
+rx = r["rollout"]
+assert rx["reproducible"], "rollouts drifted across fleet shapes"
+assert rx["throughput_ratio"] >= 0.8, rx
+assert rx["multiturn_hit_rate"] > rx["sysprompt_hit_rate"], rx
+assert rx["kv_bytes"] > 0, rx
 PY
 
 echo "== serving demo (paged KV + chunked prefill + autoscale + verify) =="
@@ -114,3 +124,6 @@ python -m repro.launch.serve --spec ngram --smoke --verify
 
 echo "== serving demo (tiered KV: int8 quant + host swap tier + verify) =="
 python -m repro.launch.serve --kv quant --swap on --smoke --verify
+
+echo "== rollout demo (generate -> score -> DPO train loop + reproducibility verify) =="
+python -m repro.launch.rollout --smoke --verify
