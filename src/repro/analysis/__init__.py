@@ -1,0 +1,23 @@
+"""replint — the repo's domain-specific static-analysis pass.
+
+The serving plane's production claims (bit-reproducible rollouts,
+fleet-wide compile-once jit, schema'd metrics) are *contracts*, and until
+now they were enforced only by runtime tests: a stray `time.time()` in a
+sim path or a bare `jax.jit` in a replica constructor ships silently and
+only surfaces when a bench floor trips. replint makes the contracts
+machine-checked at CI time, before any test runs.
+
+    python -m repro.analysis.lint src            # text report, exit != 0
+    python -m repro.analysis.lint src --format json
+
+The engine (analysis/core.py) is stdlib-only — no jax import — so the CI
+step fails contract breaks in seconds. Rules live in analysis/rules/ and
+register themselves in rules.ALL_RULES; suppressions require a written
+reason (`# replint: ignore[R001] -- why`). See docs/analysis.md.
+"""
+from repro.analysis.core import (Corpus, Finding, LintResult, Rule,
+                                 SourceFile, run_lint)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = ["ALL_RULES", "Corpus", "Finding", "LintResult", "Rule",
+           "SourceFile", "run_lint"]

@@ -1,0 +1,173 @@
+"""Shared AST helpers for replint rules — name resolution, import maps,
+set-typedness, and jit-callable tracking. Stdlib-only."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# directory scopes: the simulated data plane (determinism contracts apply)
+SIM_SCOPES = ("serve", "rollout", "core")
+# the serving data plane (compile-once / retrace contracts apply)
+DATA_PLANE_SCOPES = ("serve", "rollout")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_map(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> canonical dotted module/name for every import."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_call(node: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    """The canonical dotted name a call resolves to, de-aliasing the
+    leading segment through the module's imports (np.random.rand ->
+    numpy.random.rand; from time import time; time() -> time.time)."""
+    dn = dotted_name(node.func)
+    if dn is None:
+        return None
+    head, _, rest = dn.partition(".")
+    canon = imports.get(head)
+    if canon is not None:
+        dn = canon + ("." + rest if rest else "")
+    return dn
+
+
+def walk_functions(tree: ast.Module) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def func_params(fn: ast.AST) -> List[str]:
+    """Parameter names (self/cls dropped) of a def or lambda."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return [n for n in names if n not in ("self", "cls")]
+
+
+STATIC_ATTRS = ("shape", "dtype", "ndim", "sharding")
+
+
+def refs_names(node: ast.AST, names: Set[str]) -> bool:
+    """Does `node` reference any of `names` OUTSIDE a static-metadata
+    attribute access (x.shape / x.dtype / x.ndim are trace-static)?"""
+
+    class V(ast.NodeVisitor):
+        hit = False
+
+        def visit_Attribute(self, n: ast.Attribute) -> None:
+            if n.attr in STATIC_ATTRS:
+                return  # static metadata: don't descend into n.value
+            self.generic_visit(n)
+
+        def visit_Name(self, n: ast.Name) -> None:
+            if n.id in names:
+                self.hit = True
+
+    v = V()
+    v.visit(node)
+    return v.hit
+
+
+def is_setlike(node: ast.AST, local_sets: Set[str],
+               attr_sets: Set[str]) -> bool:
+    """Syntactically set-typed: a set literal / comprehension, a
+    set()/frozenset() call, a union/difference/intersection of set-likes,
+    or a name (self.attr) the enclosing scope assigned one of those."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("set", "frozenset"):
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return (is_setlike(node.left, local_sets, attr_sets)
+                or is_setlike(node.right, local_sets, attr_sets))
+    if isinstance(node, ast.Name):
+        return node.id in local_sets
+    if isinstance(node, ast.Attribute):
+        return dotted_name(node) in attr_sets
+    return False
+
+
+def collect_set_bindings(scope: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(local names, self.X dotted names) assigned a set-like value
+    anywhere under `scope` (a class body tracks self attrs class-wide)."""
+    local: Set[str] = set()
+    attrs: Set[str] = set()
+    for node in ast.walk(scope):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        if value is None or not is_setlike(value, local, attrs):
+            continue
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name):
+                local.add(t.id)
+            else:
+                dn = dotted_name(t)
+                if dn is not None and dn.startswith("self."):
+                    attrs.add(dn)
+    return local, attrs
+
+
+JIT_FACTORIES = ("jax.jit", "shared_jit", "repro.serve.kv.shared_jit")
+
+
+def is_jit_factory(node: ast.AST, imports: Dict[str, str]) -> bool:
+    """Is `node` a call to jax.jit / the shared_jit registry?"""
+    if not isinstance(node, ast.Call):
+        return False
+    dn = resolve_call(node, imports)
+    return dn in JIT_FACTORIES
+
+
+def collect_jitted_names(tree: ast.Module,
+                         imports: Dict[str, str]) -> Set[str]:
+    """Names (locals and self attributes, dotted) bound to a jitted
+    callable: direct `x = jax.jit(...)` / `self._f = shared_jit(...)`
+    assignments, plus dict literals / comprehensions whose VALUES are jit
+    factory calls (the dual greedy/sampling step tables)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        v = node.value
+        jitted = is_jit_factory(v, imports)
+        if isinstance(v, ast.Dict):
+            jitted = jitted or any(is_jit_factory(x, imports)
+                                   for x in v.values)
+        if isinstance(v, ast.DictComp):
+            jitted = jitted or is_jit_factory(v.value, imports)
+        if not jitted:
+            continue
+        for t in node.targets:
+            dn = dotted_name(t)
+            if dn is not None:
+                out.add(dn)
+    return out

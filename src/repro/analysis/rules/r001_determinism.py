@@ -1,0 +1,112 @@
+"""R001 — determinism: no wall clock, no unseeded global RNG, no
+unordered-set iteration in the simulated data plane.
+
+The serving/rollout/core sim paths promise bit-reproducible behavior
+(seeded rollouts are a pure function of (params, prompt, seed); drains
+and preemptions replay bit-identically). Three things silently break
+that promise:
+
+  * wall-clock reads (time.time / monotonic / perf_counter, datetime.now,
+    time.sleep) — sim paths must take a core.clock.Clock, the one
+    injectable time source (launch/ and benchmarks/ measure real wall
+    time on purpose and are out of scope);
+  * module-level RNG (random.*, numpy.random.* global state) — only
+    np.random.default_rng(seed) / jax.random with an explicit key keep a
+    trace reproducible;
+  * iterating a set — Python sets hash-order their elements, and string
+    hashing is salted per process, so `for x in some_set` visits in a
+    different order run to run. Wrap in sorted(...). (Dicts are
+    insertion-ordered since 3.7 and are NOT flagged: a deterministic
+    insertion order is a deterministic iteration order.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Corpus, Finding, Rule, SourceFile
+from repro.analysis.rules import common
+
+WALL_CLOCK = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.sleep",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+# numpy.random module-level (global state) calls that stay reproducible /
+# are explicitly seeded constructors — everything else under numpy.random
+# is the legacy global generator
+NP_RANDOM_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                          "PCG64", "Philox"})
+
+WALL_ALLOWED_DIRS = ("launch", "benchmarks", "examples", "tools", "tests")
+
+
+class DeterminismRule(Rule):
+    id = "R001"
+    name = "determinism"
+    doc = ("wall-clock reads, unseeded module-level RNG, and unordered "
+           "set iteration inside serve/rollout/core sim paths")
+
+    def check(self, corpus: Corpus) -> Iterator[Finding]:
+        for sf in corpus:
+            if not sf.in_dirs(common.SIM_SCOPES):
+                continue
+            if sf.in_dirs(WALL_ALLOWED_DIRS):
+                continue
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Finding]:
+        imports = common.import_map(sf.tree)
+        yield from self._check_calls(sf, imports)
+        yield from self._check_set_iteration(sf)
+
+    def _check_calls(self, sf: SourceFile,
+                     imports) -> Iterator[Finding]:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = common.resolve_call(node, imports)
+            if dn is None:
+                continue
+            if dn in WALL_CLOCK:
+                yield self.finding(
+                    sf, node,
+                    f"wall-clock call {dn}() in a sim path — time must "
+                    "come from an injected core.clock.Clock so tests and "
+                    "replays are deterministic")
+            elif dn.startswith("random.") and dn.count(".") == 1:
+                yield self.finding(
+                    sf, node,
+                    f"module-level RNG {dn}() draws from unseeded global "
+                    "state — use np.random.default_rng(seed) or "
+                    "jax.random with an explicit key")
+            elif dn.startswith("numpy.random.") \
+                    and dn.split(".")[2] not in NP_RANDOM_OK:
+                yield self.finding(
+                    sf, node,
+                    f"numpy global-state RNG {dn}() — construct a seeded "
+                    "np.random.default_rng(seed) generator instead")
+
+    def _check_set_iteration(self, sf: SourceFile) -> Iterator[Finding]:
+        # one module-wide binding pass: local names and self.X attributes
+        # assigned set-like values anywhere (an over-approximation — a
+        # name that is a set in ANY scope is treated as a set in all —
+        # which is the conservative direction for a determinism check)
+        local, attrs = common.collect_set_bindings(sf.tree)
+        for node in ast.walk(sf.tree):
+            iters = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            for it in iters:
+                if common.is_setlike(it, local, attrs):
+                    yield self.finding(
+                        sf, node,
+                        "iteration over an unordered set in a sim path — "
+                        "set order is hash-salted per process; wrap the "
+                        "iterable in sorted(...) to pin it")

@@ -1,0 +1,44 @@
+"""R002 — bare-jit: every jit in the serving data plane goes through the
+shared_jit registry.
+
+A fleet builds N replicas per config; each ReplicaEngine, drafter,
+trainer, and scorer owns step callables. `serve/kv.py shared_jit` memoizes
+those callables on the frozen (cfg, plan, mesh, ...) key so the WHOLE
+FLEET compiles once per config — a bare `jax.jit` inside serve/ or
+rollout/ silently re-traces per instance, and the cost only shows up as a
+warmup-skewed benchmark (PR 5 found exactly that). The registry file
+itself (serve/kv.py) is the one sanctioned caller.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Corpus, Finding, Rule
+from repro.analysis.rules import common
+
+
+class BareJitRule(Rule):
+    id = "R002"
+    name = "bare-jit"
+    doc = ("jax.jit in serve/ or rollout/ outside the shared_jit "
+           "registry (fleets must compile once per config)")
+
+    def check(self, corpus: Corpus) -> Iterator[Finding]:
+        for sf in corpus:
+            if not sf.in_dirs(common.DATA_PLANE_SCOPES):
+                continue
+            if sf.is_file("serve", "kv.py"):
+                continue  # the registry itself wraps jax.jit
+            imports = common.import_map(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                dn = common.resolve_call(node, imports)
+                if dn in ("jax.jit", "jax.pmap"):
+                    yield self.finding(
+                        sf, node,
+                        f"bare {dn}(...) in the serving data plane — "
+                        "route it through serve.kv.shared_jit keyed on "
+                        "the frozen config so a fleet of instances "
+                        "compiles once per config")

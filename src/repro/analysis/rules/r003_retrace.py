@@ -1,0 +1,76 @@
+"""R003 — retrace hazards: per-request Python scalars flowing into
+jitted call arguments.
+
+The serving plane's jitted steps are traced once per *shape*; an argument
+expression built from `len(request.tokens)` or `x.shape[...]` is a
+Python int that varies per request, and anything whose shape derives from
+it (np.zeros(len(...)), padding to the current batch's max) re-traces the
+step on every new value — the continuous-batching promise ("admission
+never re-compiles") dies quietly. The repo idiom is static pinning:
+fixed-shape padded batches (rollout/preference.py pad_pairs/pad_len) and
+pool-shaped metadata arrays.
+
+Detection: a call through a name bound to jax.jit(...)/shared_jit(...)
+(including the dual greedy/sampling dict tables) whose argument
+expression contains a bare len(...) call or .shape access.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.core import Corpus, Finding, Rule
+from repro.analysis.rules import common
+
+
+def _has_dynamic_scalar(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                and n.func.id == "len":
+            return True
+        if isinstance(n, ast.Attribute) and n.attr == "shape":
+            return True
+    return False
+
+
+class RetraceRule(Rule):
+    id = "R003"
+    name = "retrace"
+    doc = ("per-request Python scalars (len(...), .shape) flowing into "
+           "jitted call args without static pinning")
+
+    def check(self, corpus: Corpus) -> Iterator[Finding]:
+        for sf in corpus:
+            if not sf.in_dirs(common.DATA_PLANE_SCOPES):
+                continue
+            imports = common.import_map(sf.tree)
+            jitted: Set[str] = common.collect_jitted_names(sf.tree, imports)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if not self._is_jitted_call(node, jitted, imports):
+                    continue
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if _has_dynamic_scalar(arg):
+                        yield self.finding(
+                            sf, arg,
+                            "argument to a jitted callable is built from "
+                            "a per-request Python scalar (len/.shape) — "
+                            "each new value re-traces the step; pin the "
+                            "shape (pad to a fixed size or pass a "
+                            "pool-shaped array)")
+
+    @staticmethod
+    def _is_jitted_call(node: ast.Call, jitted: Set[str], imports) -> bool:
+        fn = node.func
+        # f(...) / self._step(...) through a jit-bound name
+        dn = common.dotted_name(fn)
+        if dn is not None and dn in jitted:
+            return True
+        # self._decode[sample](...) through a jit-holding dict table
+        if isinstance(fn, ast.Subscript):
+            dn = common.dotted_name(fn.value)
+            if dn is not None and dn in jitted:
+                return True
+        # jax.jit(f)(...) invoked in place
+        return common.is_jit_factory(fn, imports)

@@ -1,0 +1,132 @@
+"""R006 — tracer hygiene: no Python control flow or host syncs on traced
+values inside jitted step builders.
+
+A fused-step builder (launch/steps.py make_*_step / make_*_fn, the
+trainer's _build_step) returns a function that jax traces; inside it,
+`if`/`while` on a traced argument raises TracerBoolConversionError at
+best and silently specializes the trace at worst, and `.item()` /
+`float(x)` / `np.asarray(x)` forces a device->host sync in the hot path.
+Branching on CLOSURE values (cfg, sample, prompt_len) is static by
+construction and fine — the rule only flags expressions that reference
+the traced function's own parameters, and `.shape`/`.dtype`/`.ndim`
+accesses are exempt (trace-static metadata).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Set, Tuple
+
+from repro.analysis.core import Corpus, Finding, Rule, SourceFile
+from repro.analysis.rules import common
+
+BUILDER_NAME = re.compile(r"^(make_\w*_(step|fn)|_build_step)$")
+HOST_CASTS = ("float", "int", "bool")
+HOST_ARRAY_CASTS = ("numpy.asarray", "numpy.array")
+
+
+class TracerHygieneRule(Rule):
+    id = "R006"
+    name = "tracer-hygiene"
+    doc = ("Python bool()/if on traced values and .item()/float() host "
+           "syncs inside jitted step builders")
+
+    def check(self, corpus: Corpus) -> Iterator[Finding]:
+        for sf in corpus:
+            imports = common.import_map(sf.tree)
+            for traced, params in self._traced_functions(sf, imports):
+                yield from self._check_traced(sf, traced, params, imports)
+
+    # -- what counts as "traced" ------------------------------------------
+    def _traced_functions(self, sf: SourceFile, imports
+                          ) -> Iterator[Tuple[ast.AST, Set[str]]]:
+        """(function node, traced param names) for every function jax will
+        trace: inner defs/lambdas of make_*_step builders, and lambdas
+        handed to jax.jit / returned by a shared_jit builder thunk."""
+        seen: List[ast.AST] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.FunctionDef) \
+                    and BUILDER_NAME.match(node.name):
+                for inner in ast.walk(node):
+                    if inner is node:
+                        continue
+                    if isinstance(inner, (ast.FunctionDef, ast.Lambda)):
+                        seen.append(inner)
+            elif isinstance(node, ast.Call) \
+                    and common.is_jit_factory(node, imports):
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        # shared_jit takes a zero-arg builder thunk whose
+                        # BODY is the traced callable; jax.jit takes the
+                        # traced callable directly
+                        body = arg.body
+                        if not arg.args.args and isinstance(body,
+                                                            ast.Lambda):
+                            seen.append(body)
+                        elif arg.args.args:
+                            seen.append(arg)
+        emitted = set()
+        for fn in seen:
+            if id(fn) in emitted:
+                continue
+            emitted.add(id(fn))
+            yield fn, set(common.func_params(fn))
+
+    # -- the checks --------------------------------------------------------
+    def _check_traced(self, sf: SourceFile, fn: ast.AST, params: Set[str],
+                      imports) -> Iterator[Finding]:
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                # nested defs inherit the traced param set (their own
+                # params join it — they are traced values when called
+                # from traced code)
+                if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                    params = params | set(common.func_params(node))
+                if isinstance(node, (ast.If, ast.While)):
+                    if common.refs_names(node.test, params):
+                        yield self.finding(
+                            sf, node,
+                            "Python branch on a traced value inside a "
+                            "jitted step builder — use jnp.where / "
+                            "lax.cond (bool() on a tracer raises)")
+                elif isinstance(node, ast.IfExp):
+                    if common.refs_names(node.test, params):
+                        yield self.finding(
+                            sf, node,
+                            "ternary on a traced value inside a jitted "
+                            "step builder — use jnp.where")
+                elif isinstance(node, ast.Assert):
+                    if common.refs_names(node.test, params):
+                        yield self.finding(
+                            sf, node,
+                            "assert on a traced value inside a jitted "
+                            "step builder — it forces a host sync (or "
+                            "silently passes on the tracer); use "
+                            "checkify or move it to the host side")
+                elif isinstance(node, ast.Call):
+                    yield from self._check_call(sf, node, params, imports)
+
+    def _check_call(self, sf: SourceFile, node: ast.Call,
+                    params: Set[str], imports) -> Iterator[Finding]:
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            yield self.finding(
+                sf, node,
+                ".item() inside a jitted step builder — a device->host "
+                "sync in the traced hot path")
+            return
+        dn = common.resolve_call(node, imports)
+        if dn in HOST_CASTS and node.args \
+                and common.refs_names(node.args[0], params):
+            yield self.finding(
+                sf, node,
+                f"{dn}() cast of a traced value inside a jitted step "
+                "builder — a host sync (or a TracerConversionError); "
+                "keep it on device (jnp ops) or return it")
+        elif dn in HOST_ARRAY_CASTS and node.args \
+                and common.refs_names(node.args[0], params):
+            yield self.finding(
+                sf, node,
+                f"{dn.replace('numpy', 'np')}() on a traced value inside "
+                "a jitted step builder — host materialization in the "
+                "traced hot path; use jnp.asarray")

@@ -77,7 +77,7 @@ class NodeAgent:
         try:
             for src in list(self._serving_keys):
                 self.retire_source(src)
-            for name in self._plain_keys:
+            for name in sorted(self._plain_keys):
                 self.registry.kv_put(f"metrics/{self.node_id}/{name}", "")
             self._plain_keys = set()
         except Exception:
@@ -131,7 +131,7 @@ class NodeAgent:
             return
         src = source or self.node_id
         seen = self._serving_keys.get(src, set())
-        for name in seen - set(metrics) - {"__ts"}:
+        for name in sorted(seen - set(metrics) - {"__ts"}):
             self.registry.kv_put(f"metrics/{src}/{name}", "")
         for name, val in metrics.items():
             self.registry.kv_put(f"metrics/{src}/{name}",

@@ -17,6 +17,29 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 from repro.core.clock import Clock, RealClock
 from repro.core.membership import ClusterView
 
+# How read_metrics() folds per-source serving metrics into one fleet
+# value, keyed by metric name (every name must be in serve/metrics.py's
+# METRIC_SCHEMA — replint R005 checks, tests/test_metric_schema.py holds
+# the three tables to the schema set):
+#   max  — worst-source passthrough: fleet latency is the worst replica's
+#          (a single overloaded replica is a scale-up case even when the
+#          mean looks healthy); replicas_live/replica_warmups come from
+#          the router source only, so max is identity
+#   sum  — volume counters: throughput, misses, preemptions, prefill and
+#          recompute work, swap traffic, post-training phase volume
+#   mean — levels: occupancies, hit/acceptance rates, reward and loss
+SERVING_MAX_METRICS = (
+    "latency_p50_ms", "latency_p95_ms", "ttft_p95_ms",
+    "replicas_live", "replica_warmups")
+SERVING_SUM_METRICS = (
+    "tokens_per_s", "deadline_misses", "preemptions", "prefill_tokens",
+    "recomputed_tokens", "swapped_blocks", "swap_out_bytes",
+    "swap_in_bytes", "rollout_tokens", "pairs_per_round")
+SERVING_MEAN_METRICS = (
+    "slot_occupancy", "kv_block_occupancy", "prefix_hit_rate",
+    "kv_shared_occupancy", "kv_quant_divergence", "accepted_per_step",
+    "spec_acceptance_rate", "reward_mean", "train_loss")
+
 
 @dataclass(frozen=True)
 class ScalePlan:
@@ -222,31 +245,17 @@ class AutoScaler:
             out["queue_depth"] = sum(depths)
         # serving metrics (NodeAgent.report_serving snapshots — one source
         # per node, or one per serving *replica* when a ReplicaSet head
-        # publishes on the fleet's behalf): latencies take the worst
-        # source, so LatencyPolicy votes on the fleet-wide p95 (a single
-        # overloaded replica is a scale-up case even when the mean looks
-        # healthy); throughput and counters sum; occupancies average.
-        # replicas_live / replica_warmups come from the router source only
-        # (max = passthrough) — warmups flag cold prefix caches behind a
-        # recent scale-up, context for a transiently low fleet hit rate.
-        # rollout_tokens / pairs_per_round are the post-training loop's
-        # phase counters (rollout/loop.py publishes them as their own
-        # source) — volume sums like any throughput counter, while
-        # reward_mean / train_loss below are levels and average
-        for name, agg in (("latency_p50_ms", max), ("latency_p95_ms", max),
-                          ("ttft_p95_ms", max), ("tokens_per_s", sum),
-                          ("deadline_misses", sum), ("preemptions", sum),
-                          ("prefill_tokens", sum), ("replicas_live", max),
-                          ("replica_warmups", max), ("rollout_tokens", sum),
-                          ("pairs_per_round", sum)):
-            vals = [v for k, v in out.items()
-                    if k.startswith(f"node_{name}/")]
-            if vals:
-                out[name] = agg(vals)
-        for name in ("slot_occupancy", "kv_block_occupancy",
-                     "prefix_hit_rate", "kv_shared_occupancy",
-                     "accepted_per_step", "spec_acceptance_rate",
-                     "reward_mean", "train_loss"):
+        # publishes on the fleet's behalf) fold by the module-level
+        # SERVING_* tables above — every published name must appear in
+        # exactly one of them, or the fleet value silently never exists
+        for names, agg in ((SERVING_MAX_METRICS, max),
+                           (SERVING_SUM_METRICS, sum)):
+            for name in names:
+                vals = [v for k, v in out.items()
+                        if k.startswith(f"node_{name}/")]
+                if vals:
+                    out[name] = agg(vals)
+        for name in SERVING_MEAN_METRICS:
             occ = [v for k, v in out.items()
                    if k.startswith(f"node_{name}/")]
             if occ:

@@ -148,11 +148,13 @@ class MeshTemplate:
                        poll_interval: float = 0.01) -> Rendering:
         """Blocking-query loop (threaded mode)."""
         import time
+        # replint: ignore[R001] -- host-side blocking wait for threaded mode; never on a replayed sim path
         deadline = time.monotonic() + timeout
         while True:
             r = self.poll() or self.rendering
             if r is not None and r.epoch >= epoch:
                 return r
+            # replint: ignore[R001] -- host-side blocking wait for threaded mode; never on a replayed sim path
             if time.monotonic() > deadline:
                 raise TimeoutError(f"epoch {epoch} not reached")
             self.registry.wait(self.registry.index, timeout=poll_interval)

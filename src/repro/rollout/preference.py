@@ -25,6 +25,7 @@ from repro.models import model as Mo
 from repro.models.env import Env
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.rollout.engine import Rollout
+from repro.serve.kv import shared_jit
 from repro.serve.scheduler import SERVE_PLAN
 
 
@@ -147,7 +148,12 @@ class PreferenceTrainer:
             lr=1e-3, warmup_steps=0, total_steps=100, weight_decay=0.0)
         self.opt_state = adamw_init(params, self.opt_cfg)
         self.steps_done = 0
-        self._step = jax.jit(self._build_step())
+        # fleet-shared compile: every trainer with the same (model, plan,
+        # mesh, beta, optimizer) config reuses one traced DPO step
+        self._step = shared_jit(
+            ("dpo_step", self.cfg, self.env.plan, self.env.mesh,
+             self.beta, self.opt_cfg),
+            self._build_step)
 
     def _build_step(self):
         cfg, env, beta, ocfg = self.cfg, self.env, self.beta, self.opt_cfg

@@ -17,12 +17,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
-import jax
 import numpy as np
 
 from repro.models.env import Env
 from repro.rollout.engine import Rollout
 from repro.rollout.preference import completion_logprobs, pack_sequences
+from repro.serve.kv import shared_jit
 from repro.serve.scheduler import SERVE_PLAN
 
 
@@ -75,8 +75,12 @@ class LogprobScorer:
         self.env = env if env is not None else Env(mesh=None, plan=SERVE_PLAN)
         self.params = params
         cfg_, env_ = self.cfg, self.env
-        self._lp = jax.jit(lambda p, t, m: completion_logprobs(
-            p, t, m, cfg_, env_))
+        # same key family as the DPO step: scorers across a fleet (and the
+        # trainer's loss internals) share one completion-logprob trace
+        self._lp = shared_jit(
+            ("completion_lp", cfg_, env_.plan, env_.mesh),
+            lambda: (lambda p, t, m: completion_logprobs(
+                p, t, m, cfg_, env_)))
 
     def score(self, rollouts):
         if not rollouts:

@@ -415,7 +415,8 @@ class BlockManager:
         vblocks = {int(self.table[slot, j]) for j in range(s.alloc_g)}
         vblocks |= {int(self.table_local[slot, j])
                     for j in range(s.alloc_l)}
-        freed = s.reserved + sum(1 for b in vblocks if self._ref[b] == 1)
+        freed = s.reserved + sum(  # replint: ignore[R001] -- order-insensitive reduction: sum over the set is the same for any iteration order
+            1 for b in vblocks if self._ref[b] == 1)
         hashes, shared, _, cow = self._probe(prompt)
         resurrect = 0
         for h in hashes[:shared]:
@@ -760,7 +761,7 @@ class BlockManager:
         dup = [b for b in freeing
                if b in self._free_block_set or self._ref[b] <= 0]
         if len(set(freeing)) != len(freeing):  # within-table alias
-            dup += [b for b in set(freeing) if freeing.count(b) > 1]
+            dup += [b for b in sorted(set(freeing)) if freeing.count(b) > 1]
         if dup:
             raise RuntimeError(
                 f"double free: slot {slot} block table names free block(s) "

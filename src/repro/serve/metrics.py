@@ -38,6 +38,32 @@ import numpy as np
 
 from repro.serve.request import Request
 
+# The declared key set of the whole metrics plane. Everything published
+# into the registry (ServingMetrics.snapshot, KVBackend.metrics,
+# ReplicaSet.snapshot, the rollout loop's phase counters) and everything
+# the autoscaler aggregates or a policy .get()s must be named here —
+# the plane is stringly typed end to end, so a key missing from this set
+# is a silent no-op on the reading side (the symptom is an autoscaler
+# that stops reacting). replint rule R005 enforces membership statically;
+# tests/test_metric_schema.py holds the aggregation and tombstone paths
+# to the same set.
+METRIC_SCHEMA = frozenset({
+    # serving core (ServingMetrics.snapshot)
+    "queue_depth", "tokens_per_s", "slot_occupancy", "deadline_misses",
+    "preemptions", "prefill_tokens", "recomputed_tokens",
+    "accepted_per_step", "spec_acceptance_rate",
+    "latency_p50_ms", "latency_p95_ms", "ttft_p95_ms",
+    # KV backend load signals (BlockManager/QuantBlockManager.metrics)
+    "kv_block_occupancy", "prefix_hit_rate", "kv_shared_occupancy",
+    "swapped_blocks", "swap_out_bytes", "swap_in_bytes",
+    "kv_quant_divergence",
+    # fleet rollup extras (ReplicaSet.snapshot)
+    "replicas_live", "replica_warmups",
+    # training-plane signals (NodeAgent step reports, rollout/loop.py)
+    "step_time", "rollout_tokens", "reward_mean", "pairs_per_round",
+    "train_loss",
+})
+
 
 def percentile(values, q: float) -> float:
     vs = list(values)

@@ -24,7 +24,6 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Deque, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -80,7 +79,9 @@ class SlotPool:
             lambda: (lambda pool, c, slot: Mo.cache_insert_slot(
                 pool, Mo.grow_caches(c, max_gen), slot)),
             donate_argnums=(0,))
-        self._evict = jax.jit(Mo.cache_evict_slot, donate_argnums=(0,))
+        self._evict = shared_jit(("slot_evict", cfg),
+                                 lambda: Mo.cache_evict_slot,
+                                 donate_argnums=(0,))
         # two fused-step variants: an all-greedy batch runs the pure-argmax
         # step (no mask/Gumbel work); any sampling row selects the sampler
         self._decode = {

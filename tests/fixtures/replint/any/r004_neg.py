@@ -1,0 +1,11 @@
+"""replint fixture: R004 negative — full surface, compatible signatures."""
+from typing import Protocol
+
+
+class FixRanker(Protocol):
+    def rank(self, items, now): ...
+
+
+class FullRanker(FixRanker):
+    def rank(self, items, now):
+        return sorted(items)

@@ -1,0 +1,21 @@
+"""replint fixture: R004 positives — missing method, renamed parameter."""
+from typing import Protocol
+
+
+class FixSelector(Protocol):
+    def select(self, queue, now): ...
+
+    def victim(self, slots): ...
+
+
+class HalfSelector(FixSelector):
+    def select(self, queue, now):
+        return queue[0]
+
+
+class RenamedSelector(FixSelector):
+    def select(self, q, now):
+        return q[-1]
+
+    def victim(self, slots):
+        return None

@@ -1,0 +1,14 @@
+"""replint fixture: R004 suppressed — reasoned ignore on a partial double."""
+from typing import Protocol
+
+
+class FixDrain(Protocol):
+    def drain(self, slots): ...
+
+    def flush(self, slots): ...
+
+
+# replint: ignore[R004] -- fixture: partial test double, only drain() is exercised
+class PartialDrain(FixDrain):
+    def drain(self, slots):
+        return slots

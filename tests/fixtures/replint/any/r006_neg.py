@@ -1,0 +1,11 @@
+"""replint fixture: R006 negative — device-side select, static closure branch."""
+import jax.numpy as jnp
+
+
+def make_fixture_neg_step(scale, use_bias):
+    bias = 1.0 if use_bias else 0.0  # closure value: static at trace time
+
+    def step(x):
+        return jnp.where(x > 0, x * scale + bias, x)
+
+    return step

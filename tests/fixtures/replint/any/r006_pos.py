@@ -1,0 +1,10 @@
+"""replint fixture: R006 positives — tracer branch, .item() host sync."""
+
+
+def make_fixture_step(scale):
+    def step(x):
+        if x > 0:
+            return x * scale
+        return x.item()
+
+    return step

@@ -1,0 +1,9 @@
+"""replint fixture: R006 suppressed — reasoned ignore on a host sync."""
+
+
+def make_fixture_sup_step(scale):
+    def step(x):
+        # replint: ignore[R006] -- fixture: debug-only host sync, stripped from prod step builders
+        return x.item() * scale
+
+    return step

@@ -1,0 +1,18 @@
+"""replint fixture: R001 negatives — injected clock, seeded RNG, sorted sets."""
+import numpy as np
+
+
+def stamp(clock):
+    return clock.now()
+
+
+def jitter(seed):
+    return np.random.default_rng(seed).random()
+
+
+def drain(keys):
+    acc = []
+    pending = set(keys)
+    for k in sorted(pending):
+        acc.append(k)
+    return acc

@@ -1,0 +1,21 @@
+"""replint fixture: R001 positives — wall clock, global RNG, set iteration."""
+import random
+import time
+
+import numpy as np
+
+
+def stamp():
+    return time.time()
+
+
+def jitter():
+    return random.random() + np.random.rand()
+
+
+def drain(keys):
+    acc = []
+    pending = set(keys)
+    for k in pending:
+        acc.append(k)
+    return acc

@@ -1,0 +1,7 @@
+"""replint fixture: R001 suppressed — reasoned ignore on a wall-clock read."""
+import time
+
+
+def stamp():
+    # replint: ignore[R001] -- fixture: the sanctioned wall-clock boundary for the suppression test
+    return time.time()

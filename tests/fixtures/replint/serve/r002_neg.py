@@ -1,0 +1,6 @@
+"""replint fixture: R002 negative — jit routed through the shared registry."""
+from repro.serve.kv import shared_jit
+
+
+def build(cfg, fn):
+    return shared_jit(("fixture_step", cfg), lambda: fn)

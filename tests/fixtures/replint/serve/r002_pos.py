@@ -1,0 +1,6 @@
+"""replint fixture: R002 positive — bare jax.jit in the data plane."""
+import jax
+
+
+def build(fn):
+    return jax.jit(fn)

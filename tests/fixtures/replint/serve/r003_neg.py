@@ -1,0 +1,13 @@
+"""replint fixture: R003 negative — fixed-shape padded batch."""
+import jax.numpy as jnp
+
+from repro.serve.kv import shared_jit
+
+PAD = 128
+
+_step = shared_jit(("fixture_cumsum_neg",), lambda: jnp.cumsum)
+
+
+def run(tokens):
+    del tokens  # the batch is padded to PAD; shape never varies per request
+    return _step(jnp.zeros(PAD))

@@ -1,0 +1,10 @@
+"""replint fixture: R003 positive — per-request len() into a jitted call."""
+import jax.numpy as jnp
+
+from repro.serve.kv import shared_jit
+
+_step = shared_jit(("fixture_cumsum",), lambda: jnp.cumsum)
+
+
+def run(tokens):
+    return _step(jnp.zeros(len(tokens)))

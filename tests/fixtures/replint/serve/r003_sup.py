@@ -1,0 +1,11 @@
+"""replint fixture: R003 suppressed — reasoned ignore on a dynamic shape."""
+import jax.numpy as jnp
+
+from repro.serve.kv import shared_jit
+
+_step = shared_jit(("fixture_cumsum_sup",), lambda: jnp.cumsum)
+
+
+def run(tokens):
+    # replint: ignore[R003] -- fixture: corpus is fixed-length, so the shape set is closed
+    return _step(jnp.zeros(len(tokens)))

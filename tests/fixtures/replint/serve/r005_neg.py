@@ -1,0 +1,8 @@
+"""replint fixture: R005 negative — published keys declared in the schema."""
+
+METRIC_SCHEMA = frozenset({"fixture_known_key"})
+
+
+class FixMetricsNeg:
+    def snapshot(self):
+        return {"fixture_known_key": 2.0}

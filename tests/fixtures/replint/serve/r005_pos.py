@@ -1,0 +1,6 @@
+"""replint fixture: R005 positive — published key missing from the schema."""
+
+
+class FixMetricsPos:
+    def snapshot(self):
+        return {"fixture_unregistered_key": 1.0}

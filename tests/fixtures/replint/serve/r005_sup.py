@@ -1,0 +1,7 @@
+"""replint fixture: R005 suppressed — reasoned ignore on an off-schema key."""
+
+
+class FixMetricsSup:
+    def snapshot(self):
+        # replint: ignore[R005] -- fixture: experimental key, intentionally off-schema
+        return {"fixture_offschema_key": 3.0}

@@ -1,0 +1,76 @@
+"""METRIC_SCHEMA holds the stringly-typed metrics plane together: the
+declared key set (serve/metrics.py) must exactly cover what the
+autoscaler's aggregation tables fold, what ServingMetrics publishes, and
+what retire_source tombstones — a key missing from any hop is a silent
+no-op on the reading side. replint R005 checks the names statically;
+these tests drive the actual plane end to end."""
+from repro.core import VirtualCluster
+from repro.core.autoscaler import (SERVING_MAX_METRICS, SERVING_MEAN_METRICS,
+                                   SERVING_SUM_METRICS)
+from repro.rollout.loop import PHASE_METRICS
+from repro.serve.metrics import METRIC_SCHEMA, ServingMetrics
+
+# aggregated by dedicated read_metrics code paths rather than the tables:
+# queue_depth sums plain per-node publishers too, step_time is the median
+# of the training plane's report_step_time values
+TABLE_EXEMPT = {"queue_depth", "step_time"}
+
+BACKEND_KEYS = {"kv_block_occupancy", "prefix_hit_rate",
+                "kv_shared_occupancy", "swapped_blocks", "swap_out_bytes",
+                "swap_in_bytes", "kv_quant_divergence"}
+
+
+def test_aggregation_tables_partition_the_schema():
+    tables = (set(SERVING_MAX_METRICS), set(SERVING_SUM_METRICS),
+              set(SERVING_MEAN_METRICS))
+    for i, a in enumerate(tables):
+        for b in tables[i + 1:]:
+            assert not (a & b), f"key folded twice: {a & b}"
+    folded = set().union(*tables)
+    assert folded | TABLE_EXEMPT == METRIC_SCHEMA, (
+        "schema and aggregation tables diverged: "
+        f"untabled={METRIC_SCHEMA - folded - TABLE_EXEMPT}, "
+        f"unscheduled={folded - METRIC_SCHEMA}")
+
+
+def test_declared_publisher_key_sets_are_schema_members():
+    assert set(PHASE_METRICS) <= METRIC_SCHEMA
+    assert BACKEND_KEYS <= METRIC_SCHEMA
+
+
+def test_snapshot_publishes_only_schema_keys():
+    sm = ServingMetrics(window_s=10.0)
+    sm.record_tokens(1.0, 8)
+    sm.record_spec(4, 3, 4)
+    sm.record_prefill_tokens(16)
+    sm.record_prefill_tokens(4, recompute=True)
+    snap = sm.snapshot(2.0, queue_depth=3, slot_occupancy=0.5,
+                       **{k: 0.25 for k in BACKEND_KEYS})
+    assert set(snap) <= METRIC_SCHEMA, set(snap) - METRIC_SCHEMA
+
+
+def test_rollup_and_tombstone_cover_the_same_keys():
+    """Publish every schema key through report_serving: read_metrics must
+    produce a fleet aggregate for each, and retire_source must tombstone
+    each — the same set, no stragglers on either path."""
+    published = {k: 1.0 for k in sorted(METRIC_SCHEMA - {"step_time"})}
+    c = VirtualCluster(n_compute=1)
+    try:
+        agent = c.sim.nodes[c.head_id].agent
+        agent.report_serving(dict(published), source="replica-0")
+        m = c.scaler.read_metrics(c.registry)
+        missing = set(published) - set(m)
+        assert not missing, f"published but never aggregated: {missing}"
+
+        agent.retire_source("replica-0")
+        kv = c.registry.kv_prefix("metrics/replica-0/")
+        tombstoned = {key.split("/", 2)[2]
+                      for key, entry in kv.items() if not entry.value}
+        assert set(published) <= tombstoned, \
+            set(published) - tombstoned
+        m = c.scaler.read_metrics(c.registry)
+        left = {k for k in m if k.startswith("node_") and
+                k.endswith("/replica-0")}
+        assert not left, f"keys survived retirement: {left}"
+    finally:
+        c.shutdown()

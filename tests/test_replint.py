@@ -1,0 +1,137 @@
+"""replint: each rule fires on its positive fixture, stays silent on the
+negative, honors reasoned suppressions — and the repo's own src/ tree
+lints clean (the self-run that makes the CI gate meaningful). The engine
+itself (suppression grammar, unused-suppression notes, JSON report, CLI
+exit codes) is covered alongside.
+
+The fixture corpus lives in tests/fixtures/replint/ and is scanned as
+ONE corpus (protocol and schema rules are corpus-wide); assertions
+filter by (rule, file) so a positive for one rule may legitimately trip
+another.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.core import run_lint
+from repro.analysis.rules import ALL_RULES
+
+HERE = Path(__file__).parent
+FIXTURES = HERE / "fixtures" / "replint"
+REPO = HERE.parent
+
+# rule id -> fixture subdir (serve/ exercises the path-scoped rules)
+RULE_DIRS = {"R001": "serve", "R002": "serve", "R003": "serve",
+             "R004": "any", "R005": "serve", "R006": "any"}
+
+_RESULT = run_lint([str(FIXTURES)])
+
+
+def _in_file(rule, fname, *, suppressed=None):
+    out = [f for f in _RESULT.findings
+           if f.rule == rule and f.path.endswith(fname)]
+    if suppressed is not None:
+        out = [f for f in out if f.suppressed == suppressed]
+    return out
+
+
+def test_registry_covers_all_six_rules():
+    assert sorted(cls.id for cls in ALL_RULES) == sorted(RULE_DIRS)
+
+
+def test_every_rule_fires_on_its_positive_fixture():
+    for rule, d in RULE_DIRS.items():
+        hits = _in_file(rule, f"{d}/r{rule[1:]}_pos.py",
+                        suppressed=False)
+        assert hits, f"{rule} produced no finding on its positive fixture"
+
+
+def test_every_rule_is_silent_on_its_negative_fixture():
+    for rule, d in RULE_DIRS.items():
+        hits = _in_file(rule, f"{d}/r{rule[1:]}_neg.py")
+        assert not hits, f"{rule} false-positived on its negative " \
+                         f"fixture: {[f.format() for f in hits]}"
+
+
+def test_suppressed_fixtures_are_suppressed_with_reasons():
+    for rule, d in RULE_DIRS.items():
+        hits = _in_file(rule, f"{d}/r{rule[1:]}_sup.py")
+        assert hits, f"{rule} never fired on its suppressed fixture"
+        assert all(f.suppressed and f.reason for f in hits), \
+            f"{rule} suppression lost its reason: " \
+            f"{[f.format() for f in hits]}"
+
+
+def test_r004_distinguishes_missing_method_from_renamed_param():
+    msgs = [f.message for f in _in_file("R004", "any/r004_pos.py")]
+    assert any("missing" in m and "victim" in m for m in msgs)
+    assert any("positional arg" in m and "`queue`" in m for m in msgs)
+
+
+def test_suppression_without_reason_is_an_engine_finding(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("import time\nx = time.time()  # replint: ignore[R001]\n")
+    res = run_lint([str(f)])
+    assert any(fi.rule == "R000" and "no reason" in fi.message
+               for fi in res.unsuppressed)
+
+
+def test_directive_in_a_string_is_not_a_suppression(tmp_path):
+    f = tmp_path / "doc.py"
+    f.write_text('GRAMMAR = "# replint: ignore[R001] -- why"\n')
+    res = run_lint([str(f)])
+    assert not res.findings and not res.unused_suppressions
+
+
+def test_unused_suppression_is_noted(tmp_path):
+    f = tmp_path / "stale.py"
+    f.write_text("# replint: ignore[R002] -- nothing here fires R002\n"
+                 "x = 1\n")
+    res = run_lint([str(f)])
+    assert res.unused_suppressions
+    assert "R002" in res.unused_suppressions[0][2]
+
+
+def test_syntax_error_is_an_engine_finding(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def oops(:\n")
+    res = run_lint([str(f)])
+    assert any(fi.rule == "R000" and "syntax error" in fi.message
+               for fi in res.unsuppressed)
+
+
+def test_json_report_round_trips():
+    doc = json.loads(_RESULT.format_json())
+    assert doc["files_scanned"] == _RESULT.files_scanned
+    assert doc["unsuppressed"] == len(_RESULT.unsuppressed)
+    assert all({"rule", "path", "line", "message"} <= set(f)
+               for f in doc["findings"])
+
+
+def test_self_run_src_is_clean():
+    """The contract the CI step enforces: zero unsuppressed findings over
+    the repo's own source tree."""
+    res = run_lint([str(REPO / "src")])
+    assert not res.unsuppressed, "\n".join(
+        f.format() for f in res.unsuppressed)
+    # and no stale suppressions rotting into blind spots
+    assert not res.unused_suppressions, res.unused_suppressions
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, env=env, cwd=str(REPO))
+
+
+def test_cli_exit_codes_and_json():
+    dirty = _cli(str(FIXTURES), "--rules", "R002", "--format", "json")
+    assert dirty.returncode == 1
+    assert json.loads(dirty.stdout)["unsuppressed"] > 0
+    clean = _cli("src")
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "0 finding(s)" in clean.stdout

@@ -1,0 +1,54 @@
+"""Compile-once regression: the data-plane callables replint R002 chased
+into the shared_jit registry (the DPO step, the scorer's completion
+log-probs, the slot pool's evict) actually memoize — two instances with
+the same frozen config hold the SAME jitted object, so a fleet of N
+replicas traces once, and a different config gets its own entry."""
+import jax
+
+from repro.configs import get_smoke
+from repro.models import model as Mo
+from repro.models.env import Env
+from repro.rollout import LogprobScorer, PreferenceTrainer
+from repro.serve import SERVE_PLAN, make_kv_backend
+from repro.serve.kv import shared_jit
+
+CFG = get_smoke("paper-demo")
+ENV = Env(mesh=None, plan=SERVE_PLAN)
+PARAMS = Mo.init_params(jax.random.PRNGKey(0), CFG, ENV)
+
+
+def test_shared_jit_memoizes_on_key_and_splits_on_key():
+    fn_a = shared_jit(("t_memo", 1), lambda: (lambda x: x + 1))
+    fn_b = shared_jit(("t_memo", 1), lambda: (lambda x: x * 2))
+    fn_c = shared_jit(("t_memo", 2), lambda: (lambda x: x + 1))
+    assert fn_a is fn_b  # second builder never even runs
+    assert fn_a is not fn_c
+
+
+def test_unhashable_key_falls_back_to_a_private_jit():
+    fn_a = shared_jit(("t_unhash", [1]), lambda: (lambda x: x))
+    fn_b = shared_jit(("t_unhash", [1]), lambda: (lambda x: x))
+    assert fn_a is not fn_b
+
+
+def test_logprob_scorers_share_one_completion_logprob_trace():
+    a = LogprobScorer(CFG, PARAMS)
+    b = LogprobScorer(CFG, PARAMS)
+    assert a._lp is b._lp
+
+
+def test_preference_trainers_share_one_dpo_step_per_config():
+    a = PreferenceTrainer(CFG, PARAMS)
+    b = PreferenceTrainer(CFG, PARAMS)
+    assert a._step is b._step
+    c = PreferenceTrainer(CFG, PARAMS, beta=0.25)  # objective differs
+    assert c._step is not a._step
+
+
+def test_slot_pools_share_insert_evict_and_decode_steps():
+    kw = dict(num_slots=2, prompt_len=8, max_gen=4)
+    a = make_kv_backend("slot", CFG, ENV, **kw)
+    b = make_kv_backend("slot", CFG, ENV, **kw)
+    assert a._evict is b._evict
+    assert a._insert is b._insert
+    assert all(a._decode[s] is b._decode[s] for s in (False, True))

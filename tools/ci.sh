@@ -14,6 +14,14 @@ else
   echo "ruff not installed; skipping (the GitHub workflow runs it)"
 fi
 
+echo "== replint (determinism / compile-once / protocol contracts) =="
+# stdlib-only, runs in seconds — a contract break fails here, before
+# pytest spends minutes. Fails on any unsuppressed finding; the JSON
+# report is kept as a build artifact (docs/analysis.md).
+python -m repro.analysis.lint src --format json --output replint.json \
+  || { python -m repro.analysis.lint src; exit 1; }
+python -m repro.analysis.lint src
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
